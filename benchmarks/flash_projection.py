@@ -1,0 +1,140 @@
+"""Project the roofline effect of the flash-attention Pallas kernel.
+
+The kernel (src/repro/kernels/flash_attention/, validated interpret=True)
+cannot be compiled for TPU in this CPU-only container, so its effect on a
+cell's memory term is PROJECTED from the archived compiled HLO:
+
+  memory'_bytes = memory_bytes
+                  - (identified attention score-block traffic)
+                  + (kernel surface traffic: Q, K, V, O once per layer)
+
+Score-block traffic is identified in the HLO as (a) dot ops whose
+op_name metadata carries the attention einsum signatures
+(bqkgd,bskd->bkgqs / bkgqs,bskd->bkgqd) — charged operands+result like
+the analyzer does — and (b) fusions with ndim>=4 whose trailing two dims
+are both >= 1024 (the materialized score/softmax blocks).  Kernel
+surface traffic is analytic from the architecture (bf16).
+
+    PYTHONPATH=src python -m benchmarks.flash_projection \
+        --cell phi3-medium-14b_prefill_32k_1pod
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+import zstandard
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch import hlo_analysis as H  # noqa: E402
+from repro.launch.roofline import HBM_BW, roofline_terms  # noqa: E402
+
+_ATTN_SIGS = ("bqkgd,bskd->bkgqs", "bkgqs,bskd->bkgqd")
+
+
+def _multipliers(comps):
+    entry = next(c for c in comps.values() if c["entry"])
+    mult = {entry["name"]: 1.0}
+    order = [entry["name"]]
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        c = comps.get(name)
+        if not c:
+            continue
+        for iname, rhs in c["instrs"]:
+            kind = H._op_kind(rhs)
+            m_, ch = 1.0, []
+            if kind == "while":
+                t = H._TRIP_RE.search(rhs)
+                m_ = float(t.group(1)) if t else 1.0
+                for key in ("body", "condition"):
+                    mm = re.search(key + r"=%([\w\.\-]+)", rhs)
+                    if mm:
+                        ch.append(mm.group(1))
+            elif kind == "call":
+                mm = re.search(r"to_apply=%([\w\.\-]+)", rhs)
+                if mm:
+                    ch.append(mm.group(1))
+            for c2 in ch:
+                mult[c2] = mult.get(c2, 0) + mult[name] * m_
+                if c2 not in order:
+                    order.append(c2)
+    return mult
+
+
+def score_traffic_bytes(hlo: str) -> float:
+    comps = H.parse_module(hlo)
+    mult = _multipliers(comps)
+    total = 0.0
+    for name, c in comps.items():
+        m_ = mult.get(name, 0)
+        if not m_:
+            continue
+        for iname, rhs in c["instrs"]:
+            kind = H._op_kind(rhs)
+            if kind == "dot" and any(s in rhs for s in _ATTN_SIGS):
+                b = H._shape_bytes(c["defs"][iname])
+                for opm in re.finditer(r"dot\(%([\w\.\-]+),\s*%([\w\.\-]+)\)", rhs):
+                    for nm in opm.groups():
+                        b += H._storage_bytes(nm, c)
+                total += m_ * b
+            elif kind == "fusion":
+                dims = H._shape_dims(c["defs"][iname])
+                if len(dims) >= 4 and len(dims) >= 2 \
+                        and dims[-1] >= 1024 and dims[-2] >= 1024:
+                    total += m_ * 2.0 * H._shape_bytes(c["defs"][iname])
+    return total
+
+
+def kernel_surface_bytes(arch: str, shape: str, chips: int) -> float:
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    b, s = sp.global_batch, sp.seq_len
+    per_layer = 2 * (  # read q/k/v + write o, bf16
+        b * s * cfg.n_heads * cfg.head_dim  # q
+        + 2 * b * s * cfg.n_kv * cfg.head_dim  # k, v
+        + b * s * cfg.n_heads * cfg.head_dim  # o
+    )
+    n_attn = sum(1 for k in cfg.mixer_kinds() if k in ("global", "local"))
+    factor = 1 if sp.kind != "train" else 3  # fwd + remat fwd + bwd reads
+    return per_layer * n_attn * factor / chips
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    rec = json.load(open(os.path.join(args.dir, args.cell + ".json")))
+    hlo = zstandard.ZstdDecompressor().decompress(
+        open(os.path.join(args.dir, args.cell + ".hlo.zst"), "rb").read()
+    ).decode()
+    score_b = score_traffic_bytes(hlo)
+    surf_b = kernel_surface_bytes(rec["arch"], rec["shape"], rec["chips"])
+    rl = rec["roofline"]
+    new_bytes = rl["bytes_hbm"] - score_b + surf_b
+    new = roofline_terms(rl["flops"], new_bytes, rl["wire_bytes"], rec["chips"])
+    print(f"cell: {args.cell}")
+    print(f"  identified score traffic : {score_b/1e9:10.2f} GB/chip "
+          f"({score_b/rl['bytes_hbm']*100:.0f}% of memory bytes)")
+    print(f"  kernel surface traffic   : {surf_b/1e9:10.2f} GB/chip")
+    print(f"  memory term              : {rl['memory_s']:8.2f}s -> {new.memory_s:8.2f}s")
+    print(f"  bound                    : {rl['bound_s']:8.2f}s -> {new.bound_s:8.2f}s "
+          f"(dominant: {rl['dominant']} -> {new.dominant})")
+    out = dict(rec)
+    out["roofline_flash_projection"] = new.asdict()
+    out["flash_projection"] = {"score_bytes": score_b, "surface_bytes": surf_b}
+    with open(os.path.join(args.dir, args.cell + "_flashproj.json"), "w") as fh:
+        json.dump(out, fh, indent=1)
+
+
+if __name__ == "__main__":
+    main()

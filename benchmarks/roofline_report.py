@@ -1,0 +1,99 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run artifacts (artifacts/dryrun/*.json).
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir artifacts/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCHS, SHAPES, cell_supported  # noqa: E402
+
+
+def load(dir_: str):
+    recs = {}
+    for p in glob.glob(os.path.join(dir_, "*.json")):
+        r = json.load(open(p))
+        key = (r["arch"], r["shape"], "2pod" if r["multi_pod"] else "1pod",
+               r.get("l2r", False), os.path.basename(p))
+        recs[key] = r
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:7.2f}s "
+    return f"{x*1e3:7.2f}ms"
+
+
+def roofline_table(recs, pod="1pod", tag_filter=lambda name: "_opt" not in name
+                   and "_l2r" not in name):
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, why = cell_supported(arch, shape)
+            if not ok:
+                rows.append((arch, shape, None, why))
+                continue
+            cands = [r for (a, s, p, l2r, name), r in recs.items()
+                     if a == arch and s == shape and p == pod and not l2r
+                     and tag_filter(name)]
+            rows.append((arch, shape, cands[0] if cands else None, ""))
+    return rows
+
+
+def print_roofline(recs, pod="1pod", file=sys.stdout):
+    w = file.write
+    w(f"| arch | shape | compute | memory | collective | dominant | "
+      f"bound | useful (6ND/HLO) | note |\n")
+    w("|---|---|---|---|---|---|---|---|---|\n")
+    for arch, shape, r, why in roofline_table(recs, pod):
+        if r is None:
+            w(f"| {arch} | {shape} | — | — | — | — | — | — | SKIP: {why[:60]}… |\n")
+            continue
+        rl = r["roofline"]
+        ucr = r.get("useful_compute_ratio")
+        w(f"| {arch} | {shape} | {fmt_s(rl['compute_s'])} | {fmt_s(rl['memory_s'])} "
+          f"| {fmt_s(rl['collective_s'])} | **{rl['dominant']}** | "
+          f"{fmt_s(rl['bound_s'])} | {ucr:.3f} | |\n" if ucr is not None else
+          f"| {arch} | {shape} | {fmt_s(rl['compute_s'])} | {fmt_s(rl['memory_s'])} "
+          f"| {fmt_s(rl['collective_s'])} | **{rl['dominant']}** | "
+          f"{fmt_s(rl['bound_s'])} | n/a | |\n")
+
+
+def print_dryrun(recs, file=sys.stdout):
+    w = file.write
+    w("| arch | shape | mesh | chips | compile_s | HLO GFLOP/chip | "
+      "HBM GB/chip | wire GB/chip | mem analysis temp GB |\n")
+    w("|---|---|---|---|---|---|---|---|---|\n")
+    for (a, s, p, l2r, name), r in sorted(recs.items()):
+        if l2r or "_opt" in name:
+            continue
+        rl = r["roofline"]
+        tmp = r["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9
+        w(f"| {a} | {s} | {p} | {r['chips']} | {r['compile_s']} | "
+          f"{rl['flops']/1e9:.1f} | {rl['bytes_hbm']/1e9:.2f} | "
+          f"{rl['wire_bytes']/1e9:.3f} | {tmp:.2f} |\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--pod", default="1pod")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(f"# Roofline ({args.pod}, {len(recs)} artifacts)\n")
+    print_roofline(recs, args.pod)
+    print("\n# Dry-run detail\n")
+    print_dryrun(recs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * table1_*    — synthesis model vs paper Table I (area µm² / power mW /
+                  critical path ns);
+  * table2_*    — Table II columns (peak GOPS, TOPS/W, GOPS/mm²) + the
+                  headline multiples vs [4] Cheng and [5] Eyeriss;
+  * vgg16_*     — per-layer + total Cycle_P walk (execution-cycles table)
+                  for L2R vs the Loom-pattern baseline;
+  * kernel_*    — wall-time microbenches of the digit-plane GEMM paths on
+                  this host (CPU; interpret-mode Pallas excluded from
+                  timing claims, jnp reference path timed);
+  * ipu_*       — cycle-accurate CIPU simulator throughput;
+  * online_*    — progressive-precision early-exit statistics.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def _timeit(fn, n=5, warmup=2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def emit(name: str, us: float | str, derived):
+    print(f"{name},{us if isinstance(us, str) else f'{us:.1f}'},{derived}")
+
+
+def table1():
+    from repro.core import hw_model
+    t0 = time.perf_counter()
+    t1 = hw_model.table1()
+    us = (time.perf_counter() - t0) * 1e6
+    for design in ("baseline", "l2r_cipu"):
+        p = hw_model.PAPER_TABLE1[design]
+        m = t1[design]
+        emit(f"table1_{design}_area_um2", us,
+             f"model={m['area_um2']:.2f} paper={p['area_um2']}")
+        emit(f"table1_{design}_power_mw", us,
+             f"model={m['power_mw']:.2f} paper={p['power_mw']}")
+        emit(f"table1_{design}_latency_ns", us,
+             f"model={m['latency_ns']:.3f} paper={p['latency_ns']} "
+             f"delta={(m['latency_ns']-p['latency_ns'])/p['latency_ns']*100:+.1f}%")
+
+
+def table2():
+    from repro.core import hw_model
+    t2 = hw_model.table2()
+    p = hw_model.PAPER_TABLE2
+    for design in ("baseline", "l2r_cipu"):
+        m = t2[design]
+        emit(f"table2_{design}_peak_gops", 0.0,
+             f"model={m['gops']:.2f} paper={p[design]['gops']}")
+        emit(f"table2_{design}_tops_w", 0.0,
+             f"model={m['tops_w']:.3f} paper={p[design]['tops_w']}")
+        emit(f"table2_{design}_gops_mm2", 0.0,
+             f"model={m['gops_mm2']:.2f} paper={p[design]['gops_mm2']}")
+    emit("table2_perf_vs_cheng2024", 0.0,
+         f"model={t2['l2r_cipu']['gops']/p['cheng2024']['gops']:.2f}x paper=6.22x")
+    emit("table2_energy_vs_cheng2024", 0.0,
+         f"model={t2['l2r_cipu']['tops_w']/p['cheng2024']['tops_w']:.1f}x paper=15x")
+    emit("table2_perf_vs_eyeriss", 0.0,
+         f"model={t2['l2r_cipu']['gops']/p['eyeriss']['gops']:.2f}x paper=1.06x")
+    emit("table2_area_vs_eyeriss", 0.0,
+         f"model={t2['l2r_cipu']['gops_mm2']/p['eyeriss']['gops_mm2']:.2f}x paper=53.45x")
+
+
+def vgg16_cycles():
+    from repro.core.cycle_model import (VGG16_CONV_LAYERS, layer_cycles,
+                                        network_cycles, AcceleratorConfig)
+    cfg = AcceleratorConfig()
+    for layer in VGG16_CONV_LAYERS:
+        c_l2r = layer_cycles(layer, cfg, l2r=True)
+        c_base = layer_cycles(layer, cfg, l2r=False)
+        emit(f"vgg16_cycles_{layer.name}", 0.0,
+             f"l2r={c_l2r} baseline={c_base} speedup={c_base/c_l2r:.3f}x")
+    tot_l, tot_b = network_cycles(l2r=True), network_cycles(l2r=False)
+    emit("vgg16_cycles_total", 0.0,
+         f"l2r={tot_l} baseline={tot_b} speedup={tot_b/tot_l:.3f}x paper=3.40x")
+
+
+def kernel_bench():
+    from repro.kernels.l2r_gemm import l2r_gemm_ref, int_gemm_ref
+    rng = np.random.default_rng(0)
+    for (m, k, n) in [(256, 512, 256), (512, 1024, 512)]:
+        a = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+        b = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+        f_ref = jax.jit(lambda x, y: int_gemm_ref(x, y))
+        f_l2r = jax.jit(lambda x, y: l2r_gemm_ref(x, y))
+        f_l2r3 = jax.jit(lambda x, y: l2r_gemm_ref(x, y, levels=3))
+        us_ref = _timeit(lambda: jax.block_until_ready(f_ref(a, b)))
+        us_l2r = _timeit(lambda: jax.block_until_ready(f_l2r(a, b)))
+        us_l2r3 = _timeit(lambda: jax.block_until_ready(f_l2r3(a, b)))
+        gflop = 2 * m * k * n / 1e9
+        emit(f"kernel_int_gemm_{m}x{k}x{n}", us_ref,
+             f"gflops={gflop/(us_ref/1e6):.2f}")
+        emit(f"kernel_l2r_gemm_full_{m}x{k}x{n}", us_l2r,
+             f"planes=16pairs exact=True")
+        emit(f"kernel_l2r_gemm_lv3_{m}x{k}x{n}", us_l2r3,
+             f"planes=6pairs progressive=True")
+
+
+def ipu_bench():
+    from repro.core.ipu import simulate_cipu
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.integers(0, 256, (64, 72)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 256, (64, 72)), jnp.int32)
+    f = jax.jit(lambda x, y: simulate_cipu(x, y, 8).final)
+    us = _timeit(lambda: jax.block_until_ready(f(a, b)))
+    emit("ipu_cycle_accurate_sim_64sops", us,
+         f"cycles_per_sop=64 sops_per_s={64/(us/1e6):.0f}")
+
+
+def online_stats():
+    from repro.core.progressive import (earliest_decision_level,
+                                        progressive_matmul)
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(-128, 128, (256, 64), dtype=np.int8))
+    b = jnp.asarray(rng.integers(-128, 128, (64, 32), dtype=np.int8))
+    res = progressive_matmul(a, b)
+    lv = np.asarray(earliest_decision_level(res))
+    emit("online_early_exit_mean_level", 0.0,
+         f"mean={lv.mean():.2f} of {res.partial.shape[0]-1} "
+         f"(argmax decided after {100*(lv.mean()+1)/res.partial.shape[0]:.0f}% of stream)")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table1()
+    table2()
+    vgg16_cycles()
+    kernel_bench()
+    ipu_bench()
+    online_stats()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Progressive-precision classification: the online early-exit win.
+
+    PYTHONPATH=src python examples/progressive_precision.py
+
+The hardware's MSDF property means the most significant digits of every
+logit arrive first; a classifier can commit to its argmax as soon as the
+top-1 margin exceeds the hard bound on the unseen digit tail.  This
+example measures how many MSDF levels random classifier heads actually
+need — the average is well below the full stream, which is the
+throughput/latency advantage of the online unit (paper §I).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.progressive import earliest_decision_level, progressive_matmul
+
+rng = np.random.default_rng(0)
+
+for (rows, k, classes) in [(512, 64, 16), (512, 256, 100), (256, 1024, 1000)]:
+    a = rng.integers(-128, 128, (rows, k), dtype=np.int8)
+    b = rng.integers(-128, 128, (k, classes), dtype=np.int8)
+    res = progressive_matmul(jnp.asarray(a), jnp.asarray(b))
+    lv = np.asarray(earliest_decision_level(res))
+    full = res.partial.shape[0]
+    exact_arg = (a.astype(np.int64) @ b.astype(np.int64)).argmax(-1)
+    early = lv < full - 1
+    sound = all(
+        np.asarray(res.partial[lv[i], i]).argmax() == exact_arg[i]
+        for i in np.where(early)[0][:200]
+    )
+    hist = np.bincount(lv, minlength=full)
+    print(f"K={k:5d} classes={classes:4d}: mean exit level "
+          f"{lv.mean()+1:.2f}/{full} | {early.mean()*100:4.0f}% exit early | "
+          f"early decisions sound: {sound}")
+    print(f"   exit-level histogram: {hist.tolist()}")
+print("\n(each early exit saves the remaining plane-pair MXU passes — the "
+      "tensor analogue of reading MSDs after the online delay)")

@@ -1,0 +1,37 @@
+"""Batched serving with the L2R W8A8 weight format.
+
+    PYTHONPATH=src python examples/serve_decode.py
+
+Runs the same prompts through (a) bf16/f32 weights, (b) int8-stored
+weights (the L2R serving format — exactly the integer arithmetic the
+composite IPU streams MSDF), and (c) the digit-plane progressive mode,
+comparing outputs and timing.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.launch.serve import main as serve_main
+
+print("--- float weights ---")
+a = serve_main(["--arch", "smollm-135m", "--smoke", "--batch", "2",
+                "--prompt-len", "12", "--steps", "8"])
+print("--- int8 (L2R W8A8) weights ---")
+b = serve_main(["--arch", "smollm-135m", "--smoke", "--batch", "2",
+                "--prompt-len", "12", "--steps", "8", "--wq"])
+print("--- progressive MSDF (5/7 levels) ---")
+c = serve_main(["--arch", "smollm-135m", "--smoke", "--batch", "2",
+                "--prompt-len", "12", "--steps", "8", "--l2r-levels", "5"])
+
+agree_q = (a == b).mean()
+agree_p = (a == c).mean()
+print(f"\ntoken agreement: int8 vs float {agree_q*100:.0f}% | "
+      f"progressive vs float {agree_p*100:.0f}%")
+print("(random untrained weights -> near-uniform logits, so argmax is "
+      "maximally quantization-sensitive; on trained checkpoints W8A8 "
+      "agreement is the ~99% regime — see tests/test_vgg16.py for the "
+      "bounded-error checks on realistic activations)")

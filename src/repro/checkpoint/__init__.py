@@ -1,0 +1,2 @@
+from .manager import CheckpointManager, save_pytree, load_pytree
+from .quantized import save_quantized, load_quantized, quantized_nbytes

@@ -1,0 +1,64 @@
+"""L2R-quantized checkpoints: int8 weights + per-tensor scales on disk.
+
+The serving-time storage format of the paper's pipeline (models/common.py
+quantize_desc) doubles as a checkpoint codec: matmul weights are stored
+as int8 digit-plane-ready payloads with f32 scales, halving checkpoint
+bytes vs bf16 (4x vs f32) — useful both for serving snapshots and for
+the high-frequency fault-tolerance checkpoints of large fleets (write
+bandwidth is the limit on how often you can checkpoint).
+
+Round-trip error is the W8A8 weight quantization error (bounded by
+scale/2 per element — property-tested); training checkpoints that must
+be bit-exact keep the full-precision path in manager.py.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import Param, _is_param, _quantizable, quantize_params
+
+from .manager import load_pytree, save_pytree
+
+__all__ = ["save_quantized", "load_quantized", "quantized_nbytes"]
+
+
+def save_quantized(desc_tree, params, path: str):
+    """Quantize eligible weights (int8 + scale) and save one .npz."""
+    q = quantize_params(desc_tree, params)
+    save_pytree(q, path)
+    return q
+
+
+def load_quantized(desc_tree, params_template, path: str,
+                   dequantize: bool = False):
+    """Restore a quantized checkpoint.
+
+    dequantize=False returns the serving pytree ({"q","scale"} records,
+    consumed directly by models/common.py:dense).  dequantize=True folds
+    back to the template's float dtypes (for resuming non-serving work).
+    """
+    from repro.models.common import quantize_desc
+
+    qdesc = quantize_desc(desc_tree)
+    qtemplate = jax.eval_shape(
+        lambda: quantize_params(desc_tree, params_template))
+    q = load_pytree(qtemplate, path)
+    if not dequantize:
+        return q
+
+    def f(p, w, orig):
+        if isinstance(w, dict) and "q" in w:
+            return (w["q"].astype(jnp.float32) * w["scale"]).astype(orig.dtype)
+        return w
+
+    return jax.tree.map(f, desc_tree, q, params_template, is_leaf=_is_param)
+
+
+def quantized_nbytes(tree) -> int:
+    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))

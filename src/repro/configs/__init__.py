@@ -1,0 +1,5 @@
+from .registry import (ARCHS, SHAPES, all_cells, cell_supported, get_config,
+                       get_smoke, input_specs)
+
+__all__ = ["ARCHS", "SHAPES", "all_cells", "cell_supported", "get_config",
+           "get_smoke", "input_specs"]

@@ -1,0 +1,24 @@
+"""VGG-16 + L2R-CIPU — the paper's own evaluation configuration.
+
+Not an LM: selected via --arch vgg16-l2r in examples/benchmarks.  Bundles
+the quantization config (n=8 bits, radix-4 digit planes — the TPU mapping
+of the paper's bit-serial schedule) and the accelerator cycle/hw model
+configuration used to reproduce Tables I/II.
+"""
+
+import dataclasses
+
+from repro.core.cycle_model import AcceleratorConfig
+from repro.core.quant import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class VGG16L2RConfig:
+    n_classes: int = 1000
+    quant: QuantConfig = QuantConfig(n_bits=8, log2_radix=2)
+    accel: AcceleratorConfig = AcceleratorConfig()
+    levels: int | None = None  # None = exact; fewer = progressive precision
+
+
+CONFIG = VGG16L2RConfig()
+SMOKE = VGG16L2RConfig(n_classes=10)

@@ -1,0 +1,36 @@
+"""Core L2R (left-to-right / MSDF online arithmetic) library.
+
+The paper's contribution, reproduced at three levels:
+  * bit/register-true: ipu.py (cycle-accurate composite IPU),
+  * tensor/TPU-native: quant.py + online.py + l2r_gemm.py + progressive.py
+    (digit-plane GEMM with MSDF ordering and early output),
+  * accelerator model: cycle_model.py + hw_model.py (Tables I/II).
+"""
+
+from .quant import QuantConfig, quantize, dequantize, digit_planes, from_digit_planes
+from .online import msdf_pairs, msdf_levels, tail_bound, online_delay
+from .ipu import simulate_cipu, simulate_cipu_python, CIPUTrace
+from .l2r_gemm import l2r_matmul_int, l2r_matmul, l2r_dense
+from .progressive import progressive_matmul, earliest_decision_level, ProgressiveResult
+from .cycle_model import (
+    AcceleratorConfig,
+    ConvLayer,
+    VGG16_CONV_LAYERS,
+    layer_cycles,
+    network_cycles,
+    peak_gops,
+    effective_gops,
+    inference_seconds,
+)
+from . import hw_model
+
+__all__ = [
+    "QuantConfig", "quantize", "dequantize", "digit_planes", "from_digit_planes",
+    "msdf_pairs", "msdf_levels", "tail_bound", "online_delay",
+    "simulate_cipu", "simulate_cipu_python", "CIPUTrace",
+    "l2r_matmul_int", "l2r_matmul", "l2r_dense",
+    "progressive_matmul", "earliest_decision_level", "ProgressiveResult",
+    "AcceleratorConfig", "ConvLayer", "VGG16_CONV_LAYERS",
+    "layer_cycles", "network_cycles", "peak_gops", "effective_gops",
+    "inference_seconds", "hw_model",
+]

@@ -1,0 +1,277 @@
+"""Analytical area/power/latency model reproducing Tables I and II.
+
+Tables I/II of the paper are Synopsys DC synthesis results on NanGate
+45 nm at 400 MHz — not re-synthesizable in this environment.  We
+reproduce them with a component-level model plus a small, explicit set of
+calibrated constants:
+
+  structural (parameter-free):
+    * gate inventory of one CIPU PE: AND plane, k:2 counter tree, 6:2
+      compressor row, carry-save PPR/residual register *pairs*, gating
+      muxes (Fig. 1 of the paper);
+    * gate inventory of the baseline bit-serial PE (Loom pattern [3]):
+      AND plane, counter tree, carry-propagate accumulator, full
+      partial-product-array storage (R2L cannot retire digits early — the
+      storage L2R saves), pipeline stage latches;
+    * critical paths: L2R = AND + 3 CSA stages + mux (constant in n);
+      baseline = AND + unpipelined counter tree + 2n+log2(k)-bit CPA.
+
+  calibrated (each documented, fitted once against Table I):
+    * O      — buffer/interconnect/control area shared by both designs;
+    * S      — baseline synthesis-slack storage bits (cells the coarse
+               inventory misses: clock gating, deskew, scan);
+    * P_buf  — SRAM + clock-tree power shared by both designs;
+    * alpha_base, alpha_l2r — lumped switching-activity coefficients
+      (they absorb glitching, clock power and wire load, so they exceed 1
+      and are not comparable across the two inventories; the physically
+      meaningful outcome is per-PE power: 354 µW (L2R) vs 588 µW
+      (baseline), the carry-save activity advantage of LR datapaths [2]).
+
+With those, Table I is matched exactly (by construction) and every
+derived Table II column (peak GOPS, TOPS/W, GOPS/mm²) is a *prediction*
+checked against the paper in tests/test_cycle_model.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .cycle_model import AcceleratorConfig, peak_gops
+
+__all__ = [
+    "NanGate45",
+    "PEInventory",
+    "cipu_pe_inventory",
+    "baseline_pe_inventory",
+    "calibration",
+    "accelerator_area_um2",
+    "accelerator_power_mw",
+    "critical_path_ns",
+    "table1",
+    "table2",
+    "PAPER_TABLE1",
+    "PAPER_TABLE2",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class NanGate45:
+    """NanGate 45 nm open cell library unit costs (typical corner).
+
+    Areas in µm²; energies in fJ per (lumped) active cycle; delays in ns.
+    """
+
+    area_fa: float = 4.256
+    area_dff: float = 4.522
+    area_and2: float = 0.798
+    area_xor2: float = 1.596
+    area_mux2: float = 1.862
+    energy_fa: float = 2.2
+    energy_dff: float = 1.6
+    energy_and2: float = 0.35
+    energy_xor2: float = 0.9
+    energy_mux2: float = 0.55
+    delay_and2: float = 0.032
+    delay_mux2: float = 0.045
+    delay_fa_sum: float = 0.085  # one CSA stage
+    delay_cpa_per_bit: float = 0.095  # ripple carry per bit
+
+
+@dataclasses.dataclass(frozen=True)
+class PEInventory:
+    fa: int = 0
+    dff: float = 0
+    and2: int = 0
+    xor2: int = 0
+    mux2: int = 0
+
+    def area(self, lib: NanGate45) -> float:
+        return (
+            self.fa * lib.area_fa
+            + self.dff * lib.area_dff
+            + self.and2 * lib.area_and2
+            + self.xor2 * lib.area_xor2
+            + self.mux2 * lib.area_mux2
+        )
+
+    def energy_fj(self, lib: NanGate45) -> float:
+        """Energy per cycle at unit activity."""
+        return (
+            self.fa * lib.energy_fa
+            + self.dff * lib.energy_dff
+            + self.and2 * lib.energy_and2
+            + self.xor2 * lib.energy_xor2
+            + self.mux2 * lib.energy_mux2
+        )
+
+
+def cipu_pe_inventory(cfg: AcceleratorConfig = AcceleratorConfig()) -> PEInventory:
+    """One composite IPU (paper Fig. 1): k·k·T_n = 72 bit products/cycle."""
+    n = cfg.n_bits
+    k = cfg.macs_per_pe  # 72
+    w = 2 * n  # PPR / residual width (paper: 2x operand width)
+    return PEInventory(
+        fa=(k - 2) + 4 * w,  # counter tree (k:2 CSA) + 6:2 compressor row
+        dff=4 * w,  # PPR pair + residual pair (carry-save)
+        and2=k,  # AND plane
+        mux2=2 * w,  # residual gating + PPR zero mux
+    )
+
+
+def _baseline_structural(cfg: AcceleratorConfig) -> PEInventory:
+    n = cfg.n_bits
+    k = cfg.macs_per_pe
+    w = 2 * n + math.ceil(math.log2(k))  # CPA/accumulator width
+    return PEInventory(
+        fa=(k - 2) + w + 2 * w,  # counter tree + CPA + stage adders
+        dff=5 * w + 2 * n * n,  # acc, stage latches, output + full PP array
+        and2=k,
+        mux2=w // 2,
+    )
+
+
+# ---------------- calibration ----------------
+
+_PAPER_AREA = {"baseline": 324_379.52, "l2r_cipu": 244_394.24}
+_PAPER_POWER = {"baseline": 55.61, "l2r_cipu": 40.67}
+_BUFFER_POWER_MW = 18.0  # SRAM + clock tree, shared by both designs
+
+
+def calibration(cfg: AcceleratorConfig = AcceleratorConfig(), lib: NanGate45 = NanGate45()):
+    """Solve the calibrated constants (see module docstring).
+
+    Returns dict with overhead area O, baseline slack bits S, activity
+    coefficients, and the L2R/baseline activity ratio.
+    """
+    a_l2r = cipu_pe_inventory(cfg).area(lib)
+    o = _PAPER_AREA["l2r_cipu"] - cfg.pes * a_l2r
+    a_base_target = (_PAPER_AREA["baseline"] - o) / cfg.pes
+    a_base_struct = _baseline_structural(cfg).area(lib)
+    slack_bits = (a_base_target - a_base_struct) / lib.area_dff
+
+    e_l2r = cipu_pe_inventory(cfg).energy_fj(lib)
+    base_inv = baseline_pe_inventory(cfg, lib)
+    e_base = base_inv.energy_fj(lib)
+    mw = lambda e_fj, alpha: alpha * e_fj * cfg.freq_hz * cfg.pes / 1e12
+    alpha_base = (_PAPER_POWER["baseline"] - _BUFFER_POWER_MW) / mw(e_base, 1.0)
+    alpha_l2r = (_PAPER_POWER["l2r_cipu"] - _BUFFER_POWER_MW) / mw(e_l2r, 1.0)
+    return dict(
+        overhead_area_um2=o,
+        baseline_slack_bits=slack_bits,
+        alpha_base=alpha_base,
+        alpha_l2r=alpha_l2r,
+        activity_ratio=alpha_l2r / alpha_base,
+    )
+
+
+def baseline_pe_inventory(
+    cfg: AcceleratorConfig = AcceleratorConfig(), lib: NanGate45 = NanGate45()
+) -> PEInventory:
+    """Structural baseline PE + calibrated slack storage."""
+    s = _baseline_structural(cfg)
+    a_l2r = cipu_pe_inventory(cfg).area(lib)
+    o = _PAPER_AREA["l2r_cipu"] - cfg.pes * a_l2r
+    a_base_target = (_PAPER_AREA["baseline"] - o) / cfg.pes
+    slack_bits = max(0.0, (a_base_target - s.area(lib)) / lib.area_dff)
+    return dataclasses.replace(s, dff=s.dff + slack_bits)
+
+
+def accelerator_area_um2(
+    l2r: bool = True,
+    cfg: AcceleratorConfig = AcceleratorConfig(),
+    lib: NanGate45 = NanGate45(),
+) -> float:
+    cal = calibration(cfg, lib)
+    inv = cipu_pe_inventory(cfg) if l2r else baseline_pe_inventory(cfg, lib)
+    return inv.area(lib) * cfg.pes + cal["overhead_area_um2"]
+
+
+def accelerator_power_mw(
+    l2r: bool = True,
+    cfg: AcceleratorConfig = AcceleratorConfig(),
+    lib: NanGate45 = NanGate45(),
+) -> float:
+    cal = calibration(cfg, lib)
+    if l2r:
+        inv, alpha = cipu_pe_inventory(cfg), cal["alpha_l2r"]
+    else:
+        inv, alpha = baseline_pe_inventory(cfg, lib), cal["alpha_base"]
+    return alpha * inv.energy_fj(lib) * cfg.freq_hz * cfg.pes / 1e12 + _BUFFER_POWER_MW
+
+
+def critical_path_ns(
+    l2r: bool = True,
+    cfg: AcceleratorConfig = AcceleratorConfig(),
+    lib: NanGate45 = NanGate45(),
+) -> float:
+    """Structural (un-calibrated) critical path — the model's prediction
+    of Table I latency.
+
+    L2R: AND plane + ~3 CSA stages visible in one cycle (the counter tree
+    is pipelined across the delta_Mult online-delay cycles) + gating mux.
+    Baseline: AND + full counter tree (no digit-level pipelining in the
+    R2L pattern) + (2n + log2 k)-bit carry chain + output mux.
+    """
+    if l2r:
+        return lib.delay_and2 + 3 * lib.delay_fa_sum + lib.delay_mux2
+    k = cfg.macs_per_pe
+    tree_depth = math.ceil(math.log(k / 2, 1.5))  # k:2 CSA reduction depth
+    w = 2 * cfg.n_bits + math.ceil(math.log2(k))
+    return (
+        lib.delay_and2
+        + tree_depth * lib.delay_fa_sum
+        + w * lib.delay_cpa_per_bit
+        + lib.delay_mux2
+    )
+
+
+# ----- paper-printed values (for tests / reports) -----
+PAPER_TABLE1 = {
+    "baseline": {"latency_ns": 3.23, "area_um2": 324_379.52, "power_mw": 55.61},
+    "l2r_cipu": {"latency_ns": 0.34, "area_um2": 244_394.24, "power_mw": 40.67},
+}
+
+PAPER_TABLE2 = {
+    "cheng2024": dict(tech_nm=40, freq_mhz=500, bits=8, gops=7.87, time_ms=None,
+                      power_mw=91.84, tops_w=0.08, gops_mm2=19.19, network="LENET-5"),
+    "eyeriss": dict(tech_nm=65, freq_mhz=200, bits=16, gops=46.04, time_ms=4309,
+                    power_mw=236.0, tops_w=0.19, gops_mm2=3.75, network="VGG-16"),
+    "baseline": dict(tech_nm=45, freq_mhz=400, bits=8, gops=14.40, time_ms=2.24,
+                     power_mw=55.61, tops_w=0.25, gops_mm2=44.40, network="VGG-16"),
+    "l2r_cipu": dict(tech_nm=45, freq_mhz=400, bits=8, gops=48.97, time_ms=0.86,
+                     power_mw=40.67, tops_w=1.20, gops_mm2=200.45, network="VGG-16"),
+}
+
+
+def table1(cfg: AcceleratorConfig = AcceleratorConfig(), lib: NanGate45 = NanGate45()):
+    """Model's reproduction of Table I (area/power calibrated; latency predicted)."""
+    out = {}
+    for name, l2r in (("baseline", False), ("l2r_cipu", True)):
+        out[name] = {
+            "latency_ns": critical_path_ns(l2r, cfg, lib),
+            "area_um2": accelerator_area_um2(l2r, cfg, lib),
+            "power_mw": accelerator_power_mw(l2r, cfg, lib),
+        }
+    return out
+
+
+def table2(cfg: AcceleratorConfig = AcceleratorConfig(), lib: NanGate45 = NanGate45()):
+    """Model's reproduction of the derivable Table II rows.
+
+    GOPS comes from the cycle model (prediction), TOPS/W and GOPS/mm²
+    derive from GOPS / calibrated power & area.  External rows [4][5] are
+    carried as published constants (PAPER_TABLE2).
+    """
+    out = {}
+    for name, l2r in (("baseline", False), ("l2r_cipu", True)):
+        gops = peak_gops(cfg, l2r)
+        power = accelerator_power_mw(l2r, cfg, lib)
+        area_mm2 = accelerator_area_um2(l2r, cfg, lib) / 1e6
+        out[name] = dict(
+            gops=gops,
+            power_mw=power,
+            tops_w=gops / power,
+            gops_mm2=gops / area_mm2,
+        )
+    return out

@@ -1,0 +1,181 @@
+"""Cycle-accurate functional model of the L2R Composite Inner Product Unit.
+
+This module reproduces — bit-true at the register level — the datapath of
+Fig. 1 of the paper:
+
+  * k parallel AND-plane partial products, summed by a **counter circuit**
+    into one partial-product term PP_{i,j} = sum_k A_{k,i} * B_{k,j};
+  * a **PPR register pair** in carry-save form, left-shifted each cycle;
+  * a **residual register pair** in carry-save form, folded in (via the
+    mux on its path) only every n-th cycle, at which point the PPR is
+    reset through its zero-mux;
+  * a **6:2 compressor** built from a chain of 3:2 carry-save adders —
+    no carry propagation occurs anywhere in the per-cycle loop (the
+    defining property of the LR/online datapath, and the source of the
+    paper's 0.34 ns vs 3.23 ns critical-path advantage).
+
+Cycle c processes bit pair (i, j) with i = c // n + 1 (activation bit,
+MSB first), j = c % n + 1 (weight bit, MSB first); total n^2 cycles per
+SOP, matching delta_IP = n^2 + delta_Mult (the extra delta_Mult cycles
+are the compressor/counter pipeline latency, modeled in cycle_model.py).
+
+The simulator is exact: after n^2 cycles  res_s + res_c == sum_k A_k*B_k
+for unsigned n-bit operands (the hardware unit processes magnitudes; sign
+handling lives in the surrounding PE, see core/l2r_gemm.py for the
+signed digit-plane scheme used by the TPU mapping).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CIPUTrace", "simulate_cipu", "simulate_cipu_python", "stable_msb_count"]
+
+
+def _csa(a, b, c):
+    """3:2 carry-save adder (bitwise; value-preserving: a+b+c == s+cy)."""
+    s = a ^ b ^ c
+    cy = ((a & b) | (a & c) | (b & c)) << 1
+    return s, cy
+
+
+def _compress_6_2(x0, x1, x2, x3, x4, x5):
+    """6:2 compressor as a CSA tree; value-preserving, no carry propagate."""
+    s0, c0 = _csa(x0, x1, x2)
+    s1, c1 = _csa(x3, x4, x5)
+    s2, c2 = _csa(s0, c0, s1)
+    s3, c3 = _csa(s2, c1, c2)
+    return s3, c3
+
+
+class CIPUTrace(NamedTuple):
+    """Per-SOP simulation result.
+
+    final:       exact inner product (== sum_k A_k * B_k).
+    stable_bits: (n_cycles,) number of finalized (online-emittable) MSBs
+                 after each cycle — demonstrates the online delay.
+    """
+
+    final: jax.Array
+    stable_bits: jax.Array
+
+
+@partial(jax.jit, static_argnames=("n_bits",))
+def simulate_cipu(a: jax.Array, b: jax.Array, n_bits: int = 8) -> CIPUTrace:
+    """Simulate the CIPU for a batch of SOP windows.
+
+    Args:
+      a: (..., k) unsigned activations, values in [0, 2**n_bits).
+      b: (..., k) unsigned weights, same range.
+      n_bits: operand precision n.
+
+    Returns CIPUTrace with final == sum over k of a*b (exact) and the
+    per-cycle count of stable output MSBs.
+    """
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    n = n_bits
+    k = a.shape[-1]
+    out_bits = 2 * n + int(np.ceil(np.log2(max(k, 2))))  # SOP width
+    if out_bits > 31:
+        raise ValueError(
+            f"SOP width {out_bits} exceeds int32 simulation range "
+            f"(n_bits={n_bits}, k={k}); the hardware unit is n<=16, k<=72."
+        )
+
+    # Bit i (1-indexed, MSB first): (x >> (n - i)) & 1.
+    cycles = np.arange(n * n)
+    i_idx = cycles // n + 1
+    j_idx = cycles % n + 1
+
+    # Max possible contribution of all cycles strictly after cycle c
+    # (weight of (i,j) in the final integer SOP is 2^(2n-i-j), count <= k).
+    w = (2.0 ** (2 * n - i_idx - j_idx)) * k
+    tail_after = (np.cumsum(w[::-1])[::-1] - w).astype(np.int64)
+    tail_after = jnp.asarray(tail_after, jnp.int32)  # fits: k*(2^n-1)^2*n^2 small here
+    i_arr = jnp.asarray(i_idx, jnp.int32)
+    j_arr = jnp.asarray(j_idx, jnp.int32)
+
+    batch_shape = a.shape[:-1]
+    zeros = jnp.zeros(batch_shape, jnp.int32)
+
+    def cycle(state, inputs):
+        ppr_s, ppr_c, res_s, res_c = state
+        i, j, tail = inputs
+        # counter circuit: sum of k single-bit partial products
+        a_bits = (a >> (n - i)) & 1
+        b_bits = (b >> (n - j)) & 1
+        cnt = jnp.sum(a_bits & b_bits, axis=-1)
+
+        wrap = j == n  # last weight bit of this activation row
+        # muxes: residual only enters the compressor on wrap cycles;
+        # on wrap the PPR zero-mux resets the row accumulator.
+        res_in_s = jnp.where(wrap, res_s << 1, 0)
+        res_in_c = jnp.where(wrap, res_c << 1, 0)
+        s, c = _compress_6_2(ppr_s << 1, ppr_c << 1, cnt, res_in_s, res_in_c, zeros)
+
+        # register enables: wrap -> residual loads, PPR clears.
+        new_ppr_s = jnp.where(wrap, 0, s)
+        new_ppr_c = jnp.where(wrap, 0, c)
+        new_res_s = jnp.where(wrap, s, res_s)
+        new_res_c = jnp.where(wrap, c, res_c)
+
+        # --- online-output bookkeeping (not part of the datapath) ---
+        # value if every future counter output were zero:
+        ppr_v = new_ppr_s + new_ppr_c
+        res_v = new_res_s + new_res_c
+        done_row_shift = jnp.where(wrap, n - i, n - i + 1)
+        ppr_shift = jnp.where(wrap, 0, (n - j) + (n - i))
+        v_hat = (res_v << done_row_shift) + jnp.where(
+            wrap, 0, ppr_v << ppr_shift
+        )
+        stable = stable_msb_count(v_hat, v_hat + tail, out_bits)
+        return (new_ppr_s, new_ppr_c, new_res_s, new_res_c), stable
+
+    init = (zeros, zeros, zeros, zeros)
+    (ppr_s, ppr_c, res_s, res_c), stable_bits = jax.lax.scan(
+        cycle, init, (i_arr, j_arr, tail_after)
+    )
+    final = res_s + res_c
+    return CIPUTrace(final=final, stable_bits=jnp.moveaxis(stable_bits, 0, -1))
+
+
+def stable_msb_count(lo: jax.Array, hi: jax.Array, width: int) -> jax.Array:
+    """Number of leading bits shared by all values in [lo, hi]."""
+    diff = lo ^ hi
+    # position of highest set bit of diff (0 if equal)
+    nz = diff > 0
+    top = jnp.where(nz, jnp.floor(jnp.log2(jnp.maximum(diff, 1))), -1)
+    return (width - 1 - top).astype(jnp.int32).clip(0, width)
+
+
+def simulate_cipu_python(a, b, n_bits: int = 8) -> int:
+    """Plain-Python golden model (single SOP) for unit tests."""
+    n = n_bits
+    k = len(a)
+    ppr_s = ppr_c = res_s = res_c = 0
+    for c in range(n * n):
+        i, j = c // n + 1, c % n + 1
+        cnt = sum(((a[kk] >> (n - i)) & 1) & ((b[kk] >> (n - j)) & 1) for kk in range(k))
+        wrap = j == n
+        x3 = (res_s << 1) if wrap else 0
+        x4 = (res_c << 1) if wrap else 0
+        inputs = [ppr_s << 1, ppr_c << 1, cnt, x3, x4, 0]
+
+        def csa(x, y, z):
+            return x ^ y ^ z, ((x & y) | (x & z) | (y & z)) << 1
+
+        s0, c0 = csa(inputs[0], inputs[1], inputs[2])
+        s1, c1 = csa(inputs[3], inputs[4], inputs[5])
+        s2, c2 = csa(s0, c0, s1)
+        s3, c3 = csa(s2, c1, c2)
+        if wrap:
+            res_s, res_c, ppr_s, ppr_c = s3, c3, 0, 0
+        else:
+            ppr_s, ppr_c = s3, c3
+    return res_s + res_c

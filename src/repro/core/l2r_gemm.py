@@ -1,0 +1,110 @@
+"""L2R digit-plane GEMM — the TPU-native mapping of the composite IPU.
+
+The paper's unit computes p = sum_k A_k B_k by streaming partial-product
+terms PP_{i,j} = sum_k A_{k,i} B_{k,j} most-significant-first.  At tensor
+granularity the same decomposition over radix-2^b digits gives
+
+    A @ B = sum_{i,j} (A_i @ B_j) * 2^{b (i+j)}
+
+where A_i, B_j are small-integer digit planes: **each term is itself a
+matmul**, i.e. an MXU-shaped operation, and the k-way counter circuit of
+the paper becomes the K-contraction of the plane matmul.  Processing the
+(i, j) pairs in decreasing significance s = i + j preserves the online
+property: truncating the stream after `levels` significance levels yields
+a result with a hard error bound (core/online.py:tail_bound).
+
+This file is the pure-jnp reference/production implementation; the Pallas
+VMEM-tiled kernel lives in repro/kernels/l2r_gemm/ and is validated
+against this module.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .online import msdf_pairs
+from .quant import QuantConfig, digit_planes, quantize
+
+__all__ = ["l2r_matmul_int", "l2r_matmul", "l2r_dense"]
+
+
+@partial(jax.jit, static_argnames=("n_bits", "log2_radix", "levels"))
+def l2r_matmul_int(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+) -> jax.Array:
+    """Exact (or MSDF-truncated) integer matmul via digit planes.
+
+    Args:
+      aq: (..., M, K) signed ints (int8/int16).
+      bq: (K, N) signed ints.
+      levels: number of MSDF significance levels to process
+        (None or 2*D-1 -> exact; fewer -> progressive-precision prefix).
+
+    Returns int32 (..., M, N); with levels=None this equals
+    aq.astype(int32) @ bq.astype(int32) exactly.
+    """
+    d = n_bits // log2_radix
+    ap = digit_planes(aq, n_bits, log2_radix)  # (D, ..., M, K) int8
+    bp = digit_planes(bq, n_bits, log2_radix)  # (D, K, N) int8
+    acc = jnp.zeros((*aq.shape[:-1], bq.shape[-1]), jnp.int32)
+    for (i, j) in msdf_pairs(d, levels):
+        term = jax.lax.dot_general(
+            ap[i].astype(jnp.int8),
+            bp[j].astype(jnp.int8),
+            ((((ap[i].ndim - 1),), ((0,))), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc = acc + (term << (log2_radix * (i + j)))
+    return acc
+
+
+def l2r_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: QuantConfig = QuantConfig(),
+    levels: int | None = None,
+    w_q: tuple[jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """Float-in/float-out matmul computed through the L2R pipeline.
+
+    x is quantized per-tensor on the fly; w may be pre-quantized
+    (w_q = (wq, w_scale), e.g. per-channel at load time).  The result is
+    dequantized to x.dtype.  With levels=None this is standard W8A8
+    inference arithmetic, but computed via the MSDF plane stream.
+    """
+    # per-row (per-token) activation scales commute with the K-contraction
+    xq, x_scale = quantize(x, cfg, axis=x.ndim - 2 if cfg.per_channel else None)
+    if w_q is None:
+        wq, w_scale = quantize(w, cfg, axis=-1)  # per-out-channel: (1, N)
+    else:
+        wq, w_scale = w_q
+    out = l2r_matmul_int(xq, wq, cfg.n_bits, cfg.log2_radix, levels)
+    return (out.astype(jnp.float32) * x_scale * w_scale).astype(x.dtype)
+
+
+def l2r_dense(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: QuantConfig | None,
+    levels: int | None = None,
+) -> jax.Array:
+    """Drop-in dense: bf16 einsum when cfg is None, L2R path otherwise.
+
+    Used by the model stack (models/common.py:dense) so the paper's
+    technique is a first-class switch on every architecture.
+    """
+    if cfg is None:
+        return jax.lax.dot_general(
+            x, w.astype(x.dtype),
+            (((x.ndim - 1,), (0,)), ((), ())),
+        )
+    lead = x.shape[:-1]
+    out = l2r_matmul(x.reshape(-1, x.shape[-1]), w, cfg, levels)
+    return out.reshape(*lead, w.shape[-1])

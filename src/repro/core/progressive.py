@@ -1,0 +1,91 @@
+"""Progressive-precision (online early-output) machinery.
+
+The hardware's defining property is that most-significant output digits
+are available after the online delay, long before the computation
+finishes.  The serving-level analogue implemented here: accumulate the
+MSDF plane-pair stream level by level, tracking the hard tail bound from
+core/online.py; a consumer (e.g. greedy decoding) may stop as soon as its
+decision is invariant to any completion of the tail — exactly how a
+downstream online unit starts consuming digits before its producer
+finishes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .online import msdf_pairs, tail_bound
+from .quant import QuantConfig, digit_planes, quantize
+
+__all__ = ["ProgressiveResult", "progressive_matmul", "earliest_decision_level"]
+
+
+class ProgressiveResult(NamedTuple):
+    """Stacked per-level prefix results of the MSDF stream.
+
+    partial:    (L, ..., M, N) int32 prefix sums, level l includes the
+                top (l+1) significance levels.
+    tail_bound: (L,) int64 — hard bound on |exact - partial[l]|.
+    """
+
+    partial: jax.Array
+    tail_bound: jax.Array
+
+
+@partial(jax.jit, static_argnames=("n_bits", "log2_radix"))
+def progressive_matmul(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+) -> ProgressiveResult:
+    """Run the full MSDF stream, snapshotting after every significance level."""
+    d = n_bits // log2_radix
+    k = aq.shape[-1]
+    ap = digit_planes(aq, n_bits, log2_radix)
+    bp = digit_planes(bq, n_bits, log2_radix)
+    n_levels = 2 * d - 1
+
+    acc = jnp.zeros((*aq.shape[:-1], bq.shape[-1]), jnp.int32)
+    snaps = []
+    bounds = []
+    for lv in range(1, n_levels + 1):
+        s = 2 * d - 1 - lv  # significance of this level
+        for i in range(min(s, d - 1), -1, -1):
+            j = s - i
+            if j < 0 or j >= d:
+                continue
+            term = jax.lax.dot_general(
+                ap[i], bp[j],
+                ((((ap[i].ndim - 1),), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            acc = acc + (term << (log2_radix * s))
+        snaps.append(acc)
+        bounds.append(tail_bound(d, lv, log2_radix, k))
+    # float32 bound (exactly representable range is ample here and avoids
+    # depending on x64 mode); consumers compare against int32 margins.
+    return ProgressiveResult(
+        partial=jnp.stack(snaps),
+        tail_bound=jnp.asarray(bounds, jnp.float32),
+    )
+
+
+def earliest_decision_level(result: ProgressiveResult) -> jax.Array:
+    """Earliest MSDF level at which greedy argmax over the last axis is
+    already decided (top-1 margin exceeds twice the tail bound).
+
+    Returns (...,) int32 per row; value L-1 means "needed the full stream".
+    """
+    partial = result.partial  # (L, ..., N)
+    bound = result.tail_bound.reshape((-1,) + (1,) * (partial.ndim - 1))
+    top2 = jax.lax.top_k(partial, 2)[0]  # (L, ..., 2)
+    margin = top2[..., 0] - top2[..., 1]
+    decided = margin > 2 * bound[..., 0]  # (L, ...)
+    lv = jnp.argmax(decided, axis=0)  # first True (0 if none True!)
+    any_decided = jnp.any(decided, axis=0)
+    return jnp.where(any_decided, lv, partial.shape[0] - 1).astype(jnp.int32)

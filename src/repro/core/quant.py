@@ -1,0 +1,140 @@
+"""Quantization and digit-plane decomposition for L2R arithmetic.
+
+The paper's composite inner product unit consumes n-bit fixed-point
+operands digit-serially, most-significant-digit first.  On TPU we realize
+the same decomposition as *digit planes*: an n-bit integer tensor is split
+into D = n / log2(radix) planes of small digits such that
+
+    x = sum_i plane[i] * radix**i            (exact, two's complement)
+
+Low planes hold unsigned digits in [0, radix); the **top plane is signed**
+(arithmetic shift) so the reconstruction is exact for negative values —
+this is the tensor-level analogue of the sign handling in a Baugh-Wooley
+style serial multiplier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantConfig",
+    "quantize",
+    "dequantize",
+    "digit_planes",
+    "from_digit_planes",
+    "plane_count",
+    "max_digit",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Configuration of the L2R digit-plane arithmetic.
+
+    Attributes:
+      n_bits:      operand precision (the paper evaluates n = 8).
+      log2_radix:  bits per digit; 1 -> bit-serial (paper's datapath),
+                   2 -> radix-4 (default TPU mapping), 4 -> radix-16.
+      per_channel: quantize scales per output channel (axis -1) instead of
+                   per tensor.
+    """
+
+    n_bits: int = 8
+    log2_radix: int = 2
+    per_channel: bool = True
+
+    def __post_init__(self):
+        if self.n_bits % self.log2_radix:
+            raise ValueError(
+                f"n_bits={self.n_bits} must be divisible by "
+                f"log2_radix={self.log2_radix}"
+            )
+
+    @property
+    def planes(self) -> int:
+        return self.n_bits // self.log2_radix
+
+    @property
+    def radix(self) -> int:
+        return 1 << self.log2_radix
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.n_bits - 1)) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.n_bits - 1))
+
+
+def plane_count(n_bits: int, log2_radix: int) -> int:
+    return n_bits // log2_radix
+
+
+def max_digit(log2_radix: int) -> int:
+    return (1 << log2_radix) - 1
+
+
+def _int_dtype(n_bits: int):
+    return jnp.int8 if n_bits <= 8 else jnp.int16
+
+
+@partial(jax.jit, static_argnames=("cfg", "axis"))
+def quantize(x: jax.Array, cfg: QuantConfig = QuantConfig(), axis: int | None = None):
+    """Symmetric quantization to n-bit signed integers.
+
+    Returns (q, scale) with x ~= q * scale.  ``axis`` selects the
+    reduction axes kept for the scale; ``None`` uses cfg.per_channel
+    (scale per trailing axis) or per-tensor.
+    """
+    xf = x.astype(jnp.float32)
+    if axis is None and cfg.per_channel and x.ndim >= 2:
+        amax = jnp.max(jnp.abs(xf), axis=tuple(range(x.ndim - 1)), keepdims=True)
+    elif axis is not None:
+        reduce_axes = tuple(a for a in range(x.ndim) if a != axis % x.ndim)
+        amax = jnp.max(jnp.abs(xf), axis=reduce_axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-30) / cfg.qmax
+    q = jnp.clip(jnp.round(xf / scale), cfg.qmin, cfg.qmax)
+    return q.astype(_int_dtype(cfg.n_bits)), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@partial(jax.jit, static_argnames=("n_bits", "log2_radix"))
+def digit_planes(x: jax.Array, n_bits: int = 8, log2_radix: int = 2) -> jax.Array:
+    """Decompose signed integers into digit planes, **least significant
+    plane first** (plane index == significance i).
+
+    Output shape: (D, *x.shape), small-int dtype (int8).  For all planes
+    i < D-1 the digits are unsigned in [0, radix); the top plane is the
+    arithmetic right shift (signed) so that
+
+        sum_i out[i] << (log2_radix * i) == x        (exact)
+    """
+    d = plane_count(n_bits, log2_radix)
+    r_mask = (1 << log2_radix) - 1
+    xi = x.astype(jnp.int32)
+    planes = [
+        (xi >> (log2_radix * i)) & r_mask for i in range(d - 1)
+    ]
+    planes.append(xi >> (log2_radix * (d - 1)))  # arithmetic shift: signed top
+    return jnp.stack(planes).astype(jnp.int8)
+
+
+@partial(jax.jit, static_argnames=("log2_radix",))
+def from_digit_planes(planes: jax.Array, log2_radix: int = 2) -> jax.Array:
+    """Exact inverse of :func:`digit_planes` (returns int32)."""
+    d = planes.shape[0]
+    acc = jnp.zeros(planes.shape[1:], jnp.int32)
+    for i in range(d):
+        acc = acc + (planes[i].astype(jnp.int32) << (log2_radix * i))
+    return acc

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (all validated in interpret mode on this CPU host):
+
+  l2r_gemm        — MSDF digit-plane int8 GEMM (the composite IPU on the
+                    MXU; the paper's primary compute hot-spot);
+  flash_attention — roofline-driven beyond-paper kernel (score blocks in
+                    VMEM; §Perf hillclimb A);
+  msdf_ipu        — register-level PE-array simulation of the CIPU
+                    (design-space sweeps + hardware regression oracle).
+"""

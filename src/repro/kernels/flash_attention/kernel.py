@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: flash attention (online-softmax, VMEM-resident).
+
+Motivated directly by the baseline roofline (EXPERIMENTS.md §Roofline):
+every long-sequence cell is dominated by HBM traffic of materialized
+attention score blocks (e.g. phi3 prefill_32k: 44.8 s memory term vs
+7.7 s compute).  Keeping the (bq, bkv) score tile in VMEM with online
+max/denominator carries — the same carry-free-accumulate discipline as
+the paper's PPR/residual registers, one level up the hierarchy — removes
+that traffic entirely: HBM touches only Q, K, V, O.
+
+Grid: (batch*q_heads, n_q_blocks, n_kv_blocks), KV innermost so the
+(acc, m, l) scratch carries across KV iterations.  GQA is handled in the
+index map (kv head = q head // group); causal/window blocks outside the
+band are predicated off with pl.when (no MXU work on TPU).
+
+VMEM at (bq, bkv, dh) = (512, 512, 128): q/k/v tiles 128+128+128 KiB,
+f32 score tile 1 MiB, acc 256 KiB — ~1.7 MiB << 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, bq, bkv, n_kv, causal, window, scale, kv_len):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    kv_start = kj * bkv
+    # static-shape mask positions
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    kv_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+
+    # band test: does this (q, kv) block intersect the visible region?
+    live = kv_start < kv_len
+    if causal:
+        live &= kv_start <= q_start + bq - 1
+    if window is not None:
+        live &= kv_start + bkv > q_start - window + 1
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)  # (bkv, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = kv_pos < kv_len
+        if causal:
+            mask &= kv_pos <= q_pos
+        if window is not None:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bkv", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, Sq, H, dh)
+    k: jax.Array,  # (B, Skv, Kv, dh)
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bq: int = 512,
+    bkv: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+
+    # pad sequence dims to block multiples (masked out in-kernel)
+    pq = (-sq) % bq
+    pkv = (-skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+
+    # (B, S, H, dh) -> (B*H, S, dh) program-major layout
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq + pq, dh)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv + pkv, dh)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv + pkv, dh)
+
+    n_q = (sq + pq) // bq
+    n_kv = (skv + pkv) // bkv
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bkv=bkv, n_kv=n_kv, causal=causal, window=window,
+        scale=scale, kv_len=skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, qi, kj: (bh, qi, 0)),
+            # GQA: kv head = q head // g
+            pl.BlockSpec((1, bkv, dh),
+                         lambda bh, qi, kj, g=g, kvh=kvh:
+                         ((bh // g // kvh) * kvh + (bh // g) % kvh, kj, 0)),
+            pl.BlockSpec((1, bkv, dh),
+                         lambda bh, qi, kj, g=g, kvh=kvh:
+                         ((bh // g // kvh) * kvh + (bh // g) % kvh, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq + pq, dh), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.reshape(b, h, sq + pq, dh).transpose(0, 2, 1, 3)
+    return out[:, :sq]

@@ -1,0 +1,20 @@
+"""Jit wrapper selecting the flash kernel (TPU) or oracle (CPU tests)."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(q, k, v, causal=True, window=None, scale=None,
+                    use_pallas: bool = True, interpret: bool = True):
+    """Drop-in attention. On TPU call with interpret=False (compiled
+    Pallas); this CPU container validates the kernel in interpret mode."""
+    if not use_pallas:
+        return attention_ref(q, k, v, causal, window, scale)
+    return flash_attention_pallas(q, k, v, causal, window, scale,
+                                  interpret=interpret)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "scale"))
+def attention_ref(q, k, v, causal: bool = True, window: int | None = None,
+                  scale: float | None = None):
+    """Naive full-matrix attention.  q: (B,Sq,H,dh); k,v: (B,Skv,Kv,dh)."""
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None]
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p, vr.astype(jnp.float32)).astype(v.dtype)

@@ -1,0 +1,6 @@
+"""L2R digit-plane GEMM: Pallas TPU kernel + jit wrappers + jnp oracle."""
+from .kernel import l2r_gemm_pallas
+from .ops import l2r_gemm, l2r_matmul_f, pad_to
+from .ref import l2r_gemm_ref, int_gemm_ref
+
+__all__ = ["l2r_gemm_pallas", "l2r_gemm", "l2r_matmul_f", "pad_to", "l2r_gemm_ref", "int_gemm_ref"]

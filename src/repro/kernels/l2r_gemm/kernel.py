@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: L2R digit-plane GEMM (the composite IPU on the MXU).
+
+Hardware mapping (DESIGN.md §2):
+
+  * the paper's 8x8 PE array x (3x3 window x 8 channels)  ->  the Pallas
+    grid (M/bm, N/bn) of output tiles x a bk-deep contraction block: the
+    systolic MXU contraction plays the counter circuit's role;
+  * the digit-serial schedule  ->  a static, MSDF-ordered loop over digit
+    plane pairs (i, j); each pair is one small-int MXU pass
+    `acc += (A_i @ B_j) << b(i+j)`;
+  * PPR/residual carry-save pair -> the int32 VMEM accumulator (carry-free
+    at matmul granularity: no intermediate rounding or carry propagation);
+  * progressive precision (`levels`) -> truncating the plane-pair loop to
+    the most significant levels, the analogue of reading the unit's MSDs
+    after the online delay.
+
+VMEM budget at the default (bm, bk, bn) = (128, 256, 128), radix 4:
+  A tile 32 KiB + B tile 32 KiB + 2 x D plane copies (256 KiB)
+  + int32 acc 64 KiB  ~= 0.4 MiB  << 16 MiB/core VMEM; M/N tiles are
+  MXU-aligned (128) and the int8 K tile is a multiple of 32 lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.online import msdf_pairs
+
+__all__ = ["l2r_gemm_pallas"]
+
+
+def _plane(x: jax.Array, i: int, n_planes: int, log2_radix: int) -> jax.Array:
+    """Digit plane i of an int8 tile (int32 workspace, exact for 2's comp)."""
+    xi = x.astype(jnp.int32)
+    if i == n_planes - 1:
+        return xi >> (log2_radix * i)  # signed top digit
+    return (xi >> (log2_radix * i)) & ((1 << log2_radix) - 1)
+
+
+def _l2r_gemm_kernel(
+    a_ref, b_ref, o_ref, acc_ref,
+    *, pairs: Sequence[tuple[int, int]], log2_radix: int, n_planes: int,
+    k_steps: int,
+):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk), K innermost."""
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]  # (bm, bk) int8
+    b = b_ref[...]  # (bk, bn) int8
+
+    # MSDF-ordered composite accumulation: one MXU pass per plane pair.
+    acc = acc_ref[...]
+    for (i, j) in pairs:
+        ai = _plane(a, i, n_planes, log2_radix)
+        bj = _plane(b, j, n_planes, log2_radix)
+        term = jax.lax.dot_general(
+            ai, bj, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc = acc + (term << (log2_radix * (i + j)))
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn", "interpret"),
+)
+def l2r_gemm_pallas(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """MSDF digit-plane int GEMM. aq: (M, K) int8, bq: (K, N) int8 -> int32.
+
+    Shapes must be multiples of the block sizes (ops.py pads — zero
+    padding is exact for matmul).  `interpret=True` runs the kernel body
+    on CPU for validation (this container has no TPU).
+    """
+    m, k = aq.shape
+    k2, n = bq.shape
+    assert k == k2, (aq.shape, bq.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k2},{n}) not padded to blocks ({bm},{bk},{bn})"
+    )
+    d = n_bits // log2_radix
+    pairs = tuple(msdf_pairs(d, levels))
+    k_steps = k // bk
+
+    kernel = functools.partial(
+        _l2r_gemm_kernel,
+        pairs=pairs, log2_radix=log2_radix, n_planes=d, k_steps=k_steps,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(aq, bq)

@@ -1,0 +1,75 @@
+"""Jitted public wrappers around the L2R digit-plane GEMM kernel.
+
+Handles padding to MXU-aligned blocks, batching, quantize/dequantize and
+CPU fallback (interpret mode — this container has no TPU; on real
+hardware `interpret=False` compiles the Pallas kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig, quantize
+
+from .kernel import l2r_gemm_pallas
+from .ref import l2r_gemm_ref
+
+__all__ = ["l2r_gemm", "l2r_matmul_f", "pad_to"]
+
+
+def pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = []
+    for dim, mult in zip(x.shape, mults):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn", "use_pallas", "interpret"),
+)
+def l2r_gemm(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 128,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Integer MSDF GEMM with automatic zero padding. (M,K)x(K,N)->int32."""
+    m, k = aq.shape
+    n = bq.shape[1]
+    if not use_pallas:
+        return l2r_gemm_ref(aq, bq, n_bits, log2_radix, levels)
+    ap = pad_to(aq, (bm, bk))
+    bp = pad_to(bq, (bk, bn))
+    out = l2r_gemm_pallas(
+        ap, bp, n_bits, log2_radix, levels, bm, bk, bn, interpret=interpret
+    )
+    return out[:m, :n]
+
+
+def l2r_matmul_f(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: QuantConfig = QuantConfig(),
+    levels: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Float -> quantize -> Pallas MSDF GEMM -> dequantized float."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    xq, xs = quantize(x2, cfg, axis=0)  # per-row scales
+    wq, ws = quantize(w, cfg, axis=-1)  # per-col scales
+    out = l2r_gemm(xq, wq, cfg.n_bits, cfg.log2_radix, levels)
+    return (out.astype(jnp.float32) * xs * ws).astype(x.dtype).reshape(*lead, w.shape[-1])

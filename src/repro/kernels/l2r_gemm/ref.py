@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the L2R digit-plane GEMM kernel.
+
+This is the reference the Pallas kernel is validated against (exact
+integer equality — the kernel computes in int32 end to end, so there is
+no tolerance: outputs must match bit for bit).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.online import msdf_pairs
+from repro.core.quant import digit_planes
+
+__all__ = ["l2r_gemm_ref", "int_gemm_ref"]
+
+
+@partial(jax.jit, static_argnames=("n_bits", "log2_radix", "levels"))
+def l2r_gemm_ref(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+) -> jax.Array:
+    """MSDF digit-plane matmul, significance-ordered, int32 accumulate.
+
+    aq: (M, K) signed ints; bq: (K, N) signed ints.
+    levels=None -> exact == int_gemm_ref; otherwise the progressive
+    prefix over the first `levels` significance levels.
+    """
+    d = n_bits // log2_radix
+    ap = digit_planes(aq, n_bits, log2_radix)  # (D, M, K)
+    bp = digit_planes(bq, n_bits, log2_radix)  # (D, K, N)
+    acc = jnp.zeros((aq.shape[0], bq.shape[1]), jnp.int32)
+    for (i, j) in msdf_pairs(d, levels):
+        term = jax.lax.dot_general(
+            ap[i], bp[j],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc = acc + (term << (log2_radix * (i + j)))
+    return acc
+
+
+@jax.jit
+def int_gemm_ref(aq: jax.Array, bq: jax.Array) -> jax.Array:
+    """Plain int32 matmul (ground truth for the full-precision case)."""
+    return jax.lax.dot_general(
+        aq.astype(jnp.int32), bq.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )

@@ -1,0 +1,3 @@
+from .kernel import cipu_array_pallas
+from .ops import simulate_pe_array
+from .ref import cipu_array_ref, int_sop_ref

@@ -1,0 +1,17 @@
+"""Oracle for the PE-array kernel: the scalar CIPU golden model."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ipu import simulate_cipu
+
+__all__ = ["cipu_array_ref", "int_sop_ref"]
+
+
+def cipu_array_ref(a, b, n_bits: int = 8):
+    return simulate_cipu(a, b, n_bits).final
+
+
+@jax.jit
+def int_sop_ref(a, b):
+    return jnp.sum(a.astype(jnp.int32) * b.astype(jnp.int32), axis=-1)

@@ -1,0 +1,320 @@
+"""Trip-count-aware cost analysis of compiled HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each ``while`` body
+ONCE, so any scanned computation (our layer stacks, attention KV scans,
+xent chunks) is dramatically under-counted.  The compiled HLO carries
+``backend_config={"known_trip_count":{"n":...}}`` on every counted loop,
+so we traverse the call graph from ENTRY and weight every computation by
+the product of enclosing trip counts.
+
+Counted per instruction:
+  * FLOPs: dot (2 * prod(result dims) * prod(lhs contracting dims)) and
+    convolution (2 * prod(result dims) * prod(kernel spatial*input feat));
+  * HBM bytes: 2 x result bytes (write + one read) of every materialized
+    op — fusions count at their surface only, which models a fused
+    backend's traffic; parameter/constant/tuple plumbing is free;
+    ENTRY arguments are charged once (weight reads).
+  * Collective wire bytes: ring models per op kind (see
+    launch/roofline.py) x enclosing trip counts.
+
+This is a ~±20% traffic model, not a simulator; it is the profile the
+§Perf hillclimb iterates against (the relative deltas are what matter).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "reshape", "iota",
+    "partition-id", "replica-id",
+    # layout/elementwise ops the TPU backend fuses into consumers; the
+    # CPU backend leaves them explicit and counting them would model CPU
+    # (not v5e) traffic:
+    "transpose", "copy", "convert", "broadcast", "compare", "select",
+    "add", "subtract", "multiply", "divide", "exponential", "tanh",
+    "maximum", "minimum", "negate", "rsqrt", "sqrt", "and", "or", "xor",
+    "clamp", "floor", "sign", "log", "power", "abs", "reverse",
+    "copy-start", "copy-done",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_OP_RE = re.compile(r"(?:^|\)\s|\}\s|\]\{[\d,]*\}\s|\]\s)([a-z][a-z0-9\-]*)\(")
+
+
+def _shape_bytes(s: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1.0
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(s: str) -> list[int]:
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def _op_kind(rhs: str) -> str:
+    """Extract the op name from an instruction right-hand side."""
+    # rhs looks like: 'f32[4096,6144]{1,0} dot(%a, %b), ...'
+    #             or: '(f32[..], f32[..]) fusion(%a), kind=kLoop, ...'
+    m = _OP_RE.search(rhs)
+    return m.group(1) if m else ""
+
+
+def parse_module(text: str) -> dict[str, dict]:
+    comps: dict[str, dict] = {}
+    cur: dict | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            ls = re.sub(r"/\*.*?\*/", "", line.strip())  # strip /*index=N*/
+            # computation headers end with '{' and contain '->' (tuple
+            # params nest parens, so match only the leading name)
+            if ls.endswith("{") and "->" in ls and "=" not in ls.split("->")[0]:
+                m = _COMP_NAME_RE.match(ls)
+                if m:
+                    cur = {"name": m.group(1), "defs": {}, "rhs": {},
+                           "instrs": [], "entry": ls.startswith("ENTRY")}
+                    comps[m.group(1)] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        shape_str = rhs.split(" ", 1)[0] if not rhs.startswith("(") else rhs[: rhs.index(") ") + 1]
+        cur["defs"][name] = shape_str
+        cur["rhs"][name] = rhs
+        cur["instrs"].append((name, rhs))
+    return comps
+
+
+def _dot_flops(rhs: str, defs: dict[str, str]) -> float:
+    out_dims = _shape_dims(rhs)
+    m = re.search(r"dot\(%([\w\.\-]+),", rhs)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    if not (m and cm):
+        return 0.0
+    lhs_shape = defs.get(m.group(1))
+    if lhs_shape is None:
+        return 0.0
+    ldims = _shape_dims(lhs_shape)
+    k = 1.0
+    for idx in cm.group(1).split(","):
+        if idx != "":
+            k *= ldims[int(idx)]
+    n = 1.0
+    for d in out_dims:
+        n *= d
+    return 2.0 * n * k
+
+
+def _conv_flops(rhs: str, defs: dict[str, str]) -> float:
+    out_dims = _shape_dims(rhs)
+    m = re.search(r"convolution\(%([\w\.\-]+),\s*%([\w\.\-]+)\)", rhs)
+    if not m:
+        return 0.0
+    k_shape = defs.get(m.group(2))
+    if k_shape is None:
+        return 0.0
+    kdims = _shape_dims(k_shape)
+    n = 1.0
+    for d in out_dims:
+        n *= d
+    k = 1.0
+    for d in kdims[:-1]:  # all but output-feature dim (HWIO-ish)
+        k *= d
+    return 2.0 * n * k
+
+
+def _storage_bytes(opname: str, comp: dict) -> float:
+    """Bytes of an operand *as stored in HBM*: the XLA CPU backend
+    promotes bf16/int8 dot inputs to f32/s32 via explicit converts that a
+    TPU backend performs inside the MXU feed.  One-hop trace: if the
+    operand is convert(%x) (or a copy of one), charge %x's dtype."""
+    own = _shape_bytes(comp["defs"].get(opname, ""))
+    name = opname
+    for _ in range(4):
+        rhs = comp["rhs"].get(name, "")
+        # bare convert/copy, or single-operand convert_*_fusion (the CPU
+        # backend wraps its bf16->f32 promotion in kLoop fusions)
+        m = re.search(r"\s(convert|copy)\(%([\w\.\-]+)\)", rhs)
+        if m:
+            kind, src = m.group(1), m.group(2)
+        else:
+            mf = re.search(r"\sfusion\(%([\w\.\-]+)\)", rhs)
+            if mf and "convert" in name:
+                kind, src = "convert", mf.group(1)
+            else:
+                return own
+        if kind == "convert":
+            src_sh = comp["defs"].get(src)
+            if src_sh is not None and _shape_bytes(src_sh) > 0:
+                return min(_shape_bytes(src_sh), own)
+        name = src
+    return own
+
+
+def _collective_wire(rhs: str, kind: str) -> float:
+    size = _shape_bytes(rhs.split(kind)[0])
+    gm = _GROUPS_RE.search(rhs)
+    if gm:
+        n = len([x for x in gm.group(1).split(",") if x.strip() != ""])
+    else:
+        gi = _GROUPS_ITOTA_RE.search(rhs)
+        n = int(gi.group(2)) if gi else 2
+    n = max(n, 2)
+    if kind == "all-gather":
+        return (n - 1) / n * size
+    if kind == "reduce-scatter":
+        return (n - 1) * size
+    if kind == "all-reduce":
+        return 2 * (n - 1) / n * size
+    if kind == "all-to-all":
+        return (n - 1) / n * size
+    return size  # collective-permute
+
+
+def analyze(text: str) -> dict[str, Any]:
+    comps = parse_module(text)
+    entry = next((c for c in comps.values() if c["entry"]), None)
+    assert entry is not None, "no ENTRY computation found"
+
+    memo: dict[str, tuple] = {}
+
+    def comp_cost(name: str, stack=()) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0, {k: 0.0 for k in _COLLECTIVES},
+                    {k: 0 for k in _COLLECTIVES})
+        c = comps[name]
+        flops = 0.0
+        bytes_ = 0.0
+        coll = {k: 0.0 for k in _COLLECTIVES}
+        coll_n = {k: 0 for k in _COLLECTIVES}
+        for iname, rhs in c["instrs"]:
+            kind = _op_kind(rhs)
+            if kind == "dot":
+                flops += _dot_flops(rhs, c["defs"])
+                # dots stream operands from HBM and write the result;
+                # storage-dtype-aware (bf16/int8 stay narrow on TPU)
+                for opm in re.finditer(r"dot\(%([\w\.\-]+),\s*%([\w\.\-]+)\)", rhs):
+                    for nm in opm.groups():
+                        bytes_ += _storage_bytes(nm, c)
+                bytes_ += _shape_bytes(c["defs"][iname])
+                continue
+            if kind == "convolution":
+                flops += _conv_flops(rhs, c["defs"])
+                bytes_ += 2.0 * _shape_bytes(c["defs"][iname])
+                continue
+            # collectives (incl. async -start forms); when the input is a
+            # one-hop convert from a narrower stored dtype, scale the wire
+            # bytes down — on TPU the gather moves the stored dtype.
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if base in _COLLECTIVES:
+                wire = _collective_wire(rhs, base)
+                opm = re.search(base + r"(?:-start)?\(%([\w\.\-]+)", rhs)
+                if opm:
+                    full = _shape_bytes(c["defs"].get(opm.group(1), ""))
+                    stored = _storage_bytes(opm.group(1), c)
+                    if full > 0 and stored < full:
+                        wire *= stored / full
+                coll[base] += wire
+                coll_n[base] += 1
+            # in-place update ops: XLA aliases the operand (donated
+            # buffers), so traffic = the update region, not the result
+            # (KV-cache writes would otherwise count the whole cache)
+            if kind in ("scatter", "dynamic-update-slice"):
+                ops = re.findall(r"%([\w\.\-]+)", rhs.split("(", 1)[1])
+                upd_idx = 2 if kind == "scatter" else 1
+                if len(ops) > upd_idx:
+                    bytes_ += 2.0 * _shape_bytes(c["defs"].get(ops[upd_idx], ""))
+                continue
+            # same for update ops hidden inside kLoop fusions: charge the
+            # non-aliased operands only (update + indices), not the buffer
+            if kind == "fusion" and ("dynamic-update-slice" in iname
+                                     or "scatter" in iname
+                                     or "dynamic_update_slice" in iname):
+                ops = re.findall(r"%([\w\.\-]+)",
+                                 rhs.split("fusion(", 1)[1].split(")", 1)[0])
+                sizes = sorted(
+                    (_shape_bytes(c["defs"].get(o, "")) for o in ops),
+                    reverse=True)
+                bytes_ += 2.0 * sum(sizes[1:])  # all but the aliased buffer
+                continue
+            # bytes: write + one read of every materialized op surface
+            if kind not in _SKIP_BYTES_OPS and not kind.endswith("-done"):
+                bytes_ += 2.0 * _shape_bytes(c["defs"][iname])
+            # children: (name, multiplier, fused?) — fused computations
+            # contribute FLOPs (kOutput fusions wrap dots on CPU) but not
+            # bytes (their surface is already counted above).
+            children: list[tuple[str, float, bool]] = []
+            if kind == "while":
+                t = _TRIP_RE.search(rhs)
+                mult = float(t.group(1)) if t else 1.0
+                for key in ("body", "condition"):
+                    mm = re.search(key + r"=%([\w\.\-]+)", rhs)
+                    if mm:
+                        children.append((mm.group(1), mult, False))
+            elif kind == "call":
+                mm = re.search(r"to_apply=%([\w\.\-]+)", rhs)
+                if mm:
+                    children.append((mm.group(1), 1.0, False))
+            elif kind == "fusion":
+                mm = re.search(r"calls=%([\w\.\-]+)", rhs)
+                if mm:
+                    children.append((mm.group(1), 1.0, True))
+            elif kind == "conditional":
+                for mm in re.finditer(r"(?:branch_computations=\{|true_computation=|false_computation=)%?([\w\.\-]+)", rhs):
+                    children.append((mm.group(1), 1.0, False))
+            for ch, mult, fused in children:
+                f2, b2, c2, n2 = comp_cost(ch, stack + (name,))
+                flops += mult * f2
+                if not fused:
+                    bytes_ += mult * b2
+                for k in _COLLECTIVES:
+                    coll[k] += mult * c2[k]
+                    coll_n[k] += int(mult * n2[k])
+        memo[name] = (flops, bytes_, coll, coll_n)
+        return memo[name]
+
+    flops, bytes_, coll, coll_n = comp_cost(entry["name"])
+    # charge ENTRY arguments (weights/caches read from HBM once)
+    hdr_params = 0.0
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "collective_wire_bytes": coll,
+        "collective_counts": coll_n,
+        "total_wire_bytes": sum(coll.values()),
+    }

@@ -1,0 +1,49 @@
+"""Re-run the trip-count/storage-dtype-aware HLO analysis over archived
+compiled HLO (*.hlo.zst) and refresh the artifact JSONs — no recompile.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze [--dir artifacts/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard
+
+from repro.launch.hlo_analysis import analyze
+from repro.launch.roofline import roofline_terms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    for jpath in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        zpath = jpath.replace(".json", ".hlo.zst")
+        if not os.path.exists(zpath):
+            print(f"[skip] {os.path.basename(jpath)}: no archived HLO")
+            continue
+        hlo = zstandard.ZstdDecompressor().decompress(
+            open(zpath, "rb").read()).decode()
+        rec = json.load(open(jpath))
+        ana = analyze(hlo)
+        rl = roofline_terms(ana["flops"], ana["bytes"],
+                            ana["total_wire_bytes"], rec["chips"])
+        rec["collectives"] = {"wire_bytes": ana["collective_wire_bytes"],
+                              "counts": ana["collective_counts"],
+                              "total_wire_bytes": ana["total_wire_bytes"]}
+        rec["roofline"] = rl.asdict()
+        mfpc = rec.get("model_flops_per_chip")
+        rec["useful_compute_ratio"] = (mfpc / ana["flops"]
+                                       if mfpc and ana["flops"] else None)
+        with open(jpath, "w") as fh:
+            json.dump(rec, fh, indent=1)
+        print(f"[ok] {os.path.basename(jpath)}: dominant={rl.dominant} "
+              f"bound={rl.bound_s*1e3:.2f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Hardware constants (TPU v5e, per chip — the assignment's targets):
+  197 TFLOP/s bf16; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+Per (arch x shape x mesh) cell, three terms in seconds:
+  compute    = HLO_FLOPs / (chips * 197e12)
+  memory     = HLO_bytes / (chips * 819e9)
+  collective = sum over collective ops of ring-model bytes-on-wire
+               / (links_per_chip * 50e9)        [per-chip wire time]
+
+Collective bytes are not in cost_analysis(): we parse the compiled HLO
+and apply the standard ring models per op (sizes are per-shard, i.e.
+per-chip, since the module is SPMD-partitioned):
+  all-gather(result S, group n):      (n-1)/n * S
+  reduce-scatter(result S, group n):  (n-1) * S        (operand = n*S)
+  all-reduce(result S, group n):      2 (n-1)/n * S
+  all-to-all(result S, group n):      (n-1)/n * S
+  collective-permute(result S):       S
+On a 2D-torus axis each chip drives ~2 links per direction concurrently;
+we credit links_per_chip=2 and state it here once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_LINK_BW = 50e9  # bytes/s per link
+LINKS_PER_CHIP = 2
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[^\]]*\][^\s]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, Any]:
+    """Sum ring-model wire bytes per collective kind from HLO text."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            n = len([x for x in gm.group(1).split(",") if x.strip() != ""])
+        else:
+            gi = _GROUPS_ITOTA_RE.search(line)
+            n = int(gi.group(2)) if gi else 2
+        n = max(n, 2)
+        if kind == "all-gather":
+            wire = (n - 1) / n * size
+        elif kind == "reduce-scatter":
+            wire = (n - 1) * size
+        elif kind == "all-reduce":
+            wire = 2 * (n - 1) / n * size
+        elif kind == "all-to-all":
+            wire = (n - 1) / n * size
+        else:  # collective-permute
+            wire = size
+        out[kind] += wire
+        counts[kind] += 1
+    return {"wire_bytes": out, "counts": counts,
+            "total_wire_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_hbm: float
+    wire_bytes: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def asdict(self) -> dict:
+        return {**dataclasses.asdict(self), "dominant": self.dominant,
+                "bound_s": self.bound_s}
+
+
+def roofline_terms(flops: float, bytes_hbm: float, wire_bytes: float,
+                   chips: int) -> Roofline:
+    """flops/bytes from cost_analysis are per-device for SPMD modules;
+    wire bytes parsed from the partitioned HLO are per-chip too."""
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_hbm / HBM_BW,
+        collective_s=wire_bytes / (LINKS_PER_CHIP * ICI_LINK_BW),
+        flops=flops, bytes_hbm=bytes_hbm, wire_bytes=wire_bytes, chips=chips,
+    )
+
+
+def model_flops(cfg, desc_tree, n_tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params
+    (routed experts scaled by k/E), embedding lookup excluded, logit
+    matmul included."""
+    from repro.models.common import Param
+    import jax
+
+    total = 0.0
+    routed = 0.0
+    embed = 0.0
+    for path, p in jax.tree_util.tree_flatten_with_path(
+            desc_tree, is_leaf=lambda x: isinstance(x, Param))[0]:
+        n = math.prod(p.shape)
+        key = "/".join(str(x) for x in path)
+        if "experts" in p.axes:
+            routed += n
+        if key.endswith("'embed']") and "vocab" in p.axes:
+            embed += n
+        total += n
+    active = total - routed
+    if cfg.n_experts:
+        active += routed * cfg.experts_per_token / cfg.n_experts
+    # tied embedding matrix is used by the logits matmul -> keep it; the
+    # lookup itself is not a matmul. Untied: 'head' already counted.
+    if not getattr(cfg, "tie_embeddings", True):
+        active -= embed  # lookup-only table
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * active * n_tokens

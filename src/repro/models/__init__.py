@@ -1,0 +1,15 @@
+"""Model zoo: decoder LMs (dense/MoE/SSM/hybrid), enc-dec, VLM backbone,
+and the paper's VGG-16."""
+
+from .config import ModelConfig
+from .common import Param, materialize, abstract, partition_specs, count_params, dense
+from .transformer import lm_build, lm_forward, logits_from_hidden, init_lm_state, LMState
+from .encdec import encdec_build, encdec_forward, init_encdec_state, EncDecState
+from .cnn import vgg16_build, vgg16_apply
+
+__all__ = [
+    "ModelConfig", "Param", "materialize", "abstract", "partition_specs",
+    "count_params", "dense", "lm_build", "lm_forward", "logits_from_hidden",
+    "init_lm_state", "LMState", "encdec_build", "encdec_forward",
+    "init_encdec_state", "EncDecState", "vgg16_build", "vgg16_apply",
+]

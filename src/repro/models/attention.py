@@ -1,0 +1,272 @@
+"""Attention math: RoPE / M-RoPE, GQA, chunked (flash-style) attention,
+full and ring (sliding-window) KV caches.
+
+Memory discipline: train/prefill attention never materializes the full
+(S, S) score matrix — a static python loop over query chunks (exact
+static KV ranges: no wasted FLOPs on causal/local masks) wraps an inner
+lax.scan over KV chunks with online-softmax accumulation.  Decode (q=1)
+attends directly against the cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "apply_rope",
+    "chunked_attention",
+    "decode_attention",
+    "KVCache",
+    "init_kv_cache",
+    "update_kv_cache",
+]
+
+
+# ----------------------------------------------------------------- RoPE
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions (...,) -> angles (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float = 10_000.0,
+    mode: str = "standard",
+    sections: tuple[int, int, int] = (16, 24, 24),
+) -> jax.Array:
+    """Rotary embedding.
+
+    x: (B, S, H, dh).  positions: (B, S) for standard RoPE, or (3, B, S)
+    for M-RoPE (qwen2-vl: temporal/height/width position streams, each
+    rotating its own slice of the frequency spectrum).
+    """
+    if mode == "none":
+        return x
+    b, s, h, dh = x.shape
+    half = dh // 2
+    if mode == "mrope":
+        assert positions.shape[0] == 3, "mrope expects (3, B, S) positions"
+        angles = _rope_angles(positions, dh, theta)  # (3, B, S, half)
+        sec = jnp.cumsum(jnp.asarray(sections))
+        idx = jnp.searchsorted(sec, jnp.arange(half), side="right")  # 0/1/2
+        angles = jnp.take_along_axis(
+            jnp.moveaxis(angles, 0, -1),  # (B, S, half, 3)
+            idx[None, None, :, None].astype(jnp.int32),
+            axis=-1,
+        )[..., 0]  # (B, S, half)
+    else:
+        angles = _rope_angles(positions, dh, theta)  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)  # (B, S, 1, half)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ------------------------------------------------------ chunked attention
+def _block_scores(q, k, scale, softcap, score_dtype=jnp.float32):
+    """q (B, qc, Kv, G, dh), k (B, kc, Kv, dh) -> (B, Kv, G, qc, kc).
+
+    score_dtype=bf16 keeps MXU f32 accumulation but stores score blocks
+    (the dominant HBM tensor at long S) in bf16; softmax statistics stay
+    f32 downstream."""
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=score_dtype)
+    s = s * jnp.asarray(scale, score_dtype)
+    if softcap is not None:
+        s = (jnp.tanh(s / softcap) * softcap).astype(score_dtype)
+    return s
+
+
+def default_chunks(sq: int) -> tuple[int, int]:
+    """(q_chunk, kv_chunk) balancing HLO size (unrolled q chunks) against
+    live score-block memory: ~8 query chunks, 2k KV blocks."""
+    q = max(1024, sq // 8)
+    kv = max(1024, min(2048, sq // 8))
+    return q, kv
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    softcap: float | None = None,
+    q_chunk: int | None = None,
+    kv_chunk: int | None = None,
+    q_offset: int = 0,
+    score_dtype=jnp.float32,
+    head_shard: bool = False,
+) -> jax.Array:
+    """GQA flash-style attention.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, Kv, dh) with H % Kv == 0.
+    Static query-chunk loop -> exact static KV ranges (no masked-out
+    FLOPs beyond boundary chunks); inner lax.scan with online softmax.
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill
+    continuation); causal masks compare absolute positions.
+    """
+    b, sq, h, dh = q.shape
+    _, skv, kv_heads, _ = k.shape
+    g = h // kv_heads
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    dq, dkv = default_chunks(sq)
+    q_chunk = min(q_chunk or dq, sq)
+    kv_chunk = min(kv_chunk or dkv, skv)
+    n_q = (sq + q_chunk - 1) // q_chunk
+
+    # pad KV to a chunk multiple so dynamic_slice never clamps (clamped
+    # starts would silently misalign data vs. the position mask).
+    pad_kv = (-skv) % kv_chunk
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+
+    q = q.reshape(b, sq, kv_heads, g, dh)
+    if head_shard:
+        # shard attention math on the KV-head dim (uneven counts padded
+        # by GSPMD): per-chip score traffic drops by ~n_kv/axis_size and
+        # the softmax stays chip-local (§Perf hillclimb A).
+        from repro.sharding.ctx import hint_uneven
+        q = hint_uneven(q, None, None, "model", None, None)
+        k = hint_uneven(k, None, None, "model", None)
+        v = hint_uneven(v, None, None, "model", None)
+    neg = jnp.float32(-1e30)  # finite sentinel: -inf breeds NaNs in
+    #                           fully-masked boundary blocks
+    outs = []
+    for qi in range(n_q):
+        q_start = qi * q_chunk
+        qc = min(q_chunk, sq - q_start)
+        q_blk = jax.lax.slice_in_dim(q, q_start, q_start + qc, axis=1)
+        q_abs_end = q_offset + q_start + qc - 1  # last query position
+        # static KV range for this query chunk
+        hi = min(skv, q_abs_end + 1) if causal else skv
+        lo = 0
+        if window is not None:
+            lo = max(0, q_offset + q_start - window + 1)
+        lo_c, hi_c = lo // kv_chunk, (hi + kv_chunk - 1) // kv_chunk
+        kv_idx = jnp.arange(lo_c, hi_c)
+
+        q_pos = q_offset + q_start + jnp.arange(qc)  # (qc,)
+
+        def body(carry, kc_i):
+            acc, m, l = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kc_i * kv_chunk, kv_chunk, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kc_i * kv_chunk, kv_chunk, axis=1)
+            s = _block_scores(q_blk, k_blk, scale, softcap, score_dtype)
+            kv_pos = kc_i * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((qc, kv_chunk), bool)
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            mask &= kv_pos[None, :] < skv  # tail padding guard
+            s = jnp.where(mask[None, None, None], s, jnp.asarray(neg, s.dtype))
+            # softmax statistics in f32 regardless of score storage dtype
+            m_new = jnp.maximum(m, s.max(-1).astype(jnp.float32))
+            p = jnp.exp(s.astype(jnp.float32) - m_new[..., None])
+            # zero contributions where the whole row was masked (p == 1
+            # only when s == m_new == sentinel; real blocks zero it via
+            # alpha, but kill it eagerly to keep l exact):
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            # materialize p once, in the value dtype (the exp fusion emits
+            # it directly); the row-sum accumulates in f32 from that copy
+            p = p.astype(v.dtype)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, -1, dtype=jnp.float32)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kv_heads, g, qc, dh), jnp.float32)
+        m0 = jnp.full((b, kv_heads, g, qc), neg, jnp.float32)
+        l0 = jnp.zeros((b, kv_heads, g, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), kv_idx)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        outs.append(jnp.moveaxis(out, 3, 1))  # (B, qc, Kv, G, dh)
+    o = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return o.reshape(b, sq, h, dh).astype(v.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    kv_positions: jax.Array,
+    q_position: jax.Array,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring) cache.
+
+    q: (B, 1, H, dh); caches: (B, L, Kv, dh); kv_positions: (B, L) int32
+    absolute positions (-1 = empty slot); q_position: (B,) int32.
+    """
+    b, _, h, dh = q.shape
+    kv_heads = k_cache.shape[2]
+    g = h // kv_heads
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, 1, kv_heads, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (kv_positions >= 0) & (kv_positions <= q_position[:, None])
+    if window is not None:
+        valid &= kv_positions > (q_position[:, None] - window)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, dh).astype(v_cache.dtype)
+
+
+# ------------------------------------------------------------- KV caches
+class KVCache(NamedTuple):
+    """Full or ring KV cache. ``length`` is the allocated size (the
+    window for ring caches); positions tracks absolute token positions."""
+
+    k: jax.Array  # (B, L, Kv, dh)
+    v: jax.Array  # (B, L, Kv, dh)
+    positions: jax.Array  # (B, L) int32, -1 = empty
+
+
+def init_kv_cache(batch: int, length: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
+        positions=jnp.full((batch, length), -1, jnp.int32),
+    )
+
+
+def update_kv_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                    positions: jax.Array) -> KVCache:
+    """Insert S new entries at slots positions % L (ring semantics; for a
+    full-length cache L >= max position this is plain indexed write).
+
+    k_new/v_new: (B, S, Kv, dh); positions: (B, S) absolute.
+    """
+    length = cache.k.shape[1]
+    slots = positions % length  # (B, S)
+    def write(buf, new):
+        return jax.vmap(lambda b, s, n: b.at[s].set(n))(buf, slots, new)
+    return KVCache(
+        k=write(cache.k, k_new.astype(cache.k.dtype)),
+        v=write(cache.v, v_new.astype(cache.v.dtype)),
+        positions=jax.vmap(lambda p, s, n: p.at[s].set(n))(
+            cache.positions, slots, positions
+        ),
+    )

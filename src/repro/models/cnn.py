@@ -1,0 +1,97 @@
+"""VGG-16 — the paper's evaluation network, with the L2R conv path.
+
+Convolutions run either as plain float (lax.conv) or through the paper's
+composite inner-product pipeline: im2col -> quantize -> MSDF digit-plane
+GEMM (core/l2r_gemm.py; on TPU the Pallas kernel kernels/l2r_gemm).  With
+all significance levels the L2R path is bit-exact W8A8 integer conv; with
+fewer levels it is the progressive-precision (online early output) mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.l2r_gemm import l2r_matmul
+from repro.core.quant import QuantConfig
+from repro.core.cycle_model import VGG16_CONV_LAYERS
+
+from .common import Param, materialize
+
+__all__ = ["vgg16_build", "vgg16_apply", "VGG16_CONV_LAYERS"]
+
+
+def vgg16_build(n_classes: int = 1000, in_channels: int = 3) -> dict:
+    params: dict = {}
+    c_in = in_channels
+    for layer in VGG16_CONV_LAYERS:
+        params[layer.name] = {
+            "w": Param((layer.k, layer.k, c_in, layer.M), (None, None, None, "ffn")),
+            "b": Param((layer.M,), ("ffn",), init="zeros"),
+        }
+        c_in = layer.M
+    params["fc6"] = {"w": Param((512 * 7 * 7, 4096), (None, "ffn")),
+                     "b": Param((4096,), ("ffn",), init="zeros")}
+    params["fc7"] = {"w": Param((4096, 4096), ("ffn", "ffn")),
+                     "b": Param((4096,), ("ffn",), init="zeros")}
+    params["fc8"] = {"w": Param((4096, n_classes), ("ffn", "vocab")),
+                     "b": Param((n_classes,), ("vocab",), init="zeros")}
+    return params
+
+
+def _conv_float(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b.astype(x.dtype)
+
+
+def _conv_l2r(x, w, b, cfg: QuantConfig, levels):
+    """im2col + MSDF digit-plane GEMM (the composite IPU mapping)."""
+    kh, kw, cin, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, H, W, cin*kh*kw)
+    bsz, h, ww, pdim = patches.shape
+    flat = patches.reshape(bsz * h * ww, pdim)
+    # lax patches order the channel dim as (cin, kh, kw)
+    wmat = w.transpose(2, 0, 1, 3).reshape(pdim, cout)
+    out = l2r_matmul(flat, wmat, cfg, levels)
+    return out.reshape(bsz, h, ww, cout) + b.astype(out.dtype)
+
+
+def vgg16_apply(
+    params: dict,
+    images: jax.Array,  # (B, H, W, 3)
+    l2r: QuantConfig | None = None,
+    levels: int | None = None,
+    n_dense_pool: int = 5,
+) -> jax.Array:
+    """Forward pass.  Returns logits (B, n_classes).
+
+    Works for any input size that survives 5 pools >= 1 pixel; the FC
+    head adapts via average pooling to 7x7 (or the remaining size).
+    """
+    x = images
+    conv = (lambda x, w, b: _conv_l2r(x, w, b, l2r, levels)) if l2r else _conv_float
+    stage_splits = {1: 2, 3: 2, 6: 2, 9: 2, 12: 2}  # pool after these conv idxs
+    for i, layer in enumerate(VGG16_CONV_LAYERS):
+        p = params[layer.name]
+        x = jax.nn.relu(conv(x, p["w"], p["b"]))
+        if i in stage_splits:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+    # adaptive head: resize feature map to the canonical 7x7 so the FC
+    # head works for any input resolution (smoke tests use 32x32 images)
+    bsz, h, w_, c = x.shape
+    if (h, w_) != (7, 7):
+        x = jax.image.resize(x, (bsz, 7, 7, c), "linear")
+    flat = x.reshape(bsz, -1)
+    mm = (lambda a, wt: l2r_matmul(a, wt, l2r, levels)) if l2r else (
+        lambda a, wt: a @ wt.astype(a.dtype))
+    x = jax.nn.relu(mm(flat, params["fc6"]["w"]) + params["fc6"]["b"])
+    x = jax.nn.relu(mm(x, params["fc7"]["w"]) + params["fc7"]["b"])
+    return mm(x, params["fc8"]["w"]) + params["fc8"]["b"]

@@ -1,0 +1,228 @@
+"""Encoder-decoder transformer (whisper-base backbone).
+
+Per the assignment, the conv/mel audio frontend is a STUB: input_specs()
+supplies precomputed frame embeddings (B, encoder_seq, d_model).  The
+encoder is bidirectional self-attention; the decoder is causal
+self-attention + cross-attention whose K/V are computed once per layer
+from the encoder output at prefill time and cached.
+
+Whisper idioms kept: LayerNorm, GELU MLP, learned position embeddings,
+no RoPE.  (The decode_32k cell runs the decoder with a 32k-entry
+position table — architecturally valid, beyond whisper's trained 448
+positions; a lowering/sharding exercise per the assignment.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import chunked_attention, decode_attention, init_kv_cache, update_kv_cache
+from .common import Param, dense, layer_norm
+from .config import ModelConfig
+from .mlp import mlp_build, mlp_apply
+from .transformer import attn_build
+
+__all__ = ["encdec_build", "encdec_forward", "init_encdec_state", "EncDecState",
+           "encode", "MAX_DEC_POSITIONS"]
+
+MAX_DEC_POSITIONS = 32_768
+
+
+def _ln(cfg, x, g):
+    return layer_norm(x, 1.0 + g, jnp.zeros_like(g), cfg.norm_eps)
+
+
+def _enc_layer_build(cfg: ModelConfig) -> dict:
+    return {
+        "attn_norm": Param((cfg.d_model,), ("embed",), init="zeros"),
+        "attn": attn_build(cfg),
+        "ffn_norm": Param((cfg.d_model,), ("embed",), init="zeros"),
+        "ffn": mlp_build(cfg),
+    }
+
+
+def _dec_layer_build(cfg: ModelConfig) -> dict:
+    return {
+        "self_norm": Param((cfg.d_model,), ("embed",), init="zeros"),
+        "self": attn_build(cfg),
+        "cross_norm": Param((cfg.d_model,), ("embed",), init="zeros"),
+        "cross": attn_build(cfg),
+        "ffn_norm": Param((cfg.d_model,), ("embed",), init="zeros"),
+        "ffn": mlp_build(cfg),
+    }
+
+
+def _stack(n: int, tree):
+    def s(p: Param) -> Param:
+        return Param((n, *p.shape), ("layers", *p.axes), init=p.init,
+                     scale=p.scale, dtype=p.dtype)
+    return jax.tree.map(s, tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+def encdec_build(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "enc_pos": Param((cfg.encoder_seq, d), (None, "embed"), scale=0.02),
+        "enc_stack": _stack(cfg.encoder_layers, _enc_layer_build(cfg)),
+        "enc_norm": Param((d,), ("embed",), init="zeros"),
+        "embed": Param((cfg.vocab, d), ("vocab", "embed"), init="embed"),
+        "dec_pos": Param((MAX_DEC_POSITIONS, d), (None, "embed"), scale=0.02),
+        "dec_stack": _stack(cfg.n_layers, _dec_layer_build(cfg)),
+        "dec_norm": Param((d,), ("embed",), init="zeros"),
+    }
+
+
+def _mha(cfg, p, xq, xkv, *, causal, mode="train", cache=None, positions=None):
+    """Simple (non-RoPE) MHA used by both encoder and decoder."""
+    b, sq, _ = xq.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = dense(xq, p["wq"], cfg.l2r, cfg.l2r_levels)
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    q = q.reshape(b, sq, h, dh)
+    k = dense(xkv, p["wk"], cfg.l2r, cfg.l2r_levels)
+    v = dense(xkv, p["wv"], cfg.l2r, cfg.l2r_levels)
+    if "bk" in p:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    k = k.reshape(b, -1, kv, dh)
+    v = v.reshape(b, -1, kv, dh)
+    if mode == "decode":
+        cache = update_kv_cache(cache, k, v, positions)
+        out = decode_attention(q, cache.k, cache.v, cache.positions,
+                               positions[:, 0], scale=cfg.attn_scale)
+    else:
+        if mode == "prefill":
+            cache = update_kv_cache(cache, k, v, positions)
+        out = chunked_attention(q, k, v, causal=causal, scale=cfg.attn_scale)
+    return dense(out.reshape(b, sq, h * dh), p["wo"], cfg.l2r, cfg.l2r_levels), cache
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, encoder_seq, d) precomputed embeddings (frontend stub)."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + params["enc_pos"][None, : x.shape[1]].astype(x.dtype)
+
+    def block(x, lp):
+        h, _ = _mha(cfg, lp["attn"], _ln(cfg, x, lp["attn_norm"]),
+                    _ln(cfg, x, lp["attn_norm"]), causal=False)
+        x = x + h
+        x = x + mlp_apply(cfg, lp["ffn"], _ln(cfg, x, lp["ffn_norm"]))
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, params["enc_stack"])
+    return _ln(cfg, x, params["enc_norm"])
+
+
+@dataclasses.dataclass
+class EncDecState:
+    self_cache: Any  # stacked KVCache over decoder layers
+    cross_k: jax.Array  # (L, B, S_enc, Kv, dh)
+    cross_v: jax.Array
+    pos: jax.Array  # (B,)
+
+
+jax.tree_util.register_dataclass(
+    EncDecState,
+    data_fields=["self_cache", "cross_k", "cross_v", "pos"],
+    meta_fields=[],
+)
+
+
+def init_encdec_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> EncDecState:
+    l = cfg.n_layers
+    c = init_kv_cache(batch, max_len, cfg.n_kv, cfg.head_dim, dtype)
+    return EncDecState(
+        self_cache=jax.tree.map(lambda x: jnp.stack([x] * l), c),
+        cross_k=jnp.zeros((l, batch, cfg.encoder_seq, cfg.n_kv, cfg.head_dim), dtype),
+        cross_v=jnp.zeros((l, batch, cfg.encoder_seq, cfg.n_kv, cfg.head_dim), dtype),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def encdec_forward(
+    cfg: ModelConfig,
+    params: dict,
+    *,
+    tokens: jax.Array,
+    frames: jax.Array | None = None,
+    enc_out: jax.Array | None = None,
+    mode: str = "train",
+    state: EncDecState | None = None,
+    resid_shard=lambda x: x,
+    remat: bool = False,
+):
+    """Decoder forward (runs the encoder when enc_out not given).
+
+    Returns (hidden, new_state, aux=0).  In decode mode the cross K/V
+    come from the state (computed at prefill); in train/prefill they are
+    computed from enc_out per layer.
+    """
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    b, s = tokens.shape
+    if mode != "decode" and enc_out is None:
+        assert frames is not None, "encoder frames required"
+        enc_out = encode(cfg, params, frames)
+
+    if state is not None:
+        positions = state.pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    x = params["embed"].astype(compute_dtype)[tokens]
+    x = x + jnp.take(params["dec_pos"].astype(compute_dtype), positions, axis=0)
+
+    kv, dh = cfg.n_kv, cfg.head_dim
+
+    def block(carry, xs):
+        x = carry
+        lp, caches = xs
+        self_c, ck, cv = caches
+        h, self_c = _mha(cfg, lp["self"], _ln(cfg, x, lp["self_norm"]),
+                         _ln(cfg, x, lp["self_norm"]), causal=True,
+                         mode=mode, cache=self_c, positions=positions)
+        x = x + h
+        # cross attention
+        xq = _ln(cfg, x, lp["cross_norm"])
+        q = dense(xq, lp["cross"]["wq"], cfg.l2r, cfg.l2r_levels)
+        if "bq" in lp["cross"]:
+            q = q + lp["cross"]["bq"].astype(q.dtype)
+        q = q.reshape(b, s, cfg.n_heads, dh)
+        if mode == "decode":
+            k_enc, v_enc = ck, cv
+        else:
+            k_enc = dense(enc_out, lp["cross"]["wk"], cfg.l2r, cfg.l2r_levels)
+            v_enc = dense(enc_out, lp["cross"]["wv"], cfg.l2r, cfg.l2r_levels)
+            if "bk" in lp["cross"]:
+                k_enc = k_enc + lp["cross"]["bk"].astype(k_enc.dtype)
+                v_enc = v_enc + lp["cross"]["bv"].astype(v_enc.dtype)
+            k_enc = k_enc.reshape(b, -1, kv, dh)
+            v_enc = v_enc.reshape(b, -1, kv, dh)
+        attn = chunked_attention(q, k_enc.astype(x.dtype), v_enc.astype(x.dtype),
+                                 causal=False, scale=cfg.attn_scale)
+        x = x + dense(attn.reshape(b, s, cfg.n_heads * dh), lp["cross"]["wo"],
+                      cfg.l2r, cfg.l2r_levels)
+        x = x + mlp_apply(cfg, lp["ffn"], _ln(cfg, x, lp["ffn_norm"]))
+        x = resid_shard(x)
+        new_caches = (self_c, k_enc, v_enc) if state is not None else 0
+        return x, new_caches
+
+    block_fn = jax.checkpoint(block) if remat else block
+    if state is not None:
+        xs = (params["dec_stack"], (state.self_cache, state.cross_k, state.cross_v))
+    else:
+        xs = (params["dec_stack"], (None, None, None))  # cache-less train scan
+    x, ys = jax.lax.scan(block_fn, x, xs)
+    x = _ln(cfg, x, params["dec_norm"])
+
+    new_state = None
+    if state is not None:
+        self_c, ck, cv = ys
+        new_state = EncDecState(self_cache=self_c, cross_k=ck, cross_v=cv,
+                                pos=state.pos + s)
+    return x, new_state, jnp.zeros((), jnp.float32)

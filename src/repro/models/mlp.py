@@ -1,0 +1,42 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU, with L2R-quantized matmuls
+when the config enables the paper's technique."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Param, dense
+from .config import ModelConfig
+
+__all__ = ["mlp_build", "mlp_apply"]
+
+
+def mlp_build(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d_ff = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.ffn_kind in ("swiglu", "geglu"):
+        return {
+            "wi": Param((cfg.d_model, 2, d_ff), ("embed", None, "ffn")),
+            "wo": Param((d_ff, cfg.d_model), ("ffn", "embed")),
+        }
+    return {
+        "wi": Param((cfg.d_model, d_ff), ("embed", "ffn")),
+        "wo": Param((d_ff, cfg.d_model), ("ffn", "embed")),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    from repro.sharding.ctx import hint
+
+    if cfg.ffn_kind in ("swiglu", "geglu"):
+        h = dense(x, params["wi"], cfg.l2r, cfg.l2r_levels)  # (..., 2, d_ff)
+        gate, up = h[..., 0, :], h[..., 1, :]
+        act = jax.nn.silu(gate) if cfg.ffn_kind == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(dense(x, params["wi"], cfg.l2r, cfg.l2r_levels))
+    # Megatron column->row parallelism: pin the hidden activation to the
+    # model axis so GSPMD never "helpfully" all-gathers the weights (it
+    # does exactly that for small decode batches — §Perf hillclimb C).
+    h = hint(h, *([None] * (h.ndim - 1)), "model")
+    return dense(h, params["wo"], cfg.l2r, cfg.l2r_levels)

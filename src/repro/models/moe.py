@@ -1,0 +1,246 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity, scatter dispatch,
+shared experts (DeepSeekMoE) and top-1 routed + shared (Llama-4 style).
+
+Dispatch is scatter/gather based — token t's i-th choice of expert e gets
+slot p = (number of earlier assignments to e); assignments beyond the
+static capacity C are dropped (standard capacity dropping).  This avoids
+the (tokens, experts, capacity) one-hot einsum blow-up and maps onto an
+all-to-all when experts are sharded over the "model" mesh axis.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import Param, dense
+from .config import ModelConfig
+
+__all__ = ["moe_build", "moe_apply", "moe_capacity"]
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    ideal = cfg.experts_per_token * n_tokens / max(cfg.n_experts, 1)
+    cap = int(math.ceil(ideal * cfg.capacity_factor))
+    return max(8, min(cap, n_tokens))
+
+
+def moe_build(cfg: ModelConfig) -> dict:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+    glu = cfg.ffn_kind in ("swiglu", "geglu")
+    params = {
+        "router": Param((d, e), ("embed", None), scale=0.02),
+        "wi": Param((e, d, 2, f) if glu else (e, d, f),
+                    ("experts", "embed", None, "ffn") if glu else ("experts", "embed", "ffn")),
+        "wo": Param((e, f, d), ("experts", "ffn", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        params["shared_wi"] = Param(
+            (d, 2, fs) if glu else (d, fs),
+            ("embed", None, "ffn") if glu else ("embed", "ffn"),
+        )
+        params["shared_wo"] = Param((fs, d), ("ffn", "embed"))
+    return params
+
+
+def _expert_ffn(cfg: ModelConfig, wi, wo, xb: jax.Array) -> jax.Array:
+    """xb: (E, C, d) -> (E, C, d); per-expert GLU/GELU FFN.
+
+    With the L2R switch on, expert matmuls run through the digit-plane
+    pipeline vmapped over experts (per-expert weight scales)."""
+    glu = cfg.ffn_kind in ("swiglu", "geglu")
+    if cfg.l2r is not None:
+        from repro.core.l2r_gemm import l2r_matmul
+
+        wi2 = wi.reshape(wi.shape[0], wi.shape[1], -1)
+        h = jax.vmap(lambda xe, we: l2r_matmul(xe, we, cfg.l2r, cfg.l2r_levels))(
+            xb, wi2
+        ).reshape(xb.shape[0], xb.shape[1], *wi.shape[2:])
+    else:
+        h = jnp.einsum("ecd,ed...f->ec...f", xb, wi.astype(xb.dtype))
+    if glu:
+        gate, up = h[..., 0, :], h[..., 1, :]
+        act = jax.nn.silu(gate) if cfg.ffn_kind == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(h)
+    if cfg.l2r is not None:
+        from repro.core.l2r_gemm import l2r_matmul
+
+        return jax.vmap(lambda he, we: l2r_matmul(he, we, cfg.l2r, cfg.l2r_levels))(
+            h, wo
+        )
+    return jnp.einsum("ecf,efd->ecd", h, wo.astype(xb.dtype))
+
+
+def _dp_groups(t: int) -> int:
+    """Number of shard-local dispatch groups = total device count (the
+    flat token dim is sharded over dp x model); 1 without a mesh."""
+    from repro.sharding.ctx import get_mesh
+
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    n = mesh.size
+    return n if n > 1 and t % n == 0 else 1
+
+
+def moe_apply(cfg: ModelConfig, params: dict, x: jax.Array):
+    """x: (B, S, d) -> (out, aux_loss).  Routed top-k + optional shared."""
+    if cfg.moe_dp_local and _dp_groups(x.shape[0] * x.shape[1]) > 1:
+        return moe_apply_dp_local(cfg, params, x)
+    b, s, d = x.shape
+    t = b * s
+    e = cfg.n_experts
+    k = cfg.experts_per_token
+    cap = moe_capacity(cfg, t)
+    xt = x.reshape(t, d)
+
+    from repro.sharding.ctx import hint, hint_dp
+
+    xt = hint_dp(xt)  # tokens stay DP-sharded through routing
+    logits = dense(xt, params["router"]).astype(jnp.float32)  # (T, E)
+    logits = hint_dp(logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # slot assignment: position of each (t, i) among assignments to its
+    # expert, in token order (cumsum of one-hot counts).
+    flat_e = expert_idx.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot  # exclusive prefix count
+    slot = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = slot < cap
+    gates = gate_vals.reshape(-1) * keep
+
+    # dispatch: (E, C, d) expert buffers (all-to-all under expert sharding)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    safe_slot = jnp.where(keep, slot, cap - 1)
+    src = jnp.repeat(jnp.arange(t), k)
+    contrib = hint_dp(jnp.where(keep[:, None], xt[src], 0))
+    buf = buf.at[flat_e, safe_slot].add(contrib, mode="drop")
+    buf = hint(buf, "model")  # experts live on the model axis
+
+    yb = _expert_ffn(cfg, params["wi"], params["wo"], buf)  # (E, C, d)
+    yb = hint(yb, "model")
+
+    # combine: gather each kept assignment back, weighted by its gate
+    y_tok = yb[flat_e, safe_slot]  # (T*k, d)
+    y = jnp.zeros((t, d), jnp.float32).at[src].add(
+        y_tok.astype(jnp.float32) * gates[:, None]
+    )
+    out = hint_dp(y).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        glu = cfg.ffn_kind in ("swiglu", "geglu")
+        h = dense(xt, params["shared_wi"], cfg.l2r, cfg.l2r_levels)
+        if glu:
+            g_, u_ = h[..., 0, :], h[..., 1, :]
+            h = (jax.nn.silu(g_) if cfg.ffn_kind == "swiglu" else jax.nn.gelu(g_)) * u_
+        else:
+            h = jax.nn.gelu(h)
+        out = out + dense(h, params["shared_wo"], cfg.l2r, cfg.l2r_levels)
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(0)  # (E,) mean router prob
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e].add(keep.astype(jnp.float32)) / max(t * k, 1)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_weight
+    return out.reshape(b, s, d), aux
+
+
+def moe_apply_dp_local(cfg: ModelConfig, params: dict, x: jax.Array):
+    """DP-local-capacity MoE (§Perf hillclimb B).
+
+    Tokens are DP-major (the batch dim is sharded over ("pod","data")),
+    so reshaping to (DP, T_local) aligns group g with data shard g.  Slot
+    assignment and the dispatch scatter then happen *inside* each shard
+    (zero communication); the single cross-device movement is the
+    (DP, E, C_local, d) -> (E, DP*C_local, d) transpose, which GSPMD
+    lowers to the canonical MoE all-to-all.  Capacity is per shard
+    (C_local = ceil(k*T_local/E * factor)): dropping is shard-local,
+    the standard behavior of production MoE systems.
+    """
+    from repro.sharding.ctx import hint, hint_dp
+
+    b, s, d = x.shape
+    t = b * s
+    e = cfg.n_experts
+    k = cfg.experts_per_token
+    dp = _dp_groups(t)
+    t_local = t // dp
+    cap = moe_capacity(cfg, t_local)
+
+    # flattened rows are (batch x seq)-major: batch is DP-sharded AND the
+    # sequence is model-sharded between blocks (Megatron-SP), so the flat
+    # token dim must be pinned over BOTH axes — dropping this constraint
+    # (hillclimb B5) regressed 14.9s -> 18.2s: GSPMD then gathers rows
+    # over "model" for the router/shared-expert matmuls.
+    all_axes = ("pod", "data", "model")
+    xt = hint(x.reshape(t, d), all_axes)
+    logits = dense(xt, params["router"]).astype(jnp.float32)
+    logits = hint(logits, all_axes)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    xg = xt.reshape(dp, t_local, d)
+    eg = expert_idx.reshape(dp, t_local, k)
+    gg = gate_vals.reshape(dp, t_local, k)
+
+    def dispatch_one(x_l, e_l, g_l):
+        flat_e = e_l.reshape(-1)  # (T_l*k,)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        keep = slot < cap
+        gates = g_l.reshape(-1) * keep
+        safe_slot = jnp.where(keep, slot, cap - 1)
+        src = jnp.repeat(jnp.arange(t_local), k)
+        contrib = jnp.where(keep[:, None], x_l[src], 0)
+        buf = jnp.zeros((e, cap, d), x_l.dtype).at[flat_e, safe_slot].add(
+            contrib, mode="drop")
+        return buf, flat_e, safe_slot, gates, src, keep
+
+    bufs, flat_e, safe_slot, gates, src, keep = jax.vmap(dispatch_one)(
+        xg, eg, gg)  # bufs: (G, E, C, d), one group per device
+    # dispatch is device-local: group dim pinned over ALL mesh axes
+    bufs = hint(bufs, all_axes)
+    # the all-to-all happens HERE: regroup so each chip holds its dp-row's
+    # groups for its "model"-axis expert slice; the expert FFN is vmapped
+    # over the group dim — no reshape/transpose of sharded dims, so GSPMD
+    # never materializes a gathered copy.
+    bufs = hint(bufs, ("pod", "data"), "model")
+    yb = jax.vmap(
+        lambda b_: _expert_ffn(cfg, params["wi"], params["wo"], b_))(bufs)
+    yb = hint(yb, ("pod", "data"), "model")
+    # all-to-all back: groups return to their owning device for combine
+    ybg = hint(yb, all_axes)  # (G, E, C, d)
+
+    def combine_one(y_l, fe, ss, g_l, src_l):
+        y_tok = y_l[fe, ss]  # (T_l*k, d)
+        out = jnp.zeros((t_local, d), jnp.float32).at[src_l].add(
+            y_tok.astype(jnp.float32) * g_l[:, None])
+        return out
+
+    y = jax.vmap(combine_one)(ybg, flat_e, safe_slot, gates, src)
+    out = hint(y.reshape(t, d), all_axes).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        glu = cfg.ffn_kind in ("swiglu", "geglu")
+        h = dense(xt, params["shared_wi"], cfg.l2r, cfg.l2r_levels)
+        if glu:
+            g_, u_ = h[..., 0, :], h[..., 1, :]
+            h = (jax.nn.silu(g_) if cfg.ffn_kind == "swiglu" else jax.nn.gelu(g_)) * u_
+        else:
+            h = jax.nn.gelu(h)
+        out = out + dense(h, params["shared_wo"], cfg.l2r, cfg.l2r_levels)
+
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e.reshape(-1)].add(
+        keep.reshape(-1).astype(jnp.float32)) / max(t * k, 1)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_weight
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block structure (per the Griffin paper): two parallel branches from the
+input — a GeLU gate branch and a recurrence branch (linear -> causal
+temporal conv1d -> RG-LRU) — multiplied and projected back.
+
+RG-LRU recurrence (elementwise — outside the paper's inner-product unit,
+kept in floating point; see DESIGN.md §4):
+
+    r_t = sigmoid(W_a xi_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x xi_t + b_x)            input gate
+    log a_t = -c * softplus(Lambda) * r_t    (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * xi_t)
+
+Train/prefill evaluate the linear recurrence with an associative scan
+(log-depth); decode is the O(1) step — the bounded state that makes
+`long_500k` tractable for recurrentgemma-2b.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Param, dense
+from .config import ModelConfig
+
+__all__ = ["rglru_build", "rglru_apply", "rglru_decode", "init_rglru_state"]
+
+_C = 8.0
+
+
+def rglru_build(cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    return {
+        "gate_proj": Param((d, w), ("embed", "ffn")),
+        "rec_proj": Param((d, w), ("embed", "ffn")),
+        "conv_w": Param((cfg.conv1d_width, w), (None, "ffn"), scale=0.1),
+        "conv_b": Param((w,), ("ffn",), init="zeros"),
+        "w_a": Param((w, w), ("ffn", None), scale=0.02),
+        "b_a": Param((w,), (None,), init="zeros"),
+        "w_x": Param((w, w), ("ffn", None), scale=0.02),
+        "b_x": Param((w,), (None,), init="zeros"),
+        "lam": Param((w,), (None,), init="ones"),  # Lambda (softplus'd)
+        "out_proj": Param((w, cfg.d_model), ("ffn", "embed")),
+    }
+
+
+def _conv1d(x, w, b, state=None):
+    width = w.shape[0]
+    pad = (
+        jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+        if state is None
+        else state.astype(x.dtype)
+    )
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None].astype(x.dtype)
+        for i in range(width)
+    ) + b.astype(x.dtype)
+    return y, xp[:, -(width - 1):, :]
+
+
+def _gates(params, xi):
+    r = jax.nn.sigmoid(
+        dense(xi, params["w_a"]).astype(jnp.float32) + params["b_a"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        dense(xi, params["w_x"]).astype(jnp.float32) + params["b_x"].astype(jnp.float32)
+    )
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xi.astype(jnp.float32)
+    )
+    return a, b
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+    }
+
+
+def rglru_apply(cfg: ModelConfig, params: dict, u: jax.Array,
+                state: dict | None = None):
+    """u: (B, S, d_model) -> (out, new_state)."""
+    gate = jax.nn.gelu(dense(u, params["gate_proj"], cfg.l2r, cfg.l2r_levels))
+    xi = dense(u, params["rec_proj"], cfg.l2r, cfg.l2r_levels)
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = _conv1d(xi, params["conv_w"], params["conv_b"], conv_state)
+    a, b = _gates(params, xi)  # (B, S, W) f32
+
+    if state is not None:
+        # fold carried state into the first step: h_0' = a_0 h_in + b_0
+        b = b.at[:, 0].add(a[:, 0] * state["h"].astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(u.dtype) * gate)
+    out = dense(y, params["out_proj"], cfg.l2r, cfg.l2r_levels)
+    return out, {"h": h[:, -1], "conv": new_conv}
+
+
+def rglru_decode(cfg: ModelConfig, params: dict, u: jax.Array, state: dict):
+    """u: (B, 1, d_model); O(1) recurrent step."""
+    gate = jax.nn.gelu(dense(u, params["gate_proj"], cfg.l2r, cfg.l2r_levels))
+    xi = dense(u, params["rec_proj"], cfg.l2r, cfg.l2r_levels)
+    xi, new_conv = _conv1d(xi, params["conv_w"], params["conv_b"], state["conv"])
+    a, b = _gates(params, xi)  # (B, 1, W)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    y = h[:, None].astype(u.dtype) * gate
+    out = dense(y, params["out_proj"], cfg.l2r, cfg.l2r_levels)
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,210 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked scan formulation.
+
+Train/prefill use the chunked SSD algorithm (intra-chunk quadratic term +
+inter-chunk state recurrence); decode is the O(1) per-token recurrence —
+this is what makes the `long_500k` shape tractable for mamba2-130m.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Param, dense, rms_norm
+from .config import ModelConfig
+
+__all__ = [
+    "ssm_build",
+    "ssm_apply",
+    "ssm_decode",
+    "init_ssm_state",
+    "ssd_chunked",
+]
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n  # x, B, C share the temporal conv
+    return d_inner, heads, n, conv_dim
+
+
+def ssm_build(cfg: ModelConfig) -> dict:
+    d_inner, heads, n, conv_dim = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * n + heads  # z, xBC, dt
+    return {
+        "in_proj": Param((cfg.d_model, d_in_proj), ("embed", "ffn")),
+        "conv_w": Param((cfg.ssm_conv, conv_dim), (None, "ffn"), scale=0.1),
+        "conv_b": Param((conv_dim,), ("ffn",), init="zeros"),
+        "a_log": Param((heads,), (None,), init="ones"),
+        "d_skip": Param((heads,), (None,), init="ones"),
+        "dt_bias": Param((heads,), (None,), init="zeros"),
+        "norm": Param((d_inner,), ("ffn",), init="zeros"),
+        "out_proj": Param((d_inner, cfg.d_model), ("ffn", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv along S.  x: (B, S, C); w: (W, C).
+
+    Returns (y, new_state) with state = last W-1 inputs (decode carry).
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, C)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None].astype(x.dtype)
+        for i in range(width)
+    ) + b.astype(x.dtype)
+    new_state = xp[:, -(width - 1):, :]
+    return y, new_state
+
+
+def _segsum_scores(ca: jax.Array) -> jax.Array:
+    """ca: (..., Q, H) within-chunk inclusive cumsum of a.
+    Returns decay (..., H, Q, Q): exp(ca_i - ca_j) for j <= i else 0."""
+    q = ca.shape[-2]
+    diff = ca[..., :, None, :] - ca[..., None, :, :]  # (.., i, j, H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.moveaxis(diff, -1, -3)  # (.., H, i, j)
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int):
+    """Chunked SSD.
+
+    x: (B, S, H, P) inputs (pre-scaled by nothing; dt applied inside),
+    dt: (B, S, H) softplus'd step sizes, a: (B, S, H) = -exp(A_log)*dt,
+    b, c: (B, S, N) (single group, shared across heads).
+    Returns y: (B, S, H, P), final_state: (B, H, N, P).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    ac = a.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+
+    ca = jnp.cumsum(ac, axis=2)  # (B, NC, Q, H) inclusive
+    dtx = xc * dtc[..., None]  # (B, NC, Q, H, P)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    decay = _segsum_scores(ca)  # (B, NC, H, Q, Q)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B, NC, Q, Q)
+    scores = cb[:, :, None] * decay  # (B, NC, H, Q, Q)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores, dtx)
+
+    # ---- chunk summary states: S_c = sum_j exp(ca_last - ca_j) B_j dtx_j^T
+    last = ca[:, :, -1:, :]  # (B, NC, 1, H)
+    w_end = jnp.exp(last - ca)  # (B, NC, Q, H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc, w_end, dtx)
+
+    # ---- inter-chunk recurrence over NC (sequential scan) ----
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # (B, NC, H) total chunk decay
+
+    def step(r_prev, inp):
+        s_c, dec = inp  # (B,H,N,P), (B,H)
+        r = r_prev * dec[..., None, None] + s_c
+        return r, r_prev  # emit state *entering* the chunk
+
+    init = jnp.zeros((bsz, h, n, p), x.dtype)
+    final, r_in = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    r_in = jnp.moveaxis(r_in, 0, 1)  # (B, NC, H, N, P) state entering chunk
+
+    # ---- inter-chunk contribution: y2_i = C_i * exp(ca_i) . R_in
+    w_in = jnp.exp(ca)  # decay from chunk start to position i
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", cc, w_in, r_in)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, final
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, heads, n, conv_dim = _dims(cfg)
+    return {
+        "ssd": jnp.zeros((batch, heads, n, cfg.ssm_head_dim), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_inner, heads, n, conv_dim = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def ssm_apply(cfg: ModelConfig, params: dict, u: jax.Array,
+              state: dict | None = None):
+    """Full-sequence SSD mixer.  u: (B, S, d_model).
+
+    Returns (y, new_state); state in/out enables chunked prefill
+    continuation and hands decode its carry.
+    """
+    d_inner, heads, n, conv_dim = _dims(cfg)
+    bsz, s, _ = u.shape
+    zxbcdt = dense(u, params["in_proj"], cfg.l2r, cfg.l2r_levels)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    x, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32)) * dt  # (B,S,H)
+
+    x4 = x.reshape(bsz, s, heads, cfg.ssm_head_dim)
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        x4 = jnp.pad(x4, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    y, final = ssd_chunked(
+        x4.astype(jnp.float32), dt, a,
+        b.astype(jnp.float32), c.astype(jnp.float32), cfg.ssm_chunk,
+    )
+    if pad:
+        y = y[:, :s]
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * x4[:, :s].astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = dense(y, params["out_proj"], cfg.l2r, cfg.l2r_levels)
+    new_state = {"ssd": final, "conv": new_conv}
+    return out, new_state
+
+
+def ssm_decode(cfg: ModelConfig, params: dict, u: jax.Array, state: dict):
+    """One-token step.  u: (B, 1, d_model); O(1) state update."""
+    d_inner, heads, n, conv_dim = _dims(cfg)
+    bsz = u.shape[0]
+    zxbcdt = dense(u, params["in_proj"], cfg.l2r, cfg.l2r_levels)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], state["conv"])
+    xbc = jax.nn.silu(xbc)
+    x, b, c = jnp.split(xbc[:, 0], [d_inner, d_inner + n], axis=-1)  # (B, .)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-jnp.exp(params["a_log"].astype(jnp.float32)) * dt)  # (B,H)
+
+    xh = x.reshape(bsz, heads, cfg.ssm_head_dim).astype(jnp.float32)
+    dtx = xh * dt[..., None]
+    s_new = state["ssd"] * a[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", b.astype(jnp.float32), dtx
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), s_new)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = dense(y, params["out_proj"], cfg.l2r, cfg.l2r_levels)
+    return out, {"ssd": s_new, "conv": new_conv}

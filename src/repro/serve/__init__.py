@@ -1,0 +1,3 @@
+from .engine import (make_prefill_step, make_decode_step, state_specs,
+                     abstract_state, greedy_generate)
+from .batching import ContinuousBatcher, Request

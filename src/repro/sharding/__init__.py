@@ -1,0 +1,3 @@
+from .axes import (PARAM_RULES, dp_axes, batch_spec, param_specs, zero1_specs,
+                   named, logical_rules, safe_spec)
+from . import ctx

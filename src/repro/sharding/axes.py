@@ -1,0 +1,141 @@
+"""Logical-axis -> mesh-axis rules (GSPMD sharding for params/opt/data).
+
+Production meshes (launch/mesh.py):
+  single pod : (data=16, model=16)            = 256 chips (v5e pod)
+  multi pod  : (pod=2, data=16, model=16)     = 512 chips
+
+Parameter logical axes used by the model zoo:
+  vocab   — embedding/logit vocab dim      -> "model"
+  embed   — the d_model residual dim       -> replicated (activations are
+            batch/sequence-sharded instead; Megatron-style TP)
+  qkv     — flattened heads*head_dim       -> "model"  (all assigned archs
+            divide by 16 even when head counts do not)
+  ffn     — MLP hidden / conv channels     -> "model"
+  experts — MoE expert stack               -> "model"  (64/16, 128/16)
+  layers  — scanned-stack leading axis     -> replicated (candidate for a
+            future pipeline axis)
+
+Optimizer state (AdamW m/v) additionally shards its largest replicated,
+divisible dim over the vacant "data" axis (ZeRO-1) — without this a 27B
+model's optimizer does not fit 16 GB/chip.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import Param, partition_specs
+
+__all__ = [
+    "PARAM_RULES",
+    "dp_axes",
+    "batch_spec",
+    "param_specs",
+    "zero1_specs",
+    "named",
+    "logical_rules",
+]
+
+PARAM_RULES: dict[str, Any] = {
+    "vocab": "model",
+    "embed": None,
+    "qkv": "model",
+    "ffn": "model",
+    "experts": "model",
+    "layers": None,
+}
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def logical_rules(mesh: Mesh) -> dict[str, Any]:
+    return dict(PARAM_RULES)
+
+
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    """Tokens/labels (B, S): batch over DP axes when divisible."""
+    axes = dp_axes(mesh)
+    size = math.prod(mesh.shape[a] for a in axes)
+    if batch_size % size == 0:
+        return P(axes, None)
+    if batch_size % mesh.shape["data"] == 0:
+        return P("data", None)
+    return P(None, None)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def safe_spec(shape: tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop (replicate) any sharded dim the mesh does not divide — e.g.
+    vocab 50280 (mamba2) / 51865 (whisper) are not 16-divisible — and
+    dedupe mesh axes (MoE expert stacks map both 'experts' and 'ffn' to
+    "model"; the leading dim — experts — wins)."""
+    fixed = []
+    used: set = set()
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        if ax is not None:
+            key = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+            if used & set(key):
+                ax = None
+            else:
+                used |= set(key)
+        fixed.append(ax)
+    return P(*fixed)
+
+
+def param_specs(desc_tree, mesh: Mesh):
+    rules = logical_rules(mesh)
+
+    def f(p: Param):
+        spec = P(*(rules.get(a, None) if a is not None else None for a in p.axes))
+        return safe_spec(p.shape, spec, mesh)
+
+    return jax.tree.map(f, desc_tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+def zero1_specs(desc_tree, mesh: Mesh):
+    """Optimizer-state specs: param spec + 'data' on the largest
+    still-replicated dim that divides (ZeRO-1 optimizer sharding)."""
+    rules = logical_rules(mesh)
+    dsize = mesh.shape["data"]
+
+    def f(p: Param):
+        base = safe_spec(
+            p.shape,
+            P(*(rules.get(a, None) if a is not None else None for a in p.axes)),
+            mesh,
+        )
+        spec = list(base)
+        # pick the largest unsharded, divisible dim
+        best, best_dim = None, 0
+        for i, (dim, s) in enumerate(zip(p.shape, spec)):
+            if s is None and dim % dsize == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best is not None:
+            spec[best] = "data"
+        return P(*spec)
+
+    return jax.tree.map(f, desc_tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

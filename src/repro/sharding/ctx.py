@@ -1,0 +1,71 @@
+"""Optional module-level mesh context for intra-model sharding hints.
+
+GSPMD propagates most shardings from the parameter/in-out specs, but a
+few interior tensors (MoE dispatch buffers, router state) propagate badly
+— the baseline deepseek-moe cell is 12x collective-bound because of it.
+When a mesh is installed here, `hint(x, *spec)` pins those tensors;
+without one it is an identity, so single-device tests and the baseline
+dry-run sweeps are unaffected.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Mesh | None = None
+
+__all__ = ["set_mesh", "get_mesh", "hint", "hint_dp"]
+
+
+def set_mesh(mesh: Mesh | None):
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Mesh | None:
+    return _MESH
+
+
+def _axis_size(axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(_MESH.shape[a] for a in axis)
+    return _MESH.shape[axis]
+
+
+def hint(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint(x, P(*spec)) when a mesh is installed;
+    non-divisible dims are silently replicated."""
+    if _MESH is None:
+        return x
+    fixed = []
+    for dim, ax in zip(x.shape, spec + (None,) * (len(x.shape) - len(spec))):
+        if ax is not None and isinstance(ax, (tuple, list)):
+            ax = tuple(a for a in ax if a in _MESH.axis_names) or None
+        if ax is not None and not isinstance(ax, (tuple, list)) \
+                and ax not in _MESH.axis_names:
+            ax = None
+        fixed.append(ax if ax is None or dim % _axis_size(ax) == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*fixed)))
+
+
+def hint_dp(x: jax.Array) -> jax.Array:
+    """Shard dim 0 over the data-parallel axes."""
+    if _MESH is None:
+        return x
+    dp = tuple(a for a in ("pod", "data") if a in _MESH.axis_names)
+    return hint(x, dp)
+
+
+def hint_uneven(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint WITHOUT the divisibility guard: GSPMD
+    pads uneven tiles (e.g. 10 KV heads over a 16-way axis).  Used to
+    head-shard attention where head counts do not divide the mesh."""
+    if _MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*spec)))

@@ -1,0 +1,1 @@
+from .step import TrainConfig, make_train_step, make_loss_fn, chunked_xent, train_step_shardings

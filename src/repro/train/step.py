@@ -1,0 +1,198 @@
+"""Training step factory: loss, grads, AdamW, remat, sequence sharding,
+microbatch accumulation, optional int8 error-feedback grad compression.
+
+Memory discipline for the big cells (gemma3-27b @ 1M tokens/step):
+  * scanned blocks with jax.checkpoint (one block's activations live);
+  * the residual stream is sequence-sharded over "model" between blocks
+    (Megatron-SP: stored remat carries are 16x smaller; XLA inserts the
+    all-gather / reduce-scatter pair around each block);
+  * cross-entropy is computed in sequence chunks under jax.checkpoint —
+    the (tokens, vocab) logits tensor is never materialized whole;
+  * optimizer state is ZeRO-1 sharded over the vacant "data" axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import lm_build, lm_forward
+from repro.models.encdec import encdec_build, encdec_forward
+from repro.optim.adamw import AdamWConfig, OptState, adamw_init, adamw_update
+from repro.optim.compression import EFState, ef_compress_grads, ef_init
+from repro.sharding.axes import batch_spec, dp_axes, named, param_specs, zero1_specs
+
+__all__ = ["TrainConfig", "make_loss_fn", "make_train_step", "train_step_shardings",
+           "chunked_xent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    remat: bool = True
+    seq_shard: bool = True  # sequence-shard residual stream over "model"
+    xent_chunk: int = 512
+    microbatch: int = 1  # gradient-accumulation splits of the global batch
+    ef_compression: bool = False  # int8 error-feedback gradient compression
+    z_loss: float = 1e-4  # logit normalizer regularizer (stability)
+
+
+def chunked_xent(hidden: jax.Array, w_out: jax.Array, labels: jax.Array,
+                 chunk: int = 512, z_loss: float = 0.0):
+    """Mean token cross-entropy without materializing full logits.
+
+    hidden: (B, S, d); w_out: (d, V); labels: (B, S) int32.
+    Scans over S in chunks; each chunk's logits are rematerialized in the
+    backward pass (jax.checkpoint), so peak memory ~ (B, chunk, V-shard).
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hs = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)  # (nc, B, C, d)
+    ls = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, l = xs
+        logits = jnp.einsum("bcd,dv->bcv", h.astype(jnp.float32),
+                            w_out.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        loss = (lse - gold).sum()
+        if z_loss:
+            loss = loss + z_loss * jnp.square(lse).sum()
+        correct = (logits.argmax(-1) == l).sum()
+        return (carry[0] + loss, carry[1] + correct), None
+
+    (total, correct), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hs, ls)
+    )
+    n = b * s
+    return total / n, correct.astype(jnp.float32) / n
+
+
+def _resid_shard_fn(mesh: Mesh | None, tcfg: TrainConfig, batch_size: int):
+    if mesh is None or not tcfg.seq_shard or "model" not in mesh.axis_names:
+        return lambda x: x
+    bspec = batch_spec(mesh, batch_size)[0]
+
+    def f(x):
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, P(bspec, "model", None))
+        )
+    return f
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh | None = None):
+    """loss_fn(params, batch) -> (loss, metrics). Handles all families."""
+
+    def loss_fn(params, batch):
+        bsz = (batch.get("tokens") if "tokens" in batch else batch["embeds"]).shape[0]
+        resid = _resid_shard_fn(mesh, tcfg, bsz)
+        if cfg.family == "encdec":
+            hidden, _, aux = encdec_forward(
+                cfg, params, tokens=batch["tokens"], frames=batch["frames"],
+                mode="train", resid_shard=resid, remat=tcfg.remat,
+            )
+            w_out = params["embed"].T
+        else:
+            hidden, _, aux = lm_forward(
+                cfg, params,
+                tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"),
+                rope_positions=batch.get("rope_positions"),
+                mode="train", resid_shard=resid, remat=tcfg.remat,
+            )
+            w_out = params["embed"].T if cfg.tie_embeddings else params["head"]
+        xent, acc = chunked_xent(hidden, w_out, batch["labels"],
+                                 tcfg.xent_chunk, tcfg.z_loss)
+        loss = xent + aux
+        return loss, {"loss": xent, "aux": aux, "accuracy": acc}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ocfg: AdamWConfig,
+    tcfg: TrainConfig = TrainConfig(),
+    mesh: Mesh | None = None,
+) -> Callable:
+    """(params, opt_state, [ef_state,] batch) -> (params, opt_state, [ef,] metrics).
+
+    Microbatching: the global batch is split on the leading axis and
+    grads are accumulated in f32 before one optimizer step.
+    """
+    loss_fn = make_loss_fn(cfg, tcfg, mesh)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, loss, metrics
+
+    def train_step(params, opt_state, batch, ef_state=None):
+        if tcfg.microbatch > 1:
+            def split(x):
+                return x.reshape(tcfg.microbatch, x.shape[0] // tcfg.microbatch,
+                                 *x.shape[1:])
+            mbatches = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, loss_acc = carry
+                g, loss, _ = single(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mbatches)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatch, grads)
+            loss = loss / tcfg.microbatch
+            metrics = {"loss": loss, "aux": jnp.zeros(()), "accuracy": jnp.zeros(())}
+        else:
+            grads, loss, metrics = single(params, batch)
+
+        if tcfg.ef_compression:
+            assert ef_state is not None
+            grads, ef_state = ef_compress_grads(grads, ef_state)
+
+        params, opt_state, om = adamw_update(ocfg, grads, params, opt_state)
+        metrics = {**metrics, **om}
+        if tcfg.ef_compression:
+            return params, opt_state, ef_state, metrics
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_step_shardings(cfg: ModelConfig, mesh: Mesh, desc_tree,
+                         batch_shapes: dict, ef: bool = False):
+    """(in_shardings, out_shardings) trees for jax.jit over train_step."""
+    pspecs = param_specs(desc_tree, mesh)
+    ospecs = OptState(step=P(), m=zero1_specs(desc_tree, mesh),
+                      v=zero1_specs(desc_tree, mesh))
+    bsz = next(iter(batch_shapes.values())).shape[0]
+    bspec = {}
+    for k, v in batch_shapes.items():
+        if k == "rope_positions":  # (3, B, S)
+            bspec[k] = P(None, batch_spec(mesh, v.shape[1])[0], None)
+        else:
+            bspec[k] = P(*batch_spec(mesh, bsz), *([None] * (len(v.shape) - 2)))
+    metrics_spec = {k: P() for k in
+                    ("loss", "aux", "accuracy", "grad_norm", "lr")}
+    ins = (named(mesh, pspecs), named(mesh, ospecs), named(mesh, bspec))
+    outs = (named(mesh, pspecs), named(mesh, ospecs), named(mesh, metrics_spec))
+    if ef:
+        efspec = EFState(residual=zero1_specs(desc_tree, mesh))
+        ins = ins + (named(mesh, efspec),)
+        outs = (named(mesh, pspecs), named(mesh, ospecs), named(mesh, efspec),
+                named(mesh, metrics_spec))
+    return ins, outs

@@ -1,0 +1,107 @@
+"""Chunked (flash-style) attention vs naive reference; caches; RoPE."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (apply_rope, chunked_attention,
+                                    decode_attention, init_kv_cache,
+                                    update_kv_cache)
+
+
+def naive(q, k, v, causal=True, window=None, softcap=None, q_offset=0):
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    kr = np.repeat(k, g, axis=2)
+    vr = np.repeat(v, g, axis=2)
+    s = np.einsum("bqhd,bshd->bhqs", q, kr).astype(np.float64) / math.sqrt(dh)
+    if softcap:
+        s = np.tanh(s / softcap) * softcap
+    qpos = q_offset + np.arange(sq)
+    kpos = np.arange(skv)
+    mask = np.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None] <= qpos[:, None]
+    if window:
+        mask &= kpos[None] > qpos[:, None] - window
+    s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bhqs,bshd->bqhd", p, vr)
+
+
+CASES = [
+    dict(sq=256, skv=256, h=4, kvh=2, dh=32, causal=True, window=None),
+    dict(sq=256, skv=256, h=4, kvh=1, dh=32, causal=True, window=64),
+    dict(sq=300, skv=300, h=6, kvh=3, dh=16, causal=True, window=100),
+    dict(sq=128, skv=384, h=4, kvh=4, dh=32, causal=True, window=None, off=256),
+    dict(sq=200, skv=200, h=2, kvh=2, dh=8, causal=False, window=None),
+    dict(sq=256, skv=256, h=4, kvh=2, dh=32, causal=True, window=None, softcap=30.0),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_chunked_vs_naive(case):
+    rng = np.random.default_rng(1)
+    q = rng.standard_normal((2, case["sq"], case["h"], case["dh"])).astype(np.float32)
+    k = rng.standard_normal((2, case["skv"], case["kvh"], case["dh"])).astype(np.float32)
+    v = rng.standard_normal((2, case["skv"], case["kvh"], case["dh"])).astype(np.float32)
+    out = chunked_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        causal=case["causal"], window=case["window"],
+        softcap=case.get("softcap"), q_chunk=96, kv_chunk=64,
+        q_offset=case.get("off", 0),
+    )
+    ref = naive(q, k, v, case["causal"], case["window"],
+                case.get("softcap"), case.get("off", 0))
+    np.testing.assert_allclose(np.asarray(out), ref, atol=3e-5)
+
+
+def test_ring_cache_equals_window_attention():
+    rng = np.random.default_rng(2)
+    b, h, kvh, dh, window, total = 2, 4, 2, 32, 32, 100
+    ks = rng.standard_normal((b, total, kvh, dh)).astype(np.float32)
+    vs = rng.standard_normal((b, total, kvh, dh)).astype(np.float32)
+    pos = np.tile(np.arange(total), (b, 1)).astype(np.int32)
+    cache = init_kv_cache(b, window, kvh, dh, jnp.float32)
+    cache = update_kv_cache(cache, jnp.asarray(ks), jnp.asarray(vs), jnp.asarray(pos))
+    q = rng.standard_normal((b, 1, h, dh)).astype(np.float32)
+    out = decode_attention(jnp.asarray(q), cache.k, cache.v, cache.positions,
+                           jnp.full((b,), total - 1, jnp.int32), window=window)
+    full_q = np.zeros((b, total, h, dh), np.float32)
+    full_q[:, -1:] = q
+    ref = naive(full_q, ks, vs, True, window)[:, -1:]
+    np.testing.assert_allclose(np.asarray(out), ref, atol=3e-5)
+
+
+def test_rope_relative_property():
+    """<R(p)q, R(p+delta)k> must depend only on delta."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 32)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 32)).astype(np.float32))
+
+    def score(p0, p1):
+        qr = apply_rope(q, jnp.asarray([[p0]], jnp.int32))
+        kr = apply_rope(k, jnp.asarray([[p1]], jnp.int32))
+        return float(jnp.sum(qr * kr))
+
+    assert score(0, 5) == pytest.approx(score(100, 105), rel=1e-4)
+    assert score(3, 3) == pytest.approx(score(77, 77), rel=1e-4)
+
+
+def test_mrope_sections_differ_from_standard():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((1, 4, 2, 16)).astype(np.float32))
+    p1 = jnp.asarray(np.arange(4)[None], jnp.int32)
+    std = apply_rope(x, p1)
+    p3 = jnp.stack([p1, jnp.zeros_like(p1), jnp.zeros_like(p1)])
+    mr = apply_rope(x, p3, mode="mrope", sections=(4, 2, 2))
+    assert not np.allclose(np.asarray(std), np.asarray(mr))
+    # with all three streams equal, mrope == standard rope
+    p3_same = jnp.stack([p1, p1, p1])
+    mr_same = apply_rope(x, p3_same, mode="mrope", sections=(4, 2, 2))
+    np.testing.assert_allclose(np.asarray(std), np.asarray(mr_same), atol=1e-6)

@@ -1,0 +1,91 @@
+"""Reproduction checks for the paper's Tables I and II (cycle + hw model)."""
+
+import math
+
+import pytest
+
+from repro.core.cycle_model import (AcceleratorConfig, VGG16_CONV_LAYERS,
+                                    inference_seconds, layer_cycles,
+                                    network_cycles, peak_gops)
+from repro.core import hw_model
+
+
+def test_vgg16_layer_table():
+    assert len(VGG16_CONV_LAYERS) == 13
+    total_macs = sum(l.macs for l in VGG16_CONV_LAYERS)
+    # VGG-16 conv MACs ~ 15.35G (published figure ~15.3G)
+    assert abs(total_macs - 15.35e9) / 15.35e9 < 0.02
+
+
+def test_cycle_formula_matches_paper_example():
+    cfg = AcceleratorConfig()
+    l1 = VGG16_CONV_LAYERS[0]  # conv1_1: 224x224x3 -> 64
+    c = layer_cycles(l1, cfg, l2r=True)
+    # (n^2+delta) * (9 + ceil(3/8)) * ceil(224*224/64) * 64
+    assert c == (64 + 11) * 10 * 784 * 64
+
+
+def test_peak_gops_reproduces_table2():
+    # L2R: paper prints 48.97 GOPS; the formula with delta_Mult=11 gives
+    # 49.15 (0.4% — documented in DESIGN.md §7). Baseline is exact.
+    assert abs(peak_gops(l2r=True) - 48.97) / 48.97 < 0.005
+    assert peak_gops(l2r=False) == pytest.approx(14.40)
+
+
+def test_speedup_reproduces_paper_3p40x():
+    s = network_cycles(l2r=False) / network_cycles(l2r=True)
+    assert abs(s - 3.40) < 0.02  # paper: 3.40x for VGG-16
+
+
+def test_table1_calibrated_area_power_exact():
+    t1 = hw_model.table1()
+    for design in ("baseline", "l2r_cipu"):
+        assert t1[design]["area_um2"] == pytest.approx(
+            hw_model.PAPER_TABLE1[design]["area_um2"], rel=1e-6)
+        assert t1[design]["power_mw"] == pytest.approx(
+            hw_model.PAPER_TABLE1[design]["power_mw"], rel=1e-6)
+
+
+def test_table1_latency_predicted_within_10pct():
+    t1 = hw_model.table1()
+    for design in ("baseline", "l2r_cipu"):
+        model = t1[design]["latency_ns"]
+        paper = hw_model.PAPER_TABLE1[design]["latency_ns"]
+        assert abs(model - paper) / paper < 0.10, (design, model, paper)
+
+
+def test_table2_derived_columns():
+    t2 = hw_model.table2()
+    p = hw_model.PAPER_TABLE2
+    # TOPS/W: model vs paper (paper rounds to 2 decimals)
+    assert t2["l2r_cipu"]["tops_w"] == pytest.approx(p["l2r_cipu"]["tops_w"], abs=0.02)
+    assert t2["baseline"]["tops_w"] == pytest.approx(p["baseline"]["tops_w"], abs=0.02)
+    # GOPS/mm^2 (paper's "TOPS/mm2" column is numerically GOPS/mm^2)
+    assert t2["l2r_cipu"]["gops_mm2"] == pytest.approx(p["l2r_cipu"]["gops_mm2"], rel=0.01)
+    assert t2["baseline"]["gops_mm2"] == pytest.approx(p["baseline"]["gops_mm2"], rel=0.01)
+
+
+def test_energy_and_area_gains_vs_external_designs():
+    """The paper's headline multiples vs [4] (Cheng) and [5] (Eyeriss)."""
+    t2 = hw_model.table2()
+    p = hw_model.PAPER_TABLE2
+    perf_vs_cheng = t2["l2r_cipu"]["gops"] / p["cheng2024"]["gops"]
+    assert abs(perf_vs_cheng - 6.22) / 6.22 < 0.02  # paper: 6.22x
+    energy_vs_cheng = t2["l2r_cipu"]["tops_w"] / p["cheng2024"]["tops_w"]
+    assert 14 < energy_vs_cheng < 16.5  # paper: 15x
+    perf_vs_eyeriss = t2["l2r_cipu"]["gops"] / p["eyeriss"]["gops"]
+    assert abs(perf_vs_eyeriss - 1.06) / 1.06 < 0.02  # paper: 1.06x
+    area_vs_eyeriss = t2["l2r_cipu"]["gops_mm2"] / p["eyeriss"]["gops_mm2"]
+    assert abs(area_vs_eyeriss - 53.45) / 53.45 < 0.02  # paper: 53.45x
+    area_vs_cheng = t2["l2r_cipu"]["gops_mm2"] / p["cheng2024"]["gops_mm2"]
+    assert abs(area_vs_cheng - 10.4) / 10.4 < 0.05
+
+
+def test_documented_inference_time_discrepancy():
+    """The paper prints 0.86 ms for VGG-16 but its own Cycle_P formula
+    gives ~1.02 s on one 8x8 tile — we reproduce the formula value and
+    document the discrepancy (DESIGN.md §7)."""
+    t = inference_seconds(l2r=True)
+    assert 0.9 < t < 1.1  # formula-faithful value, seconds
+    ratio = inference_seconds(l2r=False) / t
+    assert abs(ratio - 3.41) < 0.02  # the *ratio* matches the paper

@@ -1,0 +1,65 @@
+"""Trip-count-aware HLO analyzer vs known-FLOP programs (1 CPU device)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _hlo(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops_exact():
+    m, k, n = 64, 128, 32
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    res = analyze(_hlo(lambda x, y: x @ y, a, b))
+    assert res["flops"] == pytest.approx(2 * m * k * n, rel=1e-6)
+
+
+def test_scan_multiplies_by_trip_count():
+    m = 32
+    a = jax.ShapeDtypeStruct((m, m), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ x, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    res = analyze(_hlo(f, a))
+    assert res["flops"] == pytest.approx(7 * 2 * m ** 3, rel=0.01)
+
+
+def test_nested_scan():
+    m = 16
+    a = jax.ShapeDtypeStruct((m, m), jnp.float32)
+
+    def f(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ x, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    res = analyze(_hlo(f, a))
+    assert res["flops"] == pytest.approx(15 * 2 * m ** 3, rel=0.01)
+
+
+def test_bytes_scale_with_result_sizes():
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    small = analyze(_hlo(lambda x, y: x @ y, a, a))
+    b = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    big = analyze(_hlo(lambda x, y: x @ y, b, b))
+    assert big["bytes"] > 3 * small["bytes"]
+
+
+def test_no_collectives_on_single_device():
+    a = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    res = analyze(_hlo(lambda x: x * 2 + 1, a))
+    assert res["total_wire_bytes"] == 0

@@ -1,0 +1,85 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracle.
+
+The kernel is int32-exact, so assertions are bit-equality (the strongest
+possible allclose).  interpret=True executes the kernel body on CPU.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.l2r_gemm import (int_gemm_ref, l2r_gemm, l2r_gemm_ref,
+                                    l2r_matmul_f)
+
+SHAPES = [
+    (128, 256, 128),   # exactly one block
+    (256, 512, 256),   # multi-block every axis
+    (64, 64, 64),      # smaller than a block (padding path)
+    (130, 300, 77),    # ragged
+    (1, 256, 128),     # single row
+    (128, 32, 512),    # shallow K
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_kernel_exact_int8(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k + n)
+    a = rng.integers(-128, 128, size=(m, k), dtype=np.int8)
+    b = rng.integers(-128, 128, size=(k, n), dtype=np.int8)
+    out = l2r_gemm(jnp.asarray(a), jnp.asarray(b))
+    ref = int_gemm_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("log2_radix", [1, 2, 4])
+def test_kernel_radix_sweep(log2_radix):
+    rng = np.random.default_rng(42)
+    a = rng.integers(-128, 128, size=(128, 256), dtype=np.int8)
+    b = rng.integers(-128, 128, size=(256, 128), dtype=np.int8)
+    out = l2r_gemm(jnp.asarray(a), jnp.asarray(b), log2_radix=log2_radix)
+    ref = int_gemm_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("levels", list(range(1, 8)))
+def test_kernel_progressive_levels_match_oracle(levels):
+    rng = np.random.default_rng(levels)
+    a = rng.integers(-128, 128, size=(128, 256), dtype=np.int8)
+    b = rng.integers(-128, 128, size=(256, 128), dtype=np.int8)
+    out = l2r_gemm(jnp.asarray(a), jnp.asarray(b), levels=levels)
+    ref = l2r_gemm_ref(jnp.asarray(a), jnp.asarray(b), levels=levels)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_kernel_progressive_error_decreases():
+    rng = np.random.default_rng(5)
+    a = rng.integers(-128, 128, size=(128, 256), dtype=np.int8)
+    b = rng.integers(-128, 128, size=(256, 128), dtype=np.int8)
+    exact = np.asarray(int_gemm_ref(jnp.asarray(a), jnp.asarray(b)), np.int64)
+    errs = []
+    for lv in range(1, 8):
+        out = np.asarray(l2r_gemm(jnp.asarray(a), jnp.asarray(b), levels=lv), np.int64)
+        errs.append(np.abs(out - exact).max())
+    assert errs[-1] == 0
+    assert all(e1 >= e2 for e1, e2 in zip(errs, errs[1:]))
+
+
+@pytest.mark.parametrize("n_bits,dtype", [(8, np.int8), (6, np.int8), (4, np.int8)])
+def test_kernel_bitwidth_sweep(n_bits, dtype):
+    rng = np.random.default_rng(n_bits)
+    lo, hi = -(1 << (n_bits - 1)), 1 << (n_bits - 1)
+    a = rng.integers(lo, hi, size=(128, 256), dtype=dtype)
+    b = rng.integers(lo, hi, size=(256, 128), dtype=dtype)
+    out = l2r_gemm(jnp.asarray(a), jnp.asarray(b), n_bits=n_bits, log2_radix=2)
+    ref = int_gemm_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_float_wrapper_close_to_matmul():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((64, 256)).astype(np.float32)
+    w = rng.standard_normal((256, 96)).astype(np.float32)
+    out = np.asarray(l2r_matmul_f(jnp.asarray(x), jnp.asarray(w)))
+    ref = x @ w
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert rel < 0.02, rel  # int8 W8A8 quantization error

@@ -1,0 +1,127 @@
+"""Mixer layers: SSD vs naive recurrence, RG-LRU, MoE routing invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import materialize
+from repro.models.config import ModelConfig
+from repro.models.moe import moe_apply, moe_build, moe_capacity
+from repro.models.rglru import (init_rglru_state, rglru_apply, rglru_build,
+                                rglru_decode)
+from repro.models.ssm import (init_ssm_state, ssd_chunked, ssm_apply,
+                              ssm_build, ssm_decode)
+
+
+def test_ssd_chunked_vs_naive_recurrence():
+    rng = np.random.default_rng(3)
+    B, S, H, P, N = 2, 64, 3, 8, 16
+    x = rng.standard_normal((B, S, H, P)).astype(np.float32)
+    dt = np.abs(rng.standard_normal((B, S, H))).astype(np.float32) * 0.5
+    a = -np.abs(rng.standard_normal((B, S, H))).astype(np.float32) * 0.3
+    bm = rng.standard_normal((B, S, N)).astype(np.float32) * 0.3
+    cm = rng.standard_normal((B, S, N)).astype(np.float32) * 0.3
+    y, fin = ssd_chunked(*(jnp.asarray(t) for t in (x, dt, a, bm, cm)), chunk=16)
+    state = np.zeros((B, H, N, P))
+    ys = []
+    for t in range(S):
+        state = state * np.exp(a[:, t])[..., None, None] + np.einsum(
+            "bn,bhp->bhnp", bm[:, t], x[:, t] * dt[:, t][..., None])
+        ys.append(np.einsum("bn,bhnp->bhp", cm[:, t], state))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(fin), state, atol=1e-3)
+
+
+@pytest.fixture
+def ssm_cfg():
+    return ModelConfig(name="m", family="ssm", n_layers=1, d_model=32,
+                       n_heads=4, n_kv=4, d_ff=0, vocab=64,
+                       layer_pattern=("ssd",), ffn_pattern=("none",),
+                       ssm_state=16, ssm_head_dim=8, ssm_chunk=16,
+                       compute_dtype="float32")
+
+
+def test_ssm_decode_matches_full(ssm_cfg):
+    params = materialize(ssm_build(ssm_cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    u = jnp.asarray(rng.standard_normal((2, 24, 32)).astype(np.float32))
+    yfull, _ = ssm_apply(ssm_cfg, params, u)
+    _, st = ssm_apply(ssm_cfg, params, u[:, :23])
+    ydec, _ = ssm_decode(ssm_cfg, params, u[:, 23:24], st)
+    np.testing.assert_allclose(np.asarray(yfull[:, 23:24]), np.asarray(ydec),
+                               atol=2e-3)
+
+
+def test_rglru_decode_matches_full():
+    cfg = ModelConfig(name="r", family="hybrid", n_layers=1, d_model=32,
+                      n_heads=2, n_kv=1, d_ff=64, vocab=64,
+                      layer_pattern=("rec",), lru_width=48,
+                      compute_dtype="float32")
+    params = materialize(rglru_build(cfg), jax.random.PRNGKey(1))
+    rng = np.random.default_rng(6)
+    u = jnp.asarray(rng.standard_normal((2, 24, 32)).astype(np.float32))
+    yfull, _ = rglru_apply(cfg, params, u)
+    ypre, st = rglru_apply(cfg, params, u[:, :23])
+    np.testing.assert_allclose(np.asarray(yfull[:, :23]), np.asarray(ypre),
+                               atol=1e-4)
+    ydec, _ = rglru_decode(cfg, params, u[:, 23:24], st)
+    np.testing.assert_allclose(np.asarray(yfull[:, 23:24]), np.asarray(ydec),
+                               atol=2e-3)
+
+
+def test_rglru_state_bounded():
+    """|h| stays bounded (|a|<1 and sqrt(1-a^2) input normalization)."""
+    cfg = ModelConfig(name="r", family="hybrid", n_layers=1, d_model=16,
+                      n_heads=2, n_kv=1, d_ff=32, vocab=64,
+                      layer_pattern=("rec",), lru_width=16,
+                      compute_dtype="float32")
+    params = materialize(rglru_build(cfg), jax.random.PRNGKey(2))
+    rng = np.random.default_rng(7)
+    st = init_rglru_state(cfg, 1)
+    for _ in range(50):
+        u = jnp.asarray(rng.standard_normal((1, 1, 16)).astype(np.float32)) * 3
+        _, st = rglru_decode(cfg, params, u, st)
+    assert np.abs(np.asarray(st["h"])).max() < 50
+
+
+@pytest.fixture
+def moe_cfg():
+    return ModelConfig(name="moe", family="moe", n_layers=1, d_model=16,
+                       n_heads=2, n_kv=1, d_ff=32, vocab=64,
+                       ffn_pattern=("moe",), n_experts=8,
+                       experts_per_token=2, moe_d_ff=24,
+                       n_shared_experts=1, capacity_factor=2.0,
+                       compute_dtype="float32")
+
+
+def test_moe_output_finite_and_aux(moe_cfg):
+    params = materialize(moe_build(moe_cfg), jax.random.PRNGKey(3))
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((2, 10, 16)).astype(np.float32))
+    y, aux = moe_apply(moe_cfg, params, x)
+    assert y.shape == (2, 10, 16)
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_scale(moe_cfg):
+    assert moe_capacity(moe_cfg, 64) == 32  # 2*64/8 * 2.0
+    import dataclasses
+    tight = dataclasses.replace(moe_cfg, capacity_factor=0.5)
+    assert moe_capacity(tight, 64) == 8
+
+
+def test_moe_permutation_equivariance(moe_cfg):
+    """Shuffling tokens shuffles outputs identically when capacity is
+    dropless (routing is per-token)."""
+    import dataclasses
+    cfg = dataclasses.replace(moe_cfg, capacity_factor=8.0)
+    params = materialize(moe_build(cfg), jax.random.PRNGKey(4))
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((1, 12, 16)).astype(np.float32)
+    y, _ = moe_apply(cfg, params, jnp.asarray(x))
+    perm = rng.permutation(12)
+    y2, _ = moe_apply(cfg, params, jnp.asarray(x[:, perm]))
+    np.testing.assert_allclose(np.asarray(y)[:, perm], np.asarray(y2),
+                               atol=1e-4)

@@ -1,0 +1,78 @@
+"""Property tests (hypothesis) for the L2R arithmetic core invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.online import msdf_levels, msdf_pairs, online_delay, tail_bound
+from repro.core.quant import (QuantConfig, dequantize, digit_planes,
+                              from_digit_planes, quantize)
+
+
+@given(st.integers(1, 4))
+def test_msdf_pairs_complete_and_ordered(log2r):
+    n_bits = 8 if log2r != 3 else 6
+    d = n_bits // log2r
+    pairs = msdf_pairs(d)
+    assert len(pairs) == d * d  # every (i, j) exactly once
+    assert len(set(pairs)) == d * d
+    sigs = [i + j for i, j in pairs]
+    assert sigs == sorted(sigs, reverse=True)  # MSDF order
+
+
+@given(st.lists(st.integers(-128, 127), min_size=1, max_size=64),
+       st.sampled_from([1, 2, 4]))
+@settings(max_examples=50, deadline=None)
+def test_digit_plane_roundtrip(vals, log2r):
+    x = jnp.asarray(np.array(vals, np.int8))
+    pl = digit_planes(x, 8, log2r)
+    assert pl.shape[0] == 8 // log2r
+    rec = from_digit_planes(pl, log2r)
+    np.testing.assert_array_equal(np.asarray(rec), np.array(vals, np.int32))
+
+
+@given(st.integers(0, 6))
+@settings(max_examples=20, deadline=None)
+def test_tail_bound_monotone_decreasing(lv):
+    d = 4
+    b0 = tail_bound(d, lv, 2, k=16)
+    b1 = tail_bound(d, lv + 1, 2, k=16)
+    assert b1 <= b0
+    assert tail_bound(d, 2 * d - 1, 2, k=16) == 0  # full stream -> exact
+
+
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=4, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_quantize_error_bound(vals):
+    x = jnp.asarray(np.array(vals, np.float32)).reshape(1, -1)
+    cfg = QuantConfig(per_channel=False)
+    q, scale = quantize(x, cfg)
+    err = np.abs(np.asarray(dequantize(q, scale)) - np.asarray(x))
+    assert (err <= np.asarray(scale) * 0.5 + 1e-7).all()
+
+
+def test_online_delay_small():
+    # the online delay of the plane stream is a small constant, like the
+    # paper's delta_Mult (radix-4, n=8: a few levels)
+    d = online_delay(8, 2)
+    assert 1 <= d <= 7
+    assert online_delay(8, 4) <= d + 1
+
+
+@given(st.integers(1, 200), st.integers(1, 1000))
+@settings(max_examples=30, deadline=None)
+def test_tail_bound_is_valid_bound(seed, k):
+    """Randomized check: |exact - truncated| <= tail_bound at every level."""
+    from repro.core.l2r_gemm import l2r_matmul_int
+
+    rng = np.random.default_rng(seed)
+    kk = min(k, 64)
+    a = rng.integers(-128, 128, size=(2, kk), dtype=np.int8)
+    b = rng.integers(-128, 128, size=(kk, 3), dtype=np.int8)
+    exact = a.astype(np.int64) @ b.astype(np.int64)
+    for lv in range(1, 8):
+        out = np.asarray(l2r_matmul_int(jnp.asarray(a), jnp.asarray(b),
+                                        8, 2, levels=lv), np.int64)
+        bound = tail_bound(4, lv, 2, kk)
+        assert (np.abs(exact - out) <= bound).all(), lv

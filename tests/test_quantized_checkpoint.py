@@ -1,0 +1,76 @@
+"""L2R-quantized checkpoints: size halving + bounded round-trip error +
+direct serving from the quantized pytree."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.quantized import (load_quantized, quantized_nbytes,
+                                        save_quantized)
+from repro.configs import get_smoke
+from repro.models.common import materialize, quantize_params
+from repro.models.transformer import lm_build, lm_forward
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke("smollm-135m")
+    desc = lm_build(cfg)
+    params = materialize(desc, jax.random.PRNGKey(0))
+    return cfg, desc, params
+
+
+def test_quantized_checkpoint_smaller(tmp_path, model):
+    cfg, desc, params = model
+    q = save_quantized(desc, params, str(tmp_path / "q.npz"))
+    full = quantized_nbytes(params)
+    quant = quantized_nbytes(q)
+    assert quant < 0.45 * full  # f32 -> int8 (+ scales + kept f32 leaves)
+
+
+def test_quantized_roundtrip_error_bounded(tmp_path, model):
+    cfg, desc, params = model
+    path = str(tmp_path / "q.npz")
+    save_quantized(desc, params, path)
+    restored = load_quantized(desc, params, path, dequantize=True)
+    from repro.models.common import Param, _is_param, _quantizable
+
+    flat_d = jax.tree.leaves(desc, is_leaf=_is_param)
+    for d, a, b in zip(flat_d, jax.tree.leaves(params),
+                       jax.tree.leaves(restored)):
+        err = np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))
+        if _quantizable(d):
+            bound = np.abs(np.asarray(a)).max() / 127.0 * 0.5 + 1e-6
+            assert err.max() <= bound * 1.01, d.shape
+        else:
+            assert err.max() == 0  # norms/embeds stored exactly
+
+
+def test_serve_directly_from_quantized(tmp_path, model):
+    """The restored {"q","scale"} pytree feeds dense() with no dequant
+    pass — the L2R serving path end to end through a checkpoint."""
+    cfg, desc, params = model
+    path = str(tmp_path / "q.npz")
+    save_quantized(desc, params, path)
+    qparams = load_quantized(desc, params, path, dequantize=False)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    h_f, _, _ = lm_forward(cfg, params, tokens=toks, mode="train")
+    h_q, _, _ = lm_forward(cfg, qparams, tokens=toks, mode="train")
+    rel = (np.abs(np.asarray(h_f, np.float32) - np.asarray(h_q, np.float32)).max()
+           / (np.abs(np.asarray(h_f, np.float32)).max() + 1e-9))
+    assert rel < 0.35, rel  # W8A8 noise through 6 layers
+
+
+def test_quantize_params_matches_quantize_desc_structure(model):
+    cfg, desc, params = model
+    from repro.models.common import quantize_desc
+
+    qdesc = quantize_desc(desc)
+    qparams = quantize_params(desc, params)
+    s1 = jax.tree_util.tree_structure(
+        jax.tree.map(lambda _: 0, qdesc,
+                     is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes")))
+    s2 = jax.tree_util.tree_structure(jax.tree.map(lambda _: 0, qparams))
+    assert s1 == s2

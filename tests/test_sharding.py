@@ -1,0 +1,110 @@
+"""Sharding rules + a real multi-device pjit train step (subprocess with
+8 fake host devices — the main process must keep seeing 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models.transformer import lm_build
+from repro.sharding.axes import safe_spec, zero1_specs
+
+
+def test_param_specs_divisible_everywhere():
+    """Every sharded dim of every assigned arch divides the 16-way axis
+    (this is what safe_spec guarantees structurally)."""
+    import repro.sharding.axes as ax
+    from repro.configs import ARCHS
+    from repro.models.encdec import encdec_build
+
+    class FakeMesh:  # avoid touching jax device state for the mesh
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        desc = encdec_build(cfg) if cfg.family == "encdec" else lm_build(cfg)
+        specs = ax.param_specs(desc, FakeMesh())
+        from repro.models.common import Param
+        flat_d = jax.tree.leaves(desc, is_leaf=lambda x: isinstance(x, Param))
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        for d, s in zip(flat_d, flat_s):
+            for dim, axis in zip(d.shape, tuple(s)):
+                if axis is not None:
+                    size = (np.prod([16 for _ in axis])
+                            if isinstance(axis, tuple) else 16)
+                    assert dim % size == 0, (arch, d.shape, s)
+
+
+def test_safe_spec_drops_and_dedupes():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    assert safe_spec((50280, 768), P("model", None), FakeMesh()) == P(None, None)
+    assert safe_spec((64, 2048, 1408), P("model", None, "model"), FakeMesh()) \
+        == P("model", None, None)
+    assert safe_spec((512, 512), P("model", "data"), FakeMesh()) == P("model", "data")
+
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np, json, dataclasses
+    from repro.configs import get_smoke
+    from repro.models.common import materialize
+    from repro.models.transformer import lm_build
+    from repro.optim.adamw import AdamWConfig, adamw_init
+    from repro.train.step import TrainConfig, make_train_step, train_step_shardings
+    from repro.launch.mesh import make_local_mesh
+
+    assert len(jax.devices()) == 8
+    mesh = make_local_mesh(data=4, model=2)
+    cfg = get_smoke("smollm-135m")
+    cfg = dataclasses.replace(cfg, d_model=64, d_ff=128, n_layers=2)
+    desc = lm_build(cfg)
+    params = materialize(desc, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3), TrainConfig(
+        remat=True, seq_shard=True, xent_chunk=16), mesh)
+    batch_shapes = {
+        "tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+    }
+    ins, outs = train_step_shardings(cfg, mesh, desc, batch_shapes)
+    rng = np.random.default_rng(0)
+    batch = {k: jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)), jnp.int32)
+             for k in ("tokens", "labels")}
+    fn = jax.jit(step, in_shardings=ins, out_shardings=outs)
+    p2, o2, m = fn(params, opt, batch)
+    # reference: single-device result must match the sharded result
+    m_ref = jax.jit(step)(params, opt, batch)[2]
+    print(json.dumps({
+        "loss": float(m["loss"]),
+        "loss_ref": float(m_ref["loss"]),
+        "grad_norm": float(m["grad_norm"]),
+    }))
+""")
+
+
+@pytest.mark.slow
+def test_multidevice_train_step_matches_single_device(tmp_path):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SUBPROC], capture_output=True,
+                         text=True, cwd=os.path.dirname(os.path.dirname(__file__)),
+                         env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert np.isfinite(res["loss"])
+    assert res["loss"] == pytest.approx(res["loss_ref"], rel=2e-2), res

@@ -1,0 +1,108 @@
+"""End-to-end training behaviour: loss decreases, microbatch equivalence,
+gradient compression convergence, chunked xent == full xent."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.data.pipeline import DataConfig, ShardedPipeline
+from repro.models.common import materialize
+from repro.models.transformer import lm_build
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.optim.compression import ef_init
+from repro.train.step import TrainConfig, chunked_xent, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("smollm-135m")
+    cfg = dataclasses.replace(cfg, vocab=128)
+    params = materialize(lm_build(cfg), jax.random.PRNGKey(0))
+    dcfg = DataConfig(vocab=128, seq_len=32, global_batch=8, structure=0.95)
+    return cfg, params, dcfg
+
+
+def _run(cfg, params, dcfg, tcfg, n_steps=30, ef=False):
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=n_steps,
+                       weight_decay=0.0)
+    step = jax.jit(make_train_step(cfg, ocfg, tcfg))
+    opt = adamw_init(params)
+    efs = ef_init(params) if ef else None
+    pipe = ShardedPipeline(dcfg)
+    losses = []
+    p = params
+    for _ in range(n_steps):
+        b = next(pipe)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if ef:
+            p, opt, efs, m = step(p, opt, batch, efs)
+        else:
+            p, opt, m = step(p, opt, batch)
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_loss_decreases(setup):
+    cfg, params, dcfg = setup
+    losses = _run(cfg, params, dcfg, TrainConfig(remat=False, seq_shard=False,
+                                                 xent_chunk=32))
+    # 30 steps on the structured stream: clear descent from ln(128)=4.85
+    assert losses[-1] < losses[0] - 0.4, losses[::5]
+
+
+def test_remat_equals_noremat(setup):
+    cfg, params, dcfg = setup
+    l1 = _run(cfg, params, dcfg, TrainConfig(remat=False, seq_shard=False,
+                                             xent_chunk=32), n_steps=3)
+    l2 = _run(cfg, params, dcfg, TrainConfig(remat=True, seq_shard=False,
+                                             xent_chunk=32), n_steps=3)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4)
+
+
+def test_microbatch_accumulation_close(setup):
+    cfg, params, dcfg = setup
+    l1 = _run(cfg, params, dcfg, TrainConfig(remat=False, seq_shard=False,
+                                             xent_chunk=32), n_steps=3)
+    l4 = _run(cfg, params, dcfg, TrainConfig(remat=False, seq_shard=False,
+                                             xent_chunk=32, microbatch=4),
+              n_steps=3)
+    # same data, grads averaged over microbatches -> same trajectory
+    np.testing.assert_allclose(l1[0], l4[0], rtol=1e-3)
+
+
+def test_ef_compression_still_converges(setup):
+    cfg, params, dcfg = setup
+    losses = _run(cfg, params, dcfg,
+                  TrainConfig(remat=False, seq_shard=False, xent_chunk=32,
+                              ef_compression=True), ef=True)
+    # int8 EF compression must not break the descent
+    assert losses[-1] < losses[0] - 0.35, losses[::5]
+
+
+def test_chunked_xent_equals_full():
+    rng = np.random.default_rng(0)
+    b, s, d, v = 2, 32, 16, 50
+    hidden = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    full_logits = np.asarray(hidden @ w, np.float64)
+    lse = np.log(np.exp(full_logits - full_logits.max(-1, keepdims=True)).sum(-1)) \
+        + full_logits.max(-1)
+    gold = np.take_along_axis(full_logits, np.asarray(labels)[..., None], -1)[..., 0]
+    ref = (lse - gold).mean()
+    for chunk in (4, 8, 32):
+        loss, acc = chunked_xent(hidden, w, labels, chunk=chunk, z_loss=0.0)
+        assert float(loss) == pytest.approx(float(ref), rel=1e-5), chunk
+
+
+def test_grad_of_chunked_xent_finite():
+    rng = np.random.default_rng(1)
+    hidden = jnp.asarray(rng.standard_normal((2, 16, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 30)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 30, (2, 16)), jnp.int32)
+    g = jax.grad(lambda h: chunked_xent(h, w, labels, chunk=8)[0])(hidden)
+    assert np.isfinite(np.asarray(g)).all()
