@@ -10,6 +10,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * kernel_*    — wall-time microbenches of the digit-plane GEMM paths on
                   this host (CPU; interpret-mode Pallas excluded from
                   timing claims, jnp reference path timed);
+  * kernel_stacked_* — pair-loop vs level-stacked schedule (the PR's
+                  restructured execution order: 2D-1 fused level matmuls
+                  instead of D² pair passes), jnp production path timed,
+                  pallas-interpret validated; rows also land in
+                  BENCH_l2r_gemm.json for the cross-PR perf trajectory;
   * ipu_*       — cycle-accurate CIPU simulator throughput;
   * online_*    — progressive-precision early-exit statistics.
 
@@ -116,6 +121,70 @@ def kernel_bench():
              f"planes=6pairs progressive=True")
 
 
+def kernel_stacked_bench(json_path: str | None = None):
+    """Pair-loop vs level-stacked schedule + backend dispatch regression.
+
+    Emits kernel_stacked_* CSV rows and (optionally) a machine-readable
+    BENCH_l2r_gemm.json so future PRs can diff the perf trajectory.
+    """
+    import json
+
+    from repro.kernels.l2r_gemm import (l2r_gemm, l2r_gemm_ref,
+                                        l2r_gemm_ref_stacked)
+
+    rng = np.random.default_rng(0)
+    records = []
+    for (m, k, n) in [(256, 512, 256), (512, 1024, 512)]:
+        a = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+        b = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+        for levels, tag in [(None, "full"), (3, "lv3")]:
+            f_pair = jax.jit(lambda x, y, lv=levels: l2r_gemm_ref(x, y, levels=lv))
+            f_stack = jax.jit(
+                lambda x, y, lv=levels: l2r_gemm_ref_stacked(x, y, levels=lv))
+            us_pair = _timeit(lambda: jax.block_until_ready(f_pair(a, b)))
+            us_stack = _timeit(lambda: jax.block_until_ready(f_stack(a, b)))
+            exact = bool(
+                (np.asarray(f_pair(a, b)) == np.asarray(f_stack(a, b))).all())
+            emit(f"kernel_stacked_jnp_{tag}_{m}x{k}x{n}", us_stack,
+                 f"pair_us={us_pair:.1f} speedup={us_pair/us_stack:.2f}x "
+                 f"bit_exact={exact}")
+            records.append({
+                "name": f"jnp_{tag}_{m}x{k}x{n}", "m": m, "k": k, "n": n,
+                "levels": levels, "backend": "jnp",
+                "pair_us": us_pair, "stacked_us": us_stack,
+                "speedup": us_pair / us_stack, "bit_exact": exact,
+            })
+    # Pallas interpret mode: correctness-only (CPU interpretation is not a
+    # timing signal) — one small shape, both schedules vs the jnp oracle.
+    m, k, n = 128, 256, 128
+    a = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+    b = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+    ref = np.asarray(l2r_gemm_ref(a, b))
+    for sched in ("pairs", "stacked"):
+        out = np.asarray(l2r_gemm(a, b, schedule=sched,
+                                  backend="pallas-interpret"))
+        exact = bool((out == ref).all())
+        emit(f"kernel_stacked_pallas_interpret_{sched}_{m}x{k}x{n}",
+             "untimed", f"bit_exact={exact}")
+        records.append({
+            "name": f"pallas_interpret_{sched}_{m}x{k}x{n}",
+            "m": m, "k": k, "n": n, "levels": None,
+            "backend": "pallas-interpret", "schedule": sched,
+            "bit_exact": exact,
+        })
+    if json_path:
+        payload = {
+            "bench": "l2r_gemm_level_stacking",
+            "host_backend": jax.default_backend(),
+            "timing_note": "jnp path timed on this host; pallas-interpret "
+                           "rows are correctness-only",
+            "rows": records,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        emit("kernel_stacked_json", 0.0, f"wrote={json_path}")
+
+
 def ipu_bench():
     from repro.core.ipu import simulate_cipu
     rng = np.random.default_rng(1)
@@ -146,6 +215,8 @@ def main() -> None:
     table2()
     vgg16_cycles()
     kernel_bench()
+    kernel_stacked_bench(
+        os.path.join(os.path.dirname(__file__), "BENCH_l2r_gemm.json"))
     ipu_bench()
     online_stats()
 

@@ -55,7 +55,9 @@ print("=" * 70)
 print("4) Pallas TPU kernel (interpret mode on CPU), bit-exact vs oracle")
 Ap = rng.integers(-128, 128, (128, 256), dtype=np.int8)
 Bp = rng.integers(-128, 128, (256, 128), dtype=np.int8)
-kout = l2r_gemm(jnp.asarray(Ap), jnp.asarray(Bp))
+# force the Pallas path: the dispatcher's CPU default is the (much
+# faster) jnp level-stacked schedule
+kout = l2r_gemm(jnp.asarray(Ap), jnp.asarray(Bp), backend="pallas-interpret")
 kref = int_gemm_ref(jnp.asarray(Ap), jnp.asarray(Bp))
 print(f"   kernel == oracle: {bool(np.array_equal(np.asarray(kout), np.asarray(kref)))}")
 

@@ -20,28 +20,33 @@ import numpy as np
 from repro.core.cycle_model import (AcceleratorConfig, VGG16_CONV_LAYERS,
                                     layer_cycles)
 from repro.core.quant import QuantConfig
-from repro.models.cnn import vgg16_apply, vgg16_build
+from repro.models.cnn import vgg16_apply, vgg16_build, vgg16_quantize_weights
 from repro.models.common import materialize
 
 params = materialize(vgg16_build(n_classes=10), jax.random.PRNGKey(0))
 rng = np.random.default_rng(0)
 img = jnp.asarray(rng.standard_normal((4, 64, 64, 3)).astype(np.float32))
 
+# the L2R weight cache: quantize every conv/fc weight ONCE at load time;
+# the forward passes below then carry no weight quantization at all
+cfg = QuantConfig()
+wq = vgg16_quantize_weights(params, cfg)
+
 print("forward float32 ...")
 t0 = time.time()
 lf = np.asarray(vgg16_apply(params, img))
 print(f"  {time.time()-t0:.1f}s  logits[0,:4] = {np.round(lf[0, :4], 3)}")
 
-print("forward L2R W8A8 (exact MSDF stream) ...")
+print("forward L2R W8A8 (exact MSDF stream, fused conv, cached weights) ...")
 t0 = time.time()
-lq = np.asarray(vgg16_apply(params, img, l2r=QuantConfig()))
+lq = np.asarray(vgg16_apply(params, img, l2r=cfg, weights_q=wq))
 rel = np.abs(lq - lf).max() / np.abs(lf).max()
 print(f"  {time.time()-t0:.1f}s  rel err vs float: {rel:.4f}")
 agree = (lq.argmax(-1) == lf.argmax(-1)).mean()
 print(f"  top-1 agreement: {agree*100:.0f}%")
 
 for lv in (5, 3):
-    lp = np.asarray(vgg16_apply(params, img, l2r=QuantConfig(), levels=lv))
+    lp = np.asarray(vgg16_apply(params, img, l2r=cfg, levels=lv, weights_q=wq))
     rel = np.abs(lp - lq).max() / (np.abs(lq).max() + 1e-9)
     agree = (lp.argmax(-1) == lq.argmax(-1)).mean()
     print(f"progressive levels={lv}/7: rel err {rel:.3f}, "

@@ -7,10 +7,13 @@ The paper's contribution, reproduced at three levels:
   * accelerator model: cycle_model.py + hw_model.py (Tables I/II).
 """
 
-from .quant import QuantConfig, quantize, dequantize, digit_planes, from_digit_planes
-from .online import msdf_pairs, msdf_levels, tail_bound, online_delay
+from .quant import (QuantConfig, QuantizedWeights, quantize, quantize_weights,
+                    dequantize, digit_planes, from_digit_planes,
+                    shifted_planes, stack_planes_lhs, stack_planes_rhs)
+from .online import (msdf_pairs, msdf_levels, msdf_level_slices, tail_bound,
+                     online_delay)
 from .ipu import simulate_cipu, simulate_cipu_python, CIPUTrace
-from .l2r_gemm import l2r_matmul_int, l2r_matmul, l2r_dense
+from .l2r_gemm import l2r_matmul_int, l2r_matmul_int_stacked, l2r_matmul, l2r_dense
 from .progressive import progressive_matmul, earliest_decision_level, ProgressiveResult
 from .cycle_model import (
     AcceleratorConfig,
@@ -25,10 +28,12 @@ from .cycle_model import (
 from . import hw_model
 
 __all__ = [
-    "QuantConfig", "quantize", "dequantize", "digit_planes", "from_digit_planes",
-    "msdf_pairs", "msdf_levels", "tail_bound", "online_delay",
+    "QuantConfig", "QuantizedWeights", "quantize", "quantize_weights",
+    "dequantize", "digit_planes", "from_digit_planes",
+    "shifted_planes", "stack_planes_lhs", "stack_planes_rhs",
+    "msdf_pairs", "msdf_levels", "msdf_level_slices", "tail_bound", "online_delay",
     "simulate_cipu", "simulate_cipu_python", "CIPUTrace",
-    "l2r_matmul_int", "l2r_matmul", "l2r_dense",
+    "l2r_matmul_int", "l2r_matmul_int_stacked", "l2r_matmul", "l2r_dense",
     "progressive_matmul", "earliest_decision_level", "ProgressiveResult",
     "AcceleratorConfig", "ConvLayer", "VGG16_CONV_LAYERS",
     "layer_cycles", "network_cycles", "peak_gops", "effective_gops",

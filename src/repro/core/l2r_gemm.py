@@ -13,9 +13,15 @@ the paper becomes the K-contraction of the plane matmul.  Processing the
 property: truncating the stream after `levels` significance levels yields
 a result with a hard error bound (core/online.py:tail_bound).
 
-This file is the pure-jnp reference/production implementation; the Pallas
-VMEM-tiled kernel lives in repro/kernels/l2r_gemm/ and is validated
-against this module.
+Two schedules live here: the pair loop (``l2r_matmul_int``, one small
+matmul per (i, j) pair — the reference/oracle) and the **level-stacked**
+schedule (``l2r_matmul_int_stacked``: planes extracted once, each
+significance level s = i + j fused into ONE matmul over a concatenated K
+axis — 2D-1 large passes instead of D² small ones, bit-identical
+including truncation).  The production entry point is the backend
+dispatcher in repro/kernels/l2r_gemm/ops.py, which routes to the stacked
+schedule here (jnp backend) or to the Pallas VMEM-tiled kernels; both
+are validated against the pair loop.
 """
 
 from __future__ import annotations
@@ -25,10 +31,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .online import msdf_pairs
-from .quant import QuantConfig, digit_planes, quantize
+from .online import msdf_level_slices, msdf_pairs
+from .quant import (QuantConfig, QuantizedWeights, digit_planes, quantize,
+                    stack_planes_lhs, stack_planes_rhs)
 
-__all__ = ["l2r_matmul_int", "l2r_matmul", "l2r_dense"]
+__all__ = ["l2r_matmul_int", "l2r_matmul_int_stacked", "stacked_gemm_planes",
+           "l2r_matmul", "l2r_dense"]
 
 
 @partial(jax.jit, static_argnames=("n_bits", "log2_radix", "levels"))
@@ -65,12 +73,109 @@ def l2r_matmul_int(
     return acc
 
 
+@partial(jax.jit, static_argnames=("n_bits", "log2_radix", "levels"))
+def l2r_matmul_int_stacked(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+) -> jax.Array:
+    """Level-stacked MSDF integer matmul: bit-identical to
+    :func:`l2r_matmul_int`, 2D-1 matmuls instead of D².
+
+    Digit planes are extracted ONCE and pre-shifted to their significance
+    (``A'_i = A_i << b*i``, ``B'_j = B_j << b*j``), then stacked along the
+    contraction axis.  Every significance level ``s = i + j`` becomes a
+    single matmul over a concatenated K axis:
+
+        level s:  A'[i_lo..i_hi]  @  stack(B'_{s-i_lo} .. B'_{s-i_hi})
+
+    Because both sides carry their shift, ``A'_i @ B'_j = (A_i @ B_j) <<
+    b(i+j)`` exactly (int32 accumulate), so no per-term shift/add remains
+    and the per-level contraction is one MXU-shaped pass of depth
+    ``n_pairs(s) * K``.  ``levels`` truncation processes the identical
+    pair set as the pair loop -> bit-identical progressive prefixes.
+    """
+    a_stack = stack_planes_lhs(aq, n_bits, log2_radix, shifted=False)
+    b_rev = stack_planes_rhs(bq, n_bits, log2_radix, shifted=False)
+    return stacked_gemm_planes(a_stack, b_rev, aq.shape[-1],
+                               n_bits, log2_radix, levels, shifted=False)
+
+
+def _f32_dot_exact(k: int, max_pairs: int, log2_radix: int) -> bool:
+    """Can a level contraction of raw digits run exactly in float32?
+
+    Every term of a level sum is a product of digits with magnitude
+    <= radix-1, so any prefix of the accumulation is bounded by
+    ``n_pairs(s) * K * (radix-1)^2``.  When that stays below 2^24 every
+    intermediate is an exactly-representable f32 integer and the BLAS
+    sgemm result is bit-exact — on CPU hosts this path is ~3x faster
+    than XLA's int32 GEMM loop.
+    """
+    dmax = (1 << log2_radix) - 1
+    return max_pairs * k * dmax * dmax < (1 << 24)
+
+
+def stacked_gemm_planes(
+    a_stack: jax.Array,
+    b_rev: jax.Array,
+    k: int,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    shifted: bool = True,
+) -> jax.Array:
+    """Level-stacked contraction over pre-stacked digit planes.
+
+    a_stack: (..., M, D*K) ascending planes; b_rev: (D*K, N) descending
+    (see quant.py:stack_planes_lhs/rhs); ``k`` is the un-stacked
+    contraction length.  Exposed separately so callers that reuse a plane
+    stack across many GEMMs (the fused conv's tap loop) extract planes
+    once instead of once per call.
+
+    ``shifted=True`` consumes pre-shifted bit-field planes (the MXU
+    operand format): one int dot per level, no shifts at all.
+    ``shifted=False`` consumes raw digits and shifts once per level; the
+    small digit magnitudes let the contraction run through the f32 BLAS
+    fast path when :func:`_f32_dot_exact` holds (guarded — falls back to
+    int dots otherwise).  Both are bit-identical to the pair loop.
+    """
+    d = n_bits // log2_radix
+    slices = msdf_level_slices(d, levels)
+    acc = jnp.zeros((*a_stack.shape[:-1], b_rev.shape[-1]), jnp.int32)
+    if not slices:  # levels=0: empty MSDF prefix, same as the pair loop
+        return acc
+    use_f32 = not shifted and _f32_dot_exact(
+        k, max(hi - lo + 1 for _, lo, hi in slices), log2_radix)
+    if use_f32:
+        a_stack = a_stack.astype(jnp.float32)
+        b_rev = b_rev.astype(jnp.float32)
+    for (s, i_lo, i_hi) in slices:
+        a_l = a_stack[..., i_lo * k:(i_hi + 1) * k]
+        r0 = (d - 1 - s + i_lo) * k
+        b_l = b_rev[r0:r0 + (i_hi - i_lo + 1) * k]
+        term = jax.lax.dot_general(
+            a_l, b_l,
+            ((((a_l.ndim - 1),), ((0,))), ((), ())),
+            preferred_element_type=jnp.float32 if use_f32 else jnp.int32,
+            # HIGHEST pins true-f32 accumulation: DEFAULT would route
+            # through TF32/bf16 passes on GPU/TPU and break bit-exactness
+            precision=jax.lax.Precision.HIGHEST if use_f32 else None,
+        )
+        term = term.astype(jnp.int32)
+        if not shifted:
+            term = term << (log2_radix * s)
+        acc = acc + term
+    return acc
+
+
 def l2r_matmul(
     x: jax.Array,
-    w: jax.Array,
+    w: jax.Array | None,
     cfg: QuantConfig = QuantConfig(),
     levels: int | None = None,
-    w_q: tuple[jax.Array, jax.Array] | None = None,
+    w_q: tuple[jax.Array, jax.Array] | QuantizedWeights | None = None,
 ) -> jax.Array:
     """Float-in/float-out matmul computed through the L2R pipeline.
 
@@ -83,6 +188,8 @@ def l2r_matmul(
     xq, x_scale = quantize(x, cfg, axis=x.ndim - 2 if cfg.per_channel else None)
     if w_q is None:
         wq, w_scale = quantize(w, cfg, axis=-1)  # per-out-channel: (1, N)
+    elif isinstance(w_q, QuantizedWeights):
+        wq, w_scale = w_q.q, w_q.scale
     else:
         wq, w_scale = w_q
     out = l2r_matmul_int(xq, wq, cfg.n_bits, cfg.log2_radix, levels)
@@ -91,14 +198,17 @@ def l2r_matmul(
 
 def l2r_dense(
     x: jax.Array,
-    w: jax.Array,
+    w: jax.Array | None,
     cfg: QuantConfig | None,
     levels: int | None = None,
+    w_q: tuple[jax.Array, jax.Array] | QuantizedWeights | None = None,
 ) -> jax.Array:
     """Drop-in dense: bf16 einsum when cfg is None, L2R path otherwise.
 
     Used by the model stack (models/common.py:dense) so the paper's
-    technique is a first-class switch on every architecture.
+    technique is a first-class switch on every architecture.  ``w_q``
+    carries pre-quantized weights (core/quant.py:QuantizedWeights, built
+    once at load) so the hot path skips per-forward weight quantization.
     """
     if cfg is None:
         return jax.lax.dot_general(
@@ -106,5 +216,7 @@ def l2r_dense(
             (((x.ndim - 1,), (0,)), ((), ())),
         )
     lead = x.shape[:-1]
-    out = l2r_matmul(x.reshape(-1, x.shape[-1]), w, cfg, levels)
-    return out.reshape(*lead, w.shape[-1])
+    n = (w_q.q if isinstance(w_q, QuantizedWeights) else w_q[0]
+         if w_q is not None else w).shape[-1]
+    out = l2r_matmul(x.reshape(-1, x.shape[-1]), w, cfg, levels, w_q=w_q)
+    return out.reshape(*lead, n)

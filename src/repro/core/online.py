@@ -16,6 +16,7 @@ from typing import Iterator, List, Sequence, Tuple
 __all__ = [
     "msdf_pairs",
     "msdf_levels",
+    "msdf_level_slices",
     "tail_bound",
     "online_delay",
 ]
@@ -45,6 +46,29 @@ def msdf_pairs(planes: int, levels: int | None = None) -> List[Tuple[int, int]]:
             if j < 0 or j >= planes:
                 continue
             out.append((i, j))
+    return out
+
+
+def msdf_level_slices(
+    planes: int, levels: int | None = None
+) -> List[Tuple[int, int, int]]:
+    """Level-stacked schedule: ``[(s, i_lo, i_hi)]`` in MSDF order.
+
+    Significance level ``s`` fuses every plane pair ``(i, s - i)`` for
+    ``i in [i_lo, i_hi]`` into ONE contraction: because the pair index
+    range at a fixed level is *contiguous* in ``i`` (and hence in
+    ``j = s - i``), the level's operands are contiguous slices of the
+    K-stacked plane tensors (quant.py:stack_planes_lhs/rhs) and the D²
+    pair matmuls of :func:`msdf_pairs` collapse to 2D-1 level matmuls.
+    ``levels`` truncates identically to :func:`msdf_pairs` — the same
+    pair set is processed, so truncated results are bit-identical.
+    """
+    out: List[Tuple[int, int, int]] = []
+    lv = msdf_levels(planes)
+    if levels is not None:
+        lv = lv[:levels]
+    for s in lv:
+        out.append((s, max(0, s - planes + 1), min(s, planes - 1)))
     return out
 
 

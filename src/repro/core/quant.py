@@ -23,10 +23,15 @@ import jax.numpy as jnp
 
 __all__ = [
     "QuantConfig",
+    "QuantizedWeights",
     "quantize",
+    "quantize_weights",
     "dequantize",
     "digit_planes",
     "from_digit_planes",
+    "shifted_planes",
+    "stack_planes_lhs",
+    "stack_planes_rhs",
     "plane_count",
     "max_digit",
 ]
@@ -84,6 +89,15 @@ def _int_dtype(n_bits: int):
     return jnp.int8 if n_bits <= 8 else jnp.int16
 
 
+def _symmetric_quant(xf: jax.Array, amax: jax.Array, cfg: QuantConfig):
+    """Shared scale/round/clip core: the ONE place the quantization
+    formula lives, so load-time weight caches (quantize_weights) stay
+    bit-identical to on-the-fly quantization (quantize) by construction."""
+    scale = jnp.maximum(amax, 1e-30) / cfg.qmax
+    q = jnp.clip(jnp.round(xf / scale), cfg.qmin, cfg.qmax)
+    return q.astype(_int_dtype(cfg.n_bits)), scale
+
+
 @partial(jax.jit, static_argnames=("cfg", "axis"))
 def quantize(x: jax.Array, cfg: QuantConfig = QuantConfig(), axis: int | None = None):
     """Symmetric quantization to n-bit signed integers.
@@ -100,9 +114,7 @@ def quantize(x: jax.Array, cfg: QuantConfig = QuantConfig(), axis: int | None = 
         amax = jnp.max(jnp.abs(xf), axis=reduce_axes, keepdims=True)
     else:
         amax = jnp.max(jnp.abs(xf))
-    scale = jnp.maximum(amax, 1e-30) / cfg.qmax
-    q = jnp.clip(jnp.round(xf / scale), cfg.qmin, cfg.qmax)
-    return q.astype(_int_dtype(cfg.n_bits)), scale
+    return _symmetric_quant(xf, amax, cfg)
 
 
 def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
@@ -128,6 +140,109 @@ def digit_planes(x: jax.Array, n_bits: int = 8, log2_radix: int = 2) -> jax.Arra
     ]
     planes.append(xi >> (log2_radix * (d - 1)))  # arithmetic shift: signed top
     return jnp.stack(planes).astype(jnp.int8)
+
+
+@partial(jax.jit, static_argnames=("n_bits", "log2_radix"))
+def shifted_planes(x: jax.Array, n_bits: int = 8, log2_radix: int = 2) -> jax.Array:
+    """Digit planes pre-shifted to their significance: ``out[i] = plane_i << b*i``.
+
+    Each shifted plane is a bit-field of ``x`` (the top one sign-extended),
+    so it fits in the same signed n-bit dtype as the input and
+
+        sum_i out[i] == x                                (exact)
+
+    This is the operand format of the level-stacked schedule: with both
+    sides pre-shifted, ``A'_i @ B'_j == (A_i @ B_j) << b(i+j)`` and the
+    per-term shift disappears from the inner loop entirely.
+    """
+    d = plane_count(n_bits, log2_radix)
+    xi = x.astype(jnp.int32)
+    r_mask = (1 << log2_radix) - 1
+    planes = [xi & (r_mask << (log2_radix * i)) for i in range(d - 1)]
+    # signed top bit-field: clear the low bits, keep the sign extension
+    planes.append(xi - (xi & ((1 << (log2_radix * (d - 1))) - 1)))
+    return jnp.stack(planes).astype(_int_dtype(n_bits))
+
+
+@partial(jax.jit, static_argnames=("n_bits", "log2_radix", "shifted"))
+def stack_planes_lhs(xq: jax.Array, n_bits: int = 8, log2_radix: int = 2,
+                     shifted: bool = True) -> jax.Array:
+    """LHS plane stack: (..., M, K) -> (..., M, D*K), plane i at columns
+    ``[i*K, (i+1)*K)`` (ascending significance).
+
+    ``shifted=True`` stacks pre-shifted bit-fields (the Pallas/MXU operand
+    format: products land at their final weight).  ``shifted=False``
+    stacks raw digits in [0, radix) — the small-magnitude format whose
+    per-level sums fit the f32 exact-integer range, enabling the BLAS
+    fast path of core/l2r_gemm.py:stacked_gemm_planes.
+    """
+    sp = (shifted_planes if shifted else digit_planes)(xq, n_bits, log2_radix)
+    return jnp.concatenate(list(sp), axis=-1)
+
+
+@partial(jax.jit, static_argnames=("n_bits", "log2_radix", "axis", "shifted"))
+def stack_planes_rhs(wq: jax.Array, n_bits: int = 8, log2_radix: int = 2,
+                     axis: int = 0, shifted: bool = True) -> jax.Array:
+    """RHS plane stack: (K, N) -> (D*K, N), plane j at rows
+    ``[(D-1-j)*K, (D-j)*K)`` (descending significance).
+
+    The reversal makes every significance level a *contiguous* row slice
+    paired against a contiguous column slice of the LHS stack: level s
+    pairs LHS block i (ascending) with RHS block ``D-1-(s-i)`` (also
+    ascending in i) — see online.py:msdf_level_slices.  ``axis`` selects
+    the contraction axis to stack along (conv weights (kh, kw, cin, cout)
+    stack their cin axis, axis=-2); ``shifted`` as in
+    :func:`stack_planes_lhs`.
+    """
+    sp = (shifted_planes if shifted else digit_planes)(wq, n_bits, log2_radix)
+    return jnp.concatenate(list(sp)[::-1], axis=axis if axis >= 0
+                           else axis % wq.ndim)
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=("q", "scale"),
+         meta_fields=())
+@dataclasses.dataclass
+class QuantizedWeights:
+    """Pre-quantized matmul/conv weights: built ONCE at model load.
+
+    ``q`` keeps the weight's natural shape ((K, N) dense, (kh, kw, cin,
+    cout) conv); ``scale`` broadcasts against the output channels.
+    Passing this through the model stack removes per-forward weight
+    re-quantization (abs-max reduce + divide + round per call) from the
+    traced hot path — weights quantize exactly once per load.
+    """
+
+    q: jax.Array
+    scale: jax.Array
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.q.shape
+
+    @property
+    def ndim(self) -> int:
+        return self.q.ndim
+
+
+@partial(jax.jit, static_argnames=("cfg", "channel_axes"))
+def quantize_weights(
+    w: jax.Array,
+    cfg: QuantConfig = QuantConfig(),
+    channel_axes: tuple[int, ...] = (-1,),
+) -> QuantizedWeights:
+    """Symmetric per-channel weight quantization -> :class:`QuantizedWeights`.
+
+    ``channel_axes`` are the axes that KEEP independent scales (default:
+    the trailing output-channel axis; stacked-layer weights pass (0, -1)).
+    Jitted and sharing :func:`_symmetric_quant` with :func:`quantize` so
+    the cached scales are bit-identical to on-the-fly quantization (XLA
+    folds the /qmax divide identically under jit).
+    """
+    wf = w.astype(jnp.float32)
+    keep = {a % w.ndim for a in channel_axes}
+    reduce_axes = tuple(a for a in range(w.ndim) if a not in keep)
+    amax = jnp.max(jnp.abs(wf), axis=reduce_axes, keepdims=True)
+    return QuantizedWeights(*_symmetric_quant(wf, amax, cfg))
 
 
 @partial(jax.jit, static_argnames=("log2_radix",))

@@ -1,6 +1,12 @@
-"""L2R digit-plane GEMM: Pallas TPU kernel + jit wrappers + jnp oracle."""
-from .kernel import l2r_gemm_pallas
-from .ops import l2r_gemm, l2r_matmul_f, pad_to
-from .ref import l2r_gemm_ref, int_gemm_ref
+"""L2R digit-plane GEMM: Pallas TPU kernels + backend dispatch + oracles."""
+from .kernel import l2r_gemm_pallas, l2r_gemm_pallas_stacked, stacked_schedule
+from .ops import (BACKENDS, BACKEND_ENV_VAR, l2r_conv2d, l2r_gemm,
+                  l2r_matmul_f, pad_to, resolve_backend)
+from .ref import int_gemm_ref, l2r_gemm_ref, l2r_gemm_ref_stacked
 
-__all__ = ["l2r_gemm_pallas", "l2r_gemm", "l2r_matmul_f", "pad_to", "l2r_gemm_ref", "int_gemm_ref"]
+__all__ = [
+    "l2r_gemm_pallas", "l2r_gemm_pallas_stacked", "stacked_schedule",
+    "l2r_gemm", "l2r_matmul_f", "l2r_conv2d", "pad_to",
+    "resolve_backend", "BACKENDS", "BACKEND_ENV_VAR",
+    "l2r_gemm_ref", "l2r_gemm_ref_stacked", "int_gemm_ref",
+]

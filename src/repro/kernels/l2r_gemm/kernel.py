@@ -1,23 +1,50 @@
-"""Pallas TPU kernel: L2R digit-plane GEMM (the composite IPU on the MXU).
+"""Pallas TPU kernels: L2R digit-plane GEMM (the composite IPU on the MXU).
 
-Hardware mapping (DESIGN.md §2):
+Two schedules are provided:
 
-  * the paper's 8x8 PE array x (3x3 window x 8 channels)  ->  the Pallas
-    grid (M/bm, N/bn) of output tiles x a bk-deep contraction block: the
-    systolic MXU contraction plays the counter circuit's role;
-  * the digit-serial schedule  ->  a static, MSDF-ordered loop over digit
-    plane pairs (i, j); each pair is one small-int MXU pass
-    `acc += (A_i @ B_j) << b(i+j)`;
-  * PPR/residual carry-save pair -> the int32 VMEM accumulator (carry-free
-    at matmul granularity: no intermediate rounding or carry propagation);
-  * progressive precision (`levels`) -> truncating the plane-pair loop to
-    the most significant levels, the analogue of reading the unit's MSDs
-    after the online delay.
+``l2r_gemm_pallas`` — the original pair-loop schedule (one small MXU pass
+per digit-plane pair, D² passes per K-step, planes re-extracted in VMEM
+every step).  Kept as the comparison baseline and a second oracle.
 
-VMEM budget at the default (bm, bk, bn) = (128, 256, 128), radix 4:
-  A tile 32 KiB + B tile 32 KiB + 2 x D plane copies (256 KiB)
-  + int32 acc 64 KiB  ~= 0.4 MiB  << 16 MiB/core VMEM; M/N tiles are
-  MXU-aligned (128) and the int8 K tile is a multiple of 32 lanes.
+``l2r_gemm_pallas_stacked`` — the production **significance-level plane
+stacking** schedule.  Hardware mapping:
+
+  * digit planes are extracted ONCE, outside the grid, and pre-shifted to
+    their significance (``A'_i = A_i << b*i``, ``B'_j = B_j << b*j`` —
+    each shifted plane is a bit-field of the operand, so it stays in the
+    operand's n-bit dtype).  The planes are stacked along the contraction
+    axis: ``A_stack (M, D*K)`` ascending, ``B_rev (D*K, N)`` descending;
+  * the paper's composite counter circuit -> ONE K-stacked MXU
+    contraction per significance level ``s = i + j``: the level's pair
+    set {(i, s-i)} is a contiguous column slice of ``A_stack`` against a
+    contiguous row slice of ``B_rev``, so the D² pair matmuls collapse to
+    2D-1 level matmuls and the kernel inner loop is a single
+    ``acc += A_blk @ B_blk`` per grid step — no plane extraction, no
+    shifts (the pre-shift makes every product land at its final weight);
+  * the MSDF schedule -> a static (level, k-block) walk enumerated
+    host-side and fed through **scalar prefetch**: two int32 index
+    vectors give each grid step its block coordinates into the stacked
+    operands, and the BlockSpec index maps read them (this is the
+    block-sparse / grouped-matmul Pallas idiom);
+  * PPR/residual carry-save pair -> the int32 VMEM accumulator (carry-
+    free at matmul granularity);
+  * progressive precision (``levels``) -> truncating the schedule vector
+    to the top levels; the processed pair set is identical to
+    ``online.msdf_pairs(d, levels)``, so truncated results are
+    bit-identical to the pair loop (validated against
+    ``core/online.py:tail_bound`` semantics in the tests).
+
+VMEM budget, stacked schedule, default (bm, bk, bn) = (128, 256, 128):
+  A block 32 KiB (int8) + B block 32 KiB + int32 acc 64 KiB = 128 KiB
+  (~256 KiB with double buffering) << 16 MiB/core — 3x leaner than the
+  pair-loop kernel, which additionally held 2 x D int32 plane workspaces
+  (256 KiB at radix 4).  M/N tiles are MXU-aligned (128); the int8 K
+  block is a multiple of 32 lanes.  HBM traffic: the stacked operands are
+  D x the int8 payload, but each block is read exactly once per output
+  tile — the same per-pair traffic the pair loop paid, now amortized over
+  MXU passes that are D x deeper on average.
+
+Backend selection (jnp / pallas-interpret / pallas-tpu) lives in ops.py.
 """
 
 from __future__ import annotations
@@ -27,14 +54,17 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.online import msdf_pairs
+from repro.core.online import msdf_level_slices, msdf_pairs
+from repro.core.quant import stack_planes_lhs, stack_planes_rhs
 
-__all__ = ["l2r_gemm_pallas"]
+__all__ = ["l2r_gemm_pallas", "l2r_gemm_pallas_stacked", "stacked_schedule"]
 
 
+# --------------------------------------------------------------- pair loop
 def _plane(x: jax.Array, i: int, n_planes: int, log2_radix: int) -> jax.Array:
     """Digit plane i of an int8 tile (int32 workspace, exact for 2's comp)."""
     xi = x.astype(jnp.int32)
@@ -88,7 +118,7 @@ def l2r_gemm_pallas(
     bn: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    """MSDF digit-plane int GEMM. aq: (M, K) int8, bq: (K, N) int8 -> int32.
+    """Pair-loop MSDF GEMM (baseline). aq: (M, K) int8, bq: (K, N) -> int32.
 
     Shapes must be multiples of the block sizes (ops.py pads — zero
     padding is exact for matmul).  `interpret=True` runs the kernel body
@@ -120,3 +150,105 @@ def l2r_gemm_pallas(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(aq, bq)
+
+
+# ------------------------------------------------------ level-stacked
+def stacked_schedule(
+    d: int, k_blocks: int, levels: int | None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Static (level, k-block) walk of the stacked operands, MSDF order.
+
+    Returns two int32 vectors of length T = n_pairs(levels) * k_blocks:
+    ``a_blocks[t]`` is the block-column into A_stack (plane i, k-chunk c
+    -> i * k_blocks + c) and ``b_blocks[t]`` the block-row into B_rev
+    (plane j = s - i lives at reversed offset (d-1-j) * k_blocks).
+    Consumed via scalar prefetch by the stacked kernel's index maps.
+    """
+    a_blocks: list[int] = []
+    b_blocks: list[int] = []
+    for (s, i_lo, i_hi) in msdf_level_slices(d, levels):
+        for i in range(i_lo, i_hi + 1):
+            for c in range(k_blocks):
+                a_blocks.append(i * k_blocks + c)
+                b_blocks.append((d - 1 - s + i) * k_blocks + c)
+    return (np.asarray(a_blocks, np.int32), np.asarray(b_blocks, np.int32))
+
+
+def _l2r_stacked_kernel(a_idx_ref, b_idx_ref, a_ref, b_ref, o_ref, acc_ref,
+                        *, t_steps: int):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, T), schedule innermost.
+
+    The whole MSDF structure lives in the prefetched index vectors: the
+    body is a single int8 MXU pass per step — ``acc += A_blk @ B_blk`` —
+    with no plane extraction and no shifts (operands are pre-shifted).
+    """
+    del a_idx_ref, b_idx_ref  # consumed by the BlockSpec index maps
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == t_steps - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn", "interpret"),
+)
+def l2r_gemm_pallas_stacked(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Level-stacked MSDF GEMM. aq: (M, K), bq: (K, N) small ints -> int32.
+
+    Bit-identical to ``core.l2r_gemm.l2r_matmul_int`` for exact and
+    truncated ``levels``.  Shapes must be multiples of the block sizes
+    (ops.py pads; zero padding is exact).  Plane extraction happens here,
+    once, outside the grid — the kernel streams pre-shifted plane blocks.
+    """
+    m, k = aq.shape
+    k2, n = bq.shape
+    assert k == k2, (aq.shape, bq.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k2},{n}) not padded to blocks ({bm},{bk},{bn})"
+    )
+    d = n_bits // log2_radix
+    k_blocks = k // bk
+    a_idx, b_idx = stacked_schedule(d, k_blocks, levels)
+    t_steps = int(a_idx.shape[0])
+    if t_steps == 0:  # levels=0: empty MSDF prefix
+        return jnp.zeros((m, n), jnp.int32)
+
+    a_stack = stack_planes_lhs(aq, n_bits, log2_radix)  # (M, D*K)
+    b_rev = stack_planes_rhs(bq, n_bits, log2_radix)    # (D*K, N)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m // bm, n // bn, t_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t, ai, bi: (i, ai[t])),
+            pl.BlockSpec((bk, bn), lambda i, j, t, ai, bi: (bi[t], j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t, ai, bi: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_l2r_stacked_kernel, t_steps=t_steps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(a_idx), jnp.asarray(b_idx), a_stack, b_rev)

@@ -1,23 +1,67 @@
-"""Jitted public wrappers around the L2R digit-plane GEMM kernel.
+"""Public L2R GEMM/conv ops: backend dispatch, padding, quant/dequant.
 
-Handles padding to MXU-aligned blocks, batching, quantize/dequantize and
-CPU fallback (interpret mode — this container has no TPU; on real
-hardware `interpret=False` compiles the Pallas kernel).
+This is the production entry point for the model stack (models/cnn.py,
+models/common.py:dense, serve/engine.py).  Three backends:
+
+  * ``jnp``             — the level-stacked pure-jnp schedule
+                          (core/l2r_gemm.py); fastest off-TPU, no padding;
+  * ``pallas-interpret``— the Pallas kernel body interpreted on CPU
+                          (validation only — slow, but exercises the real
+                          kernel dataflow);
+  * ``pallas-tpu``      — the compiled Pallas kernel (requires a TPU).
+
+Selection: explicit ``backend=`` argument > ``REPRO_L2R_BACKEND`` env var
+> platform default (``pallas-tpu`` on TPU hosts, ``jnp`` elsewhere).
+``schedule`` picks ``stacked`` (production, 2D-1 level matmuls) or
+``pairs`` (the D²-pass baseline, kept for regression benchmarks).
+
+The fused ``l2r_conv2d`` performs implicit im2col: the kh*kw taps of the
+window stream through the digit-plane GEMM as shifted views of the
+feature map, so the (B*H*W, cin*kh*kw) patch matrix is never
+materialized in HBM.  On the jnp backend the activation digit planes are
+additionally hoisted out of the tap loop (extracted once per feature
+map); the Pallas backends still extract planes inside each per-tap
+kernel call — hoisting them behind a pre-stacked kernel entry point is a
+noted ROADMAP follow-up for real-TPU tuning.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantConfig, quantize
+from repro.core.l2r_gemm import (l2r_matmul_int_stacked, stacked_gemm_planes)
+from repro.core.quant import (QuantConfig, QuantizedWeights, quantize,
+                              quantize_weights, stack_planes_lhs,
+                              stack_planes_rhs)
 
-from .kernel import l2r_gemm_pallas
+from .kernel import l2r_gemm_pallas, l2r_gemm_pallas_stacked
 from .ref import l2r_gemm_ref
 
-__all__ = ["l2r_gemm", "l2r_matmul_f", "pad_to"]
+__all__ = ["l2r_gemm", "l2r_matmul_f", "l2r_conv2d", "pad_to",
+           "resolve_backend", "BACKENDS", "BACKEND_ENV_VAR"]
+
+BACKENDS = ("jnp", "pallas-interpret", "pallas-tpu")
+BACKEND_ENV_VAR = "REPRO_L2R_BACKEND"
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Dispatch rule: explicit arg > $REPRO_L2R_BACKEND > platform default.
+
+    The platform default is ``pallas-tpu`` when jax runs on TPU and the
+    ``jnp`` level-stacked schedule everywhere else (interpret-mode Pallas
+    is a validation tool, never a production default).
+    """
+    chosen = backend or os.environ.get(BACKEND_ENV_VAR, "").strip() or "auto"
+    if chosen == "auto":
+        return "pallas-tpu" if jax.default_backend() == "tpu" else "jnp"
+    if chosen not in BACKENDS:
+        raise ValueError(
+            f"unknown L2R backend {chosen!r}; expected one of {BACKENDS} or 'auto'")
+    return chosen
 
 
 def pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
@@ -32,8 +76,37 @@ def pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn", "use_pallas", "interpret"),
+    static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn",
+                     "schedule", "backend"),
 )
+def _l2r_gemm_backend(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int,
+    log2_radix: int,
+    levels: int | None,
+    bm: int,
+    bk: int,
+    bn: int,
+    schedule: str,
+    backend: str,
+) -> jax.Array:
+    """Backend-resolved integer GEMM (backend is a static, already-resolved
+    string here so the trace cache keys on it)."""
+    if backend == "jnp":
+        if schedule == "stacked":
+            return l2r_matmul_int_stacked(aq, bq, n_bits, log2_radix, levels)
+        return l2r_gemm_ref(aq, bq, n_bits, log2_radix, levels)
+    m, k = aq.shape
+    n = bq.shape[1]
+    ap = pad_to(aq, (bm, bk))
+    bp = pad_to(bq, (bk, bn))
+    fn = l2r_gemm_pallas_stacked if schedule == "stacked" else l2r_gemm_pallas
+    out = fn(ap, bp, n_bits, log2_radix, levels, bm, bk, bn,
+             interpret=(backend == "pallas-interpret"))
+    return out[:m, :n]
+
+
 def l2r_gemm(
     aq: jax.Array,
     bq: jax.Array,
@@ -43,33 +116,127 @@ def l2r_gemm(
     bm: int = 128,
     bk: int = 256,
     bn: int = 128,
-    use_pallas: bool = True,
-    interpret: bool = True,
+    schedule: str = "stacked",
+    backend: str | None = None,
 ) -> jax.Array:
-    """Integer MSDF GEMM with automatic zero padding. (M,K)x(K,N)->int32."""
-    m, k = aq.shape
-    n = bq.shape[1]
-    if not use_pallas:
-        return l2r_gemm_ref(aq, bq, n_bits, log2_radix, levels)
-    ap = pad_to(aq, (bm, bk))
-    bp = pad_to(bq, (bk, bn))
-    out = l2r_gemm_pallas(
-        ap, bp, n_bits, log2_radix, levels, bm, bk, bn, interpret=interpret
-    )
-    return out[:m, :n]
+    """Integer MSDF GEMM with backend dispatch. (M,K)x(K,N) -> int32.
+
+    Any shape is accepted (Pallas backends zero-pad to blocks — exact for
+    matmul).  Bit-identical across backends and schedules, including
+    truncated ``levels``.
+    """
+    assert schedule in ("stacked", "pairs"), schedule
+    return _l2r_gemm_backend(aq, bq, n_bits, log2_radix, levels,
+                             bm, bk, bn, schedule, resolve_backend(backend))
 
 
 def l2r_matmul_f(
     x: jax.Array,
-    w: jax.Array,
+    w: jax.Array | None,
     cfg: QuantConfig = QuantConfig(),
     levels: int | None = None,
-    interpret: bool = True,
+    w_q: QuantizedWeights | tuple[jax.Array, jax.Array] | None = None,
+    backend: str | None = None,
+    schedule: str = "stacked",
 ) -> jax.Array:
-    """Float -> quantize -> Pallas MSDF GEMM -> dequantized float."""
+    """Float -> quantize -> dispatched MSDF GEMM -> dequantized float.
+
+    ``w_q`` (core/quant.py:QuantizedWeights, built once at load) skips
+    the per-forward weight quantization; ``w`` may then be None.
+    """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    xq, xs = quantize(x2, cfg, axis=0)  # per-row scales
-    wq, ws = quantize(w, cfg, axis=-1)  # per-col scales
-    out = l2r_gemm(xq, wq, cfg.n_bits, cfg.log2_radix, levels)
-    return (out.astype(jnp.float32) * xs * ws).astype(x.dtype).reshape(*lead, w.shape[-1])
+    # per-row (per-token) activation scales commute with the K-contraction
+    xq, xs = quantize(x2, cfg, axis=0 if cfg.per_channel else None)
+    if w_q is None:
+        wq, ws = quantize(w, cfg, axis=-1)  # per-out-channel: (1, N)
+    elif isinstance(w_q, QuantizedWeights):
+        wq, ws = w_q.q, w_q.scale
+    else:
+        wq, ws = w_q
+    out = l2r_gemm(xq, wq, cfg.n_bits, cfg.log2_radix, levels,
+                   schedule=schedule, backend=backend)
+    out = out.astype(jnp.float32) * xs * ws.reshape(1, -1)
+    return out.astype(x.dtype).reshape(*lead, wq.shape[-1])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "log2_radix", "levels", "backend"),
+)
+def _l2r_conv2d_int(
+    xq: jax.Array,
+    wq: jax.Array,
+    n_bits: int,
+    log2_radix: int,
+    levels: int | None,
+    backend: str,
+) -> jax.Array:
+    """Integer core of the fused conv: implicit im2col over kh*kw taps.
+
+    xq: (B, H, W, cin) small ints; wq: (kh, kw, cin, cout) small ints;
+    "SAME" padding, stride 1.  Bit-identical to quantized im2col +
+    l2r_matmul_int on the same operands: the contraction over
+    (kh, kw, cin) splits into kh*kw independent cin-contractions, and
+    per-significance-level partial sums add across taps exactly.
+    """
+    bsz, h, w_, cin = xq.shape
+    kh, kw, _, cout = wq.shape
+    ph_lo, pw_lo = (kh - 1) // 2, (kw - 1) // 2
+    xp = jnp.pad(xq, ((0, 0), (ph_lo, kh - 1 - ph_lo),
+                      (pw_lo, kw - 1 - pw_lo), (0, 0)))
+    acc = jnp.zeros((bsz, h, w_, cout), jnp.int32)
+    if backend == "jnp":
+        # hoist plane extraction out of the tap loop: one LHS stack for
+        # the whole feature map, one reversed RHS stack for all taps
+        # (raw digits -> the guarded f32 BLAS fast path)
+        xsp = stack_planes_lhs(xp, n_bits, log2_radix, shifted=False)
+        wrev = stack_planes_rhs(wq, n_bits, log2_radix, axis=-2,
+                                shifted=False)
+        for dy in range(kh):
+            for dx in range(kw):
+                a = xsp[:, dy:dy + h, dx:dx + w_, :]
+                acc = acc + stacked_gemm_planes(
+                    a, wrev[dy, dx], cin, n_bits, log2_radix, levels,
+                    shifted=False)
+        return acc
+    # per-tap K is only cin: shrink the contraction block to the smallest
+    # 128-lane multiple so shallow layers (cin=3) don't pad 9 taps to 256
+    bk = min(256, -(-cin // 128) * 128)
+    for dy in range(kh):
+        for dx in range(kw):
+            a = xp[:, dy:dy + h, dx:dx + w_, :].reshape(-1, cin)
+            t = _l2r_gemm_backend(a, wq[dy, dx], n_bits, log2_radix, levels,
+                                  128, bk, 128, "stacked", backend)
+            acc = acc + t.reshape(bsz, h, w_, cout)
+    return acc
+
+
+def l2r_conv2d(
+    x: jax.Array,
+    w: jax.Array | None,
+    b: jax.Array | None = None,
+    cfg: QuantConfig = QuantConfig(),
+    levels: int | None = None,
+    w_q: QuantizedWeights | None = None,
+    backend: str | None = None,
+) -> jax.Array:
+    """Fused L2R conv2d, NHWC/HWIO, stride 1, "SAME" padding.
+
+    The composite-IPU conv without the HBM patch matrix: activations are
+    quantized per image (scales commute with the window contraction),
+    digit planes are extracted once, and each kernel tap streams a
+    shifted view of the feature map through the level-stacked GEMM.
+    ``w_q`` reuses a load-time weight cache; otherwise ``w`` (kh, kw,
+    cin, cout) is quantized per output channel here.
+    """
+    if w_q is None:
+        w_q = quantize_weights(w, cfg)  # (kh,kw,cin,cout), scale (1,1,1,cout)
+    xq, xs = quantize(x, cfg, axis=0)  # per-image scales (B,1,1,1)
+    out = _l2r_conv2d_int(xq, w_q.q, cfg.n_bits, cfg.log2_radix, levels,
+                          resolve_backend(backend))
+    out = out.astype(jnp.float32) * xs * w_q.scale.reshape(1, 1, 1, -1)
+    out = out.astype(x.dtype)
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    return out

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.core.online import msdf_pairs
 from repro.core.quant import digit_planes
 
-__all__ = ["l2r_gemm_ref", "int_gemm_ref"]
+__all__ = ["l2r_gemm_ref", "l2r_gemm_ref_stacked", "int_gemm_ref"]
 
 
 @partial(jax.jit, static_argnames=("n_bits", "log2_radix", "levels"))
@@ -44,6 +44,22 @@ def l2r_gemm_ref(
         )
         acc = acc + (term << (log2_radix * (i + j)))
     return acc
+
+
+@partial(jax.jit, static_argnames=("n_bits", "log2_radix", "levels"))
+def l2r_gemm_ref_stacked(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+) -> jax.Array:
+    """Level-stacked schedule oracle (2D-1 fused matmuls); must be
+    bit-identical to :func:`l2r_gemm_ref` for every (n_bits, log2_radix,
+    levels) — the pair loop and the stacking are the same pair set."""
+    from repro.core.l2r_gemm import l2r_matmul_int_stacked
+
+    return l2r_matmul_int_stacked(aq, bq, n_bits, log2_radix, levels)
 
 
 @jax.jit

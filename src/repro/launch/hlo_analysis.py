@@ -59,6 +59,10 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 
 _OP_RE = re.compile(r"(?:^|\)\s|\}\s|\]\{[\d,]*\}\s|\]\s)([a-z][a-z0-9\-]*)\(")
 
+# Newer XLA prints operand types inline: `dot(f32[64,128]{1,0} %Arg_0.1,
+# ...)`.  Operand-matching regexes accept an optional typed prefix.
+_TYPED = r"(?:[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?\s+)?"
+
 
 def _shape_bytes(s: str) -> float:
     total = 0.0
@@ -120,7 +124,7 @@ def parse_module(text: str) -> dict[str, dict]:
 
 def _dot_flops(rhs: str, defs: dict[str, str]) -> float:
     out_dims = _shape_dims(rhs)
-    m = re.search(r"dot\(%([\w\.\-]+),", rhs)
+    m = re.search(r"dot\(" + _TYPED + r"%([\w\.\-]+),", rhs)
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
     if not (m and cm):
         return 0.0
@@ -140,7 +144,9 @@ def _dot_flops(rhs: str, defs: dict[str, str]) -> float:
 
 def _conv_flops(rhs: str, defs: dict[str, str]) -> float:
     out_dims = _shape_dims(rhs)
-    m = re.search(r"convolution\(%([\w\.\-]+),\s*%([\w\.\-]+)\)", rhs)
+    m = re.search(
+        r"convolution\(" + _TYPED + r"%([\w\.\-]+),\s*" + _TYPED + r"%([\w\.\-]+)\)",
+        rhs)
     if not m:
         return 0.0
     k_shape = defs.get(m.group(2))
@@ -167,11 +173,11 @@ def _storage_bytes(opname: str, comp: dict) -> float:
         rhs = comp["rhs"].get(name, "")
         # bare convert/copy, or single-operand convert_*_fusion (the CPU
         # backend wraps its bf16->f32 promotion in kLoop fusions)
-        m = re.search(r"\s(convert|copy)\(%([\w\.\-]+)\)", rhs)
+        m = re.search(r"\s(convert|copy)\(" + _TYPED + r"%([\w\.\-]+)\)", rhs)
         if m:
             kind, src = m.group(1), m.group(2)
         else:
-            mf = re.search(r"\sfusion\(%([\w\.\-]+)\)", rhs)
+            mf = re.search(r"\sfusion\(" + _TYPED + r"%([\w\.\-]+)\)", rhs)
             if mf and "convert" in name:
                 kind, src = "convert", mf.group(1)
             else:
@@ -228,7 +234,9 @@ def analyze(text: str) -> dict[str, Any]:
                 flops += _dot_flops(rhs, c["defs"])
                 # dots stream operands from HBM and write the result;
                 # storage-dtype-aware (bf16/int8 stay narrow on TPU)
-                for opm in re.finditer(r"dot\(%([\w\.\-]+),\s*%([\w\.\-]+)\)", rhs):
+                for opm in re.finditer(
+                        r"dot\(" + _TYPED + r"%([\w\.\-]+),\s*" + _TYPED
+                        + r"%([\w\.\-]+)\)", rhs):
                     for nm in opm.groups():
                         bytes_ += _storage_bytes(nm, c)
                 bytes_ += _shape_bytes(c["defs"][iname])
@@ -243,7 +251,8 @@ def analyze(text: str) -> dict[str, Any]:
             base = kind[:-6] if kind.endswith("-start") else kind
             if base in _COLLECTIVES:
                 wire = _collective_wire(rhs, base)
-                opm = re.search(base + r"(?:-start)?\(%([\w\.\-]+)", rhs)
+                opm = re.search(base + r"(?:-start)?\(" + _TYPED + r"%([\w\.\-]+)",
+                                rhs)
                 if opm:
                     full = _shape_bytes(c["defs"].get(opm.group(1), ""))
                     stored = _storage_bytes(opm.group(1), c)

@@ -22,7 +22,8 @@ from repro.configs import get_config, get_smoke
 from repro.core.quant import QuantConfig
 from repro.models.common import materialize, quantize_params
 from repro.models.transformer import lm_build
-from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.serve.engine import (make_decode_step, make_prefill_step,
+                                prepare_params)
 
 
 def main(argv=None):
@@ -44,7 +45,11 @@ def main(argv=None):
                                   l2r_levels=args.l2r_levels)
     desc = lm_build(cfg)
     params = materialize(desc, jax.random.PRNGKey(0))
-    if args.wq:
+    if cfg.l2r is not None:
+        # the L2R weight cache: quantize once at load, serve int8 weights
+        # through the dispatched digit-plane kernel
+        params = prepare_params(cfg, params, desc)
+    elif args.wq:
         params = quantize_params(desc, params)
 
     rng = np.random.default_rng(0)

@@ -1,10 +1,18 @@
 """VGG-16 — the paper's evaluation network, with the L2R conv path.
 
 Convolutions run either as plain float (lax.conv) or through the paper's
-composite inner-product pipeline: im2col -> quantize -> MSDF digit-plane
-GEMM (core/l2r_gemm.py; on TPU the Pallas kernel kernels/l2r_gemm).  With
-all significance levels the L2R path is bit-exact W8A8 integer conv; with
-fewer levels it is the progressive-precision (online early output) mode.
+composite inner-product pipeline via the **fused** conv op
+(kernels/l2r_gemm/ops.py:l2r_conv2d): digit planes are extracted once per
+feature map and each kernel tap streams a shifted view through the
+level-stacked MSDF GEMM — no (B*H*W, cin*kh*kw) patch matrix in HBM.
+The backend (jnp / pallas-interpret / pallas-tpu) is chosen by the
+dispatcher (ops.py:resolve_backend).  With all significance levels the
+L2R path is exact W8A8 integer conv; with fewer levels it is the
+progressive-precision (online early output) mode.
+
+Weights quantize ONCE per model load: build the cache with
+:func:`vgg16_quantize_weights` and pass it to :func:`vgg16_apply` —
+per-forward weight quantization then disappears from the traces.
 """
 
 from __future__ import annotations
@@ -12,13 +20,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.l2r_gemm import l2r_matmul
-from repro.core.quant import QuantConfig
 from repro.core.cycle_model import VGG16_CONV_LAYERS
+from repro.core.quant import QuantConfig, QuantizedWeights, quantize_weights
+from repro.kernels.l2r_gemm.ops import l2r_conv2d, l2r_matmul_f
 
 from .common import Param, materialize
 
-__all__ = ["vgg16_build", "vgg16_apply", "VGG16_CONV_LAYERS"]
+__all__ = ["vgg16_build", "vgg16_apply", "vgg16_quantize_weights",
+           "VGG16_CONV_LAYERS"]
 
 
 def vgg16_build(n_classes: int = 1000, in_channels: int = 3) -> dict:
@@ -39,6 +48,14 @@ def vgg16_build(n_classes: int = 1000, in_channels: int = 3) -> dict:
     return params
 
 
+def vgg16_quantize_weights(params: dict, cfg: QuantConfig = QuantConfig()
+                           ) -> dict[str, QuantizedWeights]:
+    """The L2R weight cache: every matmul/conv weight -> int8 + per-
+    out-channel scale, built exactly once at model load."""
+    return {name: quantize_weights(p["w"], cfg)
+            for name, p in params.items()}
+
+
 def _conv_float(x, w, b):
     out = jax.lax.conv_general_dilated(
         x, w.astype(x.dtype), (1, 1), "SAME",
@@ -47,39 +64,35 @@ def _conv_float(x, w, b):
     return out + b.astype(x.dtype)
 
 
-def _conv_l2r(x, w, b, cfg: QuantConfig, levels):
-    """im2col + MSDF digit-plane GEMM (the composite IPU mapping)."""
-    kh, kw, cin, cout = w.shape
-    patches = jax.lax.conv_general_dilated_patches(
-        x, (kh, kw), (1, 1), "SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-    )  # (B, H, W, cin*kh*kw)
-    bsz, h, ww, pdim = patches.shape
-    flat = patches.reshape(bsz * h * ww, pdim)
-    # lax patches order the channel dim as (cin, kh, kw)
-    wmat = w.transpose(2, 0, 1, 3).reshape(pdim, cout)
-    out = l2r_matmul(flat, wmat, cfg, levels)
-    return out.reshape(bsz, h, ww, cout) + b.astype(out.dtype)
-
-
 def vgg16_apply(
     params: dict,
     images: jax.Array,  # (B, H, W, 3)
     l2r: QuantConfig | None = None,
     levels: int | None = None,
+    weights_q: dict[str, QuantizedWeights] | None = None,
+    backend: str | None = None,
     n_dense_pool: int = 5,
 ) -> jax.Array:
     """Forward pass.  Returns logits (B, n_classes).
 
     Works for any input size that survives 5 pools >= 1 pixel; the FC
     head adapts via average pooling to 7x7 (or the remaining size).
+    ``weights_q`` is the load-time cache from
+    :func:`vgg16_quantize_weights`; when omitted on the L2R path it is
+    built here (once per call — callers that jit or loop should build it
+    themselves so weights quantize once per model load, not per forward).
     """
     x = images
-    conv = (lambda x, w, b: _conv_l2r(x, w, b, l2r, levels)) if l2r else _conv_float
+    if l2r is not None and weights_q is None:
+        weights_q = vgg16_quantize_weights(params, l2r)
+    if l2r is not None:
+        conv = lambda x, p, name: l2r_conv2d(
+            x, None, p["b"], l2r, levels, w_q=weights_q[name], backend=backend)
+    else:
+        conv = lambda x, p, name: _conv_float(x, p["w"], p["b"])
     stage_splits = {1: 2, 3: 2, 6: 2, 9: 2, 12: 2}  # pool after these conv idxs
     for i, layer in enumerate(VGG16_CONV_LAYERS):
-        p = params[layer.name]
-        x = jax.nn.relu(conv(x, p["w"], p["b"]))
+        x = jax.nn.relu(conv(x, params[layer.name], layer.name))
         if i in stage_splits:
             x = jax.lax.reduce_window(
                 x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
@@ -90,8 +103,11 @@ def vgg16_apply(
     if (h, w_) != (7, 7):
         x = jax.image.resize(x, (bsz, 7, 7, c), "linear")
     flat = x.reshape(bsz, -1)
-    mm = (lambda a, wt: l2r_matmul(a, wt, l2r, levels)) if l2r else (
-        lambda a, wt: a @ wt.astype(a.dtype))
-    x = jax.nn.relu(mm(flat, params["fc6"]["w"]) + params["fc6"]["b"])
-    x = jax.nn.relu(mm(x, params["fc7"]["w"]) + params["fc7"]["b"])
-    return mm(x, params["fc8"]["w"]) + params["fc8"]["b"]
+    if l2r is not None:
+        mm = lambda a, name: l2r_matmul_f(
+            a, None, l2r, levels, w_q=weights_q[name], backend=backend)
+    else:
+        mm = lambda a, name: a @ params[name]["w"].astype(a.dtype)
+    x = jax.nn.relu(mm(flat, "fc6") + params["fc6"]["b"])
+    x = jax.nn.relu(mm(x, "fc7") + params["fc7"]["b"])
+    return mm(x, "fc8") + params["fc8"]["b"]

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.l2r_gemm import l2r_dense
-from repro.core.quant import QuantConfig
+from repro.core.quant import QuantConfig, QuantizedWeights, quantize_weights
+from repro.kernels.l2r_gemm.ops import l2r_matmul_f
 
 __all__ = [
     "Param",
@@ -36,6 +37,7 @@ __all__ = [
     "abstract",
     "partition_specs",
     "dense",
+    "quantize_tree",
     "rms_norm",
     "layer_norm",
     "count_params",
@@ -112,12 +114,38 @@ def dense(
     w may have >2 dims (e.g. fused qkv (d, 3, h*dh)); trailing dims are
     flattened for the contraction and restored after.
 
-    w may also be an int8-quantized record {"q": int8 weights, "scale"}
-    (quantize_desc/quantize_params): W8A8 serving arithmetic — exactly the
-    integer product the L2R composite IPU computes digit-serially (bit
-    equality proven in tests/test_kernel_l2r_gemm.py); weights stored in
-    int8 halve the HBM weight traffic that dominates decode.
+    w may also be pre-quantized (built ONCE at model load):
+      * :class:`~repro.core.quant.QuantizedWeights` (quantize_tree /
+        serve.engine.prepare_params) — the L2R weight cache.  With an
+        ``l2r`` config the activations stream through the dispatched
+        level-stacked digit-plane kernel against the cached int8 weights
+        (no per-forward weight quantization in the trace); without one it
+        is plain W8A8 integer dense.
+      * a legacy {"q": int8, "scale"} record (quantize_desc/
+        quantize_params, the checkpoint codec): W8A8 serving arithmetic.
+    Weights stored in int8 halve the HBM weight traffic that dominates
+    decode; the integer product is exactly what the L2R composite IPU
+    computes digit-serially (bit equality proven in
+    tests/test_kernel_l2r_gemm.py).
     """
+    if isinstance(w, QuantizedWeights):
+        trail = w.q.shape[1:]
+        wq = w.q.reshape(w.q.shape[0], -1) if w.q.ndim > 2 else w.q
+        ws = jnp.broadcast_to(w.scale, (1, *trail)).reshape(1, -1)
+        if l2r is not None:
+            out = l2r_matmul_f(x, None, l2r, l2r_levels, w_q=(wq, ws))
+            return out.reshape(*x.shape[:-1], *trail)
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        from repro.core.quant import quantize
+
+        xq, xs = quantize(x2, QuantConfig(), axis=0)  # per-row act scales
+        out = jax.lax.dot_general(
+            xq, wq, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        out = out.astype(jnp.float32) * xs * ws
+        return out.astype(x.dtype).reshape(*lead, *trail)
     if isinstance(w, dict) and "q" in w:
         wq, scale = w["q"], w["scale"]
         trail = wq.shape[1:]
@@ -137,6 +165,10 @@ def dense(
     if w.ndim > 2:
         out = dense(x, w.reshape(w.shape[0], -1), l2r, l2r_levels)
         return out.reshape(*x.shape[:-1], *w.shape[1:])
+    if l2r is not None:
+        # production L2R path: the backend-dispatched level-stacked kernel
+        # (kernels/l2r_gemm), not the pure-jnp core pair loop
+        return l2r_matmul_f(x, w, l2r, l2r_levels)
     return l2r_dense(x, w, l2r, l2r_levels)
 
 
@@ -190,6 +222,23 @@ def quantize_params(desc_tree, params):
         scale = jnp.maximum(amax, 1e-30) / 127.0
         q = jnp.clip(jnp.round(wf / scale), -127, 127)
         return {"q": q.astype(jnp.int8), "scale": scale}
+    return jax.tree.map(f, desc_tree, params, is_leaf=_is_param)
+
+
+def quantize_tree(desc_tree, params, cfg: QuantConfig = QuantConfig()):
+    """Materialized f32 params -> :class:`QuantizedWeights` leaves.
+
+    The load-time L2R weight cache for full model trees: every eligible
+    matmul weight (same eligibility as quantize_desc) is quantized ONCE,
+    per out-channel (and per stacked layer), so serving traces carry no
+    weight quantization ops.  dense() consumes the records directly.
+    """
+    def f(p: Param, w):
+        if not _quantizable(p):
+            return w
+        stacked = p.axes and p.axes[0] == "layers"
+        axes = (0, -1) if stacked else (-1,)
+        return quantize_weights(w, cfg, channel_axes=axes)
     return jax.tree.map(f, desc_tree, params, is_leaf=_is_param)
 
 

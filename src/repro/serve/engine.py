@@ -25,8 +25,34 @@ from repro.models.transformer import (LMState, init_lm_state, lm_forward,
                                       logits_from_hidden)
 from repro.sharding.axes import dp_axes
 
-__all__ = ["make_prefill_step", "make_decode_step", "state_specs",
-           "abstract_state", "greedy_generate"]
+__all__ = ["prepare_params", "make_prefill_step", "make_decode_step",
+           "state_specs", "abstract_state", "greedy_generate"]
+
+
+# ------------------------------------------------------- weight preparation
+def prepare_params(cfg: ModelConfig, params, desc=None):
+    """Load-time serving weights: build the L2R weight cache ONCE.
+
+    When ``cfg.l2r`` is set, every eligible matmul weight is converted to
+    a :class:`~repro.core.quant.QuantizedWeights` record (int8 + per-
+    out-channel scale) exactly once, here — the prefill/decode traces
+    then stream activations through the dispatched level-stacked
+    digit-plane kernel with NO per-step weight quantization.  Without an
+    L2R config this is the identity (bf16/f32 serving).
+
+    ``desc`` is the Param descriptor tree (for eligibility); defaults to
+    rebuilding it from ``cfg`` for LM families.
+    """
+    if cfg.l2r is None:
+        return params
+    from repro.models.common import quantize_tree
+
+    if desc is None:
+        assert cfg.family != "encdec", "pass the encdec desc tree explicitly"
+        from repro.models.transformer import lm_build
+
+        desc = lm_build(cfg)
+    return quantize_tree(desc, params, cfg.l2r)
 
 
 # ------------------------------------------------------------- shardings

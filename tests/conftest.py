@@ -2,3 +2,6 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests/ itself, so test modules can import the shared _hypothesis_compat
+# shim regardless of pytest's rootdir/importmode.
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,135 @@
+"""Fused L2R conv (implicit im2col) + the load-time weight cache.
+
+The fused conv must be bit-identical to materialized im2col + the MSDF
+digit-plane GEMM on the same quantized operands (the tap decomposition
+splits the (kh, kw, cin) contraction exactly), and W8A8-close to
+lax.conv in float.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.l2r_gemm import l2r_matmul_int
+from repro.core.quant import QuantConfig, QuantizedWeights, quantize_weights
+from repro.kernels.l2r_gemm import l2r_conv2d
+from repro.kernels.l2r_gemm.ops import _l2r_conv2d_int
+
+
+def _im2col_int(xq, wq, levels=None):
+    """Oracle: materialized patches -> pair-loop MSDF GEMM, same ints."""
+    bsz, h, w_, cin = xq.shape
+    kh, kw, _, cout = wq.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        xq.astype(jnp.float32), (kh, kw), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, H, W, cin*kh*kw), channel-major (cin, kh, kw) — exact in f32
+    flat = jnp.round(patches).astype(jnp.int8).reshape(bsz * h * w_, -1)
+    wmat = wq.transpose(2, 0, 1, 3).reshape(-1, cout)
+    out = l2r_matmul_int(flat, wmat, 8, 2, levels)
+    return np.asarray(out).reshape(bsz, h, w_, cout)
+
+
+@pytest.mark.parametrize("levels", [None, 1, 3, 5, 7])
+def test_fused_conv_bit_identical_to_im2col(levels):
+    """Every truncation depth: tap-decomposed == patch-materialized."""
+    rng = np.random.default_rng(0 if levels is None else levels)
+    xq = jnp.asarray(rng.integers(-128, 128, (2, 9, 7, 5), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-128, 128, (3, 3, 5, 6), dtype=np.int8))
+    out = np.asarray(_l2r_conv2d_int(xq, wq, 8, 2, levels, "jnp"))
+    np.testing.assert_array_equal(out, _im2col_int(xq, wq, levels))
+
+
+def test_fused_conv_1x1_and_5x5():
+    rng = np.random.default_rng(9)
+    xq = jnp.asarray(rng.integers(-128, 128, (1, 8, 8, 4), dtype=np.int8))
+    for k in (1, 5):
+        wq = jnp.asarray(rng.integers(-128, 128, (k, k, 4, 3), dtype=np.int8))
+        out = np.asarray(_l2r_conv2d_int(xq, wq, 8, 2, None, "jnp"))
+        np.testing.assert_array_equal(out, _im2col_int(xq, wq))
+
+
+def test_fused_conv_backends_agree():
+    rng = np.random.default_rng(4)
+    xq = jnp.asarray(rng.integers(-128, 128, (1, 5, 5, 3), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-128, 128, (3, 3, 3, 4), dtype=np.int8))
+    out_jnp = np.asarray(_l2r_conv2d_int(xq, wq, 8, 2, None, "jnp"))
+    out_pl = np.asarray(_l2r_conv2d_int(xq, wq, 8, 2, None, "pallas-interpret"))
+    np.testing.assert_array_equal(out_pl, out_jnp)
+
+
+def test_fused_conv_w8a8_close_to_lax_conv():
+    """Float-level acceptance: fused W8A8 conv vs the lax.conv reference."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 12, 12, 8)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((3, 3, 8, 16)) * 0.1).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((16,)).astype(np.float32))
+    out = np.asarray(l2r_conv2d(x, w, b))
+    ref = np.asarray(jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b)
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert rel < 0.02, rel  # int8 W8A8 quantization error
+
+
+def test_fused_conv_weight_cache_bit_identical():
+    """Passing the load-time cache must not change a single bit vs
+    quantizing the same weights inside the call."""
+    rng = np.random.default_rng(2)
+    cfg = QuantConfig()
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 4)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((3, 3, 4, 6)) * 0.2).astype(np.float32))
+    w_q = quantize_weights(w, cfg)
+    assert isinstance(w_q, QuantizedWeights)
+    assert w_q.q.dtype == jnp.int8 and w_q.q.shape == w.shape
+    out_cached = np.asarray(l2r_conv2d(x, None, None, cfg, w_q=w_q))
+    out_fresh = np.asarray(l2r_conv2d(x, w, None, cfg))
+    np.testing.assert_array_equal(out_cached, out_fresh)
+
+
+def test_quantized_weights_is_pytree():
+    """The cache must flow through jit/scan/tree transparently."""
+    w_q = quantize_weights(jnp.ones((4, 3)))
+    leaves, treedef = jax.tree.flatten(w_q)
+    assert len(leaves) == 2
+    back = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(back, QuantizedWeights)
+    doubled = jax.jit(lambda t: jax.tree.map(lambda x: x, t))(w_q)
+    assert isinstance(doubled, QuantizedWeights)
+
+
+def test_vgg16_weight_cache_path():
+    """vgg16_apply(l2r=...) through the prebuilt cache: bit-identical to
+    the cache built internally, and the cache quantizes each weight once."""
+    from repro.models.cnn import (vgg16_apply, vgg16_build,
+                                  vgg16_quantize_weights)
+    from repro.models.common import materialize
+
+    cfg = QuantConfig()
+    params = materialize(vgg16_build(n_classes=10), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.standard_normal((1, 32, 32, 3)).astype(np.float32))
+    cache = vgg16_quantize_weights(params, cfg)
+    assert all(isinstance(v, QuantizedWeights) for v in cache.values())
+    out_cached = np.asarray(vgg16_apply(params, img, l2r=cfg, weights_q=cache))
+    out_auto = np.asarray(vgg16_apply(params, img, l2r=cfg))
+    np.testing.assert_array_equal(out_cached, out_auto)
+
+
+def test_dense_quantized_weights_record():
+    """models/common.dense consumes QuantizedWeights on both paths."""
+    from repro.models.common import dense
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((6, 32)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((32, 10)) * 0.2).astype(np.float32))
+    cfg = QuantConfig()
+    w_q = quantize_weights(w, cfg)
+    # L2R path: cached weights == freshly quantized weights, bit for bit
+    np.testing.assert_array_equal(
+        np.asarray(dense(x, w_q, l2r=cfg)), np.asarray(dense(x, w, l2r=cfg)))
+    # plain W8A8 path (no l2r config): close to the float matmul
+    out = np.asarray(dense(x, w_q))
+    ref = np.asarray(x @ w)
+    assert np.abs(out - ref).max() / np.abs(ref).max() < 0.02

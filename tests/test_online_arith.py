@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional hypothesis
 
 from repro.core.online import msdf_levels, msdf_pairs, online_delay, tail_bound
 from repro.core.quant import (QuantConfig, dequantize, digit_planes,

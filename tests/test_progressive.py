@@ -4,7 +4,7 @@ analogue of the hardware's MSDF digit stream."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional hypothesis
 
 from repro.core.progressive import earliest_decision_level, progressive_matmul
 
