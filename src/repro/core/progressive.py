@@ -1,91 +1,359 @@
-"""Progressive-precision (online early-output) machinery.
+"""Streaming progressive-precision subsystem (online early output).
 
 The hardware's defining property is that most-significant output digits
 are available after the online delay, long before the computation
-finishes.  The serving-level analogue implemented here: accumulate the
-MSDF plane-pair stream level by level, tracking the hard tail bound from
-core/online.py; a consumer (e.g. greedy decoding) may stop as soon as its
-decision is invariant to any completion of the tail — exactly how a
-downstream online unit starts consuming digits before its producer
-finishes.
+finishes.  This module is the tensor-level realization of that property
+**on the level-stacked schedule** (core/l2r_gemm.py): a single
+``lax.scan`` walks the significance levels s = 2D-2 .. 0 most significant
+first, carrying only the running ``(…, M, N)`` accumulator, and after
+every level the prefix sum is *bit-identical* to the stacked schedule
+truncated at that depth (`l2r_matmul_int_stacked(..., levels=t+1)`).
+
+Mechanics: both operands keep the pre-stacked digit-plane layout the
+dispatcher uses (quant.py:stack_planes_lhs/rhs) and are zero-padded by
+D-1 extra plane blocks.  Every level then reads a *fixed-width* window of
+D plane blocks — LHS at block ``i_lo(s)``, RHS at block ``d-1-s+i_lo`` —
+and the pairs outside the level's true range land on zero blocks on
+exactly one side, contributing nothing.  A fixed window makes the level
+loop a scan (one fused contraction per step), which is what lets
+consumers *fold* over the stream (`streaming_matmul_scan`) without ever
+materializing the ``(L, …, M, N)`` snapshot stack: early-exit consumers
+(VGG classify heads, progressive decode) carry only their decision state.
+
+Decision machinery: `level_bounds` gives per-level hard bounds on the
+unseen tail (core/online.py:tail_bound) in three forms — a conservatively
+up-rounded float32 (for scaled-domain decisions), an int32 bound with an
+explicit exactness guard (`decidable`; levels whose true bound exceeds
+the int32 clip are simply never decidable — conservative, never wrong),
+and the raw Python ints.  `earliest_decision_level` compares margins and
+bounds in a single dtype (int32) under that guard.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import Iterator, NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .online import msdf_pairs, tail_bound
-from .quant import QuantConfig, digit_planes, quantize
+from .l2r_gemm import _f32_dot_exact
+from .online import msdf_levels, tail_bound
+from .quant import plane_count, stack_planes_lhs, stack_planes_rhs
 
-__all__ = ["ProgressiveResult", "progressive_matmul", "earliest_decision_level"]
+__all__ = [
+    "ProgressiveResult",
+    "LevelBounds",
+    "level_bounds",
+    "progressive_matmul",
+    "streaming_matmul_scan",
+    "l2r_matmul_int_streaming",
+    "streaming_argmax",
+    "decision_state",
+    "earliest_decision_level",
+]
+
+# int32 decision clip: bounds above this cannot be compared exactly in
+# int32 (2*bound must not overflow), so those levels are marked
+# undecidable instead of comparing in a lossy dtype.
+_BOUND_CLIP = (2**31 - 1) // 2
 
 
 class ProgressiveResult(NamedTuple):
     """Stacked per-level prefix results of the MSDF stream.
 
     partial:    (L, ..., M, N) int32 prefix sums, level l includes the
-                top (l+1) significance levels.
-    tail_bound: (L,) int64 — hard bound on |exact - partial[l]|.
+                top (l+1) significance levels — bit-identical to the
+                stacked schedule truncated at levels=l+1.
+    tail_bound: (L,) float32 — hard bound on |exact - partial[l]|,
+                conservatively rounded toward +inf.
+    bound_i32:  (L,) int32 — the same bound where it fits the int32
+                decision range (clipped otherwise).
+    decidable:  (L,) bool — True iff bound_i32 is the exact bound, i.e.
+                int32 margin comparisons at this level are sound.
     """
 
     partial: jax.Array
     tail_bound: jax.Array
+    bound_i32: jax.Array
+    decidable: jax.Array
 
 
-@partial(jax.jit, static_argnames=("n_bits", "log2_radix"))
+class LevelBounds(NamedTuple):
+    """Per-level tail bounds in the three dtypes consumers need."""
+
+    f32: jax.Array        # (L,) float32, rounded toward +inf
+    i32: jax.Array        # (L,) int32, clipped at the decision range
+    decidable: jax.Array  # (L,) bool, True iff i32 is exact
+    exact: tuple          # Python ints (host-side reporting)
+
+
+def _f32_up(b: int) -> np.float32:
+    """Smallest float32 >= the exact integer bound (inf if out of range)."""
+    v = np.float32(b)
+    if np.isinf(v):
+        return v
+    # float32 -> exact int comparison in unbounded Python ints
+    if int(v) < b:
+        v = np.nextafter(v, np.float32(np.inf))
+    return v
+
+
+def level_bounds(d: int, log2_radix: int, k: int,
+                 levels: int | None = None) -> LevelBounds:
+    """Hard tail bounds after each of the first `levels` MSDF levels."""
+    n_levels = len(msdf_levels(d)[:levels])
+    exact = tuple(tail_bound(d, t + 1, log2_radix, k)
+                  for t in range(n_levels))
+    f32 = np.asarray([_f32_up(b) for b in exact], np.float32)
+    fits = np.asarray([b <= _BOUND_CLIP for b in exact], bool)
+    i32 = np.asarray([b if f else _BOUND_CLIP for b, f in zip(exact, fits)],
+                     np.int32)
+    return LevelBounds(jnp.asarray(f32), jnp.asarray(i32),
+                       jnp.asarray(fits), exact)
+
+
+# ------------------------------------------------------- streaming emitter
+def _streaming_operands(aq, bq, n_bits, log2_radix):
+    """Zero-padded raw-digit plane stacks for the fixed-width level scan."""
+    d = plane_count(n_bits, log2_radix)
+    k = aq.shape[-1]
+    a_stack = stack_planes_lhs(aq, n_bits, log2_radix, shifted=False)
+    b_rev = stack_planes_rhs(bq, n_bits, log2_radix, shifted=False)
+    pad = (d - 1) * k
+    a_pad = jnp.pad(a_stack, [(0, 0)] * (a_stack.ndim - 1) + [(0, pad)])
+    b_pad = jnp.pad(b_rev, [(0, pad)] + [(0, 0)] * (b_rev.ndim - 1))
+    return a_pad, b_pad
+
+
+def _level_walk(d: int, levels: int | None):
+    """Per-step (a_off, b_off, s) block offsets of the fixed-width window.
+
+    Level s reads LHS blocks [i_lo, i_lo+D) and RHS (reversed) blocks
+    [d-1-s+i_lo, d-1-s+i_lo+D); the window positions past the level's
+    true pair range hit zero padding on exactly one side.
+    """
+    svals = msdf_levels(d)[:levels]
+    a_off = np.asarray([max(0, s - d + 1) for s in svals], np.int32)
+    b_off = np.asarray([d - 1 - s + a for s, a in zip(svals, a_off)],
+                       np.int32)
+    return a_off, b_off, np.asarray(svals, np.int32)
+
+
+def streaming_matmul_scan(
+    aq: jax.Array,
+    bq: jax.Array,
+    fold: Callable | None = None,
+    init=None,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    emit: bool = False,
+):
+    """Scan the per-level MSDF prefix stream; never stacks levels itself.
+
+    ``fold(carry, partial, level_index) -> carry`` consumes each prefix
+    as it is emitted (the software analogue of a downstream online unit
+    reading digits before the producer finishes); the scan carries only
+    the ``(…, M, N)`` accumulator plus the fold's own state.  With
+    ``emit=True`` the per-level prefixes are also returned stacked
+    (``(L, …, M, N)`` — only for consumers that genuinely need the full
+    snapshot history, e.g. `progressive_matmul`).
+
+    Returns ``(final_partial, final_fold_carry, stack_or_None)``.  Each
+    prefix is bit-identical to ``l2r_matmul_int_stacked(..., levels=t+1)``.
+    """
+    d = plane_count(n_bits, log2_radix)
+    k = aq.shape[-1]
+    a_off, b_off, svals = _level_walk(d, levels)
+    n_steps = int(svals.shape[0])
+    acc0 = jnp.zeros((*aq.shape[:-1], bq.shape[-1]), jnp.int32)
+    if n_steps == 0:  # levels=0: empty MSDF prefix
+        empty = jnp.zeros((0, *acc0.shape), jnp.int32) if emit else None
+        return acc0, init, empty
+
+    a_pad, b_pad = _streaming_operands(aq, bq, n_bits, log2_radix)
+    # the fixed window spans up to D real pairs -> the f32 exactness guard
+    # must hold for a depth-D*K contraction of raw digits
+    use_f32 = _f32_dot_exact(k, d, log2_radix)
+    if use_f32:
+        a_pad = a_pad.astype(jnp.float32)
+        b_pad = b_pad.astype(jnp.float32)
+    w = d * k
+
+    def step(carry, xs):
+        acc, fold_c = carry
+        ao, bo, s, idx = xs
+        a_l = jax.lax.dynamic_slice_in_dim(a_pad, ao * k, w,
+                                           axis=a_pad.ndim - 1)
+        b_l = jax.lax.dynamic_slice_in_dim(b_pad, bo * k, w, axis=0)
+        term = jax.lax.dot_general(
+            a_l, b_l,
+            ((((a_l.ndim - 1),), ((0,))), ((), ())),
+            preferred_element_type=jnp.float32 if use_f32 else jnp.int32,
+            precision=jax.lax.Precision.HIGHEST if use_f32 else None,
+        )
+        acc = acc + (term.astype(jnp.int32) << (log2_radix * s))
+        if fold is not None:
+            fold_c = fold(fold_c, acc, idx)
+        return (acc, fold_c), (acc if emit else None)
+
+    xs = (jnp.asarray(a_off), jnp.asarray(b_off), jnp.asarray(svals),
+          jnp.arange(n_steps, dtype=jnp.int32))
+    (acc, fold_c), ys = jax.lax.scan(step, (acc0, init), xs)
+    return acc, fold_c, ys
+
+
+@partial(jax.jit, static_argnames=("n_bits", "log2_radix", "levels"))
+def l2r_matmul_int_streaming(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+) -> jax.Array:
+    """Final (or `levels`-truncated) result via the streaming schedule.
+
+    Bit-identical to `l2r_matmul_int_stacked`; carries only the running
+    accumulator — the dispatcher's ``schedule="streaming"`` jnp entry.
+    """
+    acc, _, _ = streaming_matmul_scan(aq, bq, None, None, n_bits,
+                                      log2_radix, levels)
+    return acc
+
+
+@partial(jax.jit, static_argnames=("n_bits", "log2_radix", "levels"))
 def progressive_matmul(
     aq: jax.Array,
     bq: jax.Array,
     n_bits: int = 8,
     log2_radix: int = 2,
+    levels: int | None = None,
 ) -> ProgressiveResult:
-    """Run the full MSDF stream, snapshotting after every significance level."""
-    d = n_bits // log2_radix
-    k = aq.shape[-1]
-    ap = digit_planes(aq, n_bits, log2_radix)
-    bp = digit_planes(bq, n_bits, log2_radix)
-    n_levels = 2 * d - 1
+    """Full per-level snapshot stack of the MSDF stream.
 
-    acc = jnp.zeros((*aq.shape[:-1], bq.shape[-1]), jnp.int32)
-    snaps = []
-    bounds = []
-    for lv in range(1, n_levels + 1):
-        s = 2 * d - 1 - lv  # significance of this level
-        for i in range(min(s, d - 1), -1, -1):
-            j = s - i
-            if j < 0 or j >= d:
-                continue
-            term = jax.lax.dot_general(
-                ap[i], bp[j],
-                ((((ap[i].ndim - 1),), (0,)), ((), ())),
-                preferred_element_type=jnp.int32,
-            )
-            acc = acc + (term << (log2_radix * s))
-        snaps.append(acc)
-        bounds.append(tail_bound(d, lv, log2_radix, k))
-    # float32 bound (exactly representable range is ample here and avoids
-    # depending on x64 mode); consumers compare against int32 margins.
-    return ProgressiveResult(
-        partial=jnp.stack(snaps),
-        tail_bound=jnp.asarray(bounds, jnp.float32),
-    )
+    Built on the same streaming scan the serving consumers fold over;
+    the ``(L, …, M, N)`` stack exists only because this API returns it
+    (tests/benchmarks) — early-exit consumers use
+    :func:`streaming_matmul_scan` / :func:`streaming_argmax` instead.
+    """
+    bounds = level_bounds(plane_count(n_bits, log2_radix), log2_radix,
+                          aq.shape[-1], levels)
+    _, _, stack = streaming_matmul_scan(aq, bq, None, None, n_bits,
+                                        log2_radix, levels, emit=True)
+    return ProgressiveResult(partial=stack, tail_bound=bounds.f32,
+                             bound_i32=bounds.i32, decidable=bounds.decidable)
+
+
+# ------------------------------------------------------ decision machinery
+def decision_state(values: jax.Array, bvec: jax.Array):
+    """Is the argmax of `values` invariant to any ±bvec perturbation?
+
+    values: (..., N) scores; bvec: per-entry bound, broadcastable to
+    values.  Decided iff the top-1 lower confidence bound strictly beats
+    every other entry's upper bound.  Returns (decided (...,), argmax).
+    """
+    top = jnp.argmax(values, axis=-1)
+    lb = values - bvec
+    ub = values + bvec
+    lb_top = jnp.take_along_axis(lb, top[..., None], axis=-1)[..., 0]
+    ub_others = jnp.where(
+        jax.nn.one_hot(top, values.shape[-1], dtype=bool), -jnp.inf, ub)
+    return lb_top > jnp.max(ub_others, axis=-1), top.astype(jnp.int32)
+
+
+def streaming_argmax(
+    xq: jax.Array,
+    wq: jax.Array,
+    xs: jax.Array,
+    ws: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    bias: jax.Array | None = None,
+    out_dtype=jnp.float32,
+    safety: float = 1e-5,
+):
+    """Stream a quantized classifier/LM-head matmul, committing the argmax
+    of the *dequantized* scores at the earliest sound level.
+
+    xq (M, K) int row activations with per-row scales xs (M, 1); wq (K, N)
+    int weights with per-out-channel scales ws (1, N).  ``levels``
+    truncates the stream exactly like every other `levels` in the stack
+    (the final prefix then equals the truncated one-shot matmul).
+
+    The decision runs in the scaled domain — per-entry bound
+    ``tail * xs * ws`` (per-channel weight scales mean a scalar int
+    margin test would be unsound) — widened by two float32 slack terms:
+    a relative ``safety`` on the bound itself, and a per-row absolute
+    term of a few ulps of the LARGEST score magnitude, because the
+    rounding error of ``int32 partial -> f32 * scales`` scales with the
+    score, not with the (possibly much smaller) tail bound.  Rows never
+    decided early fall back to the final argmax, so the committed index
+    ALWAYS equals the full-precision (or `levels`-truncated) argmax.
+
+    Returns ``(logits (M, N) out_dtype, tok (M,) int32, exit_level (M,)
+    int32)`` where exit_level counts levels actually needed (L-1 = full
+    stream).  ``logits`` reproduces kernels/l2r_gemm ``l2r_matmul_f``
+    dequantization bit-for-bit (same op order), so downstream argmaxes
+    agree with the non-streaming path.
+    """
+    d = plane_count(n_bits, log2_radix)
+    bounds = level_bounds(d, log2_radix, xq.shape[-1], levels)
+    n_levels = int(bounds.f32.shape[0])
+    wsr = ws.reshape(1, -1).astype(jnp.float32)
+    xsf = xs.astype(jnp.float32)
+    m = xq.shape[0]
+    # |fl(v) - v| <= ~3 ulp(|v|) across the cast + two scale products and
+    # the bias add; 8 ulp of the row max is a comfortable envelope
+    eps = 8.0 * jnp.finfo(jnp.float32).eps
+
+    def fold(carry, partial, idx):
+        tok, lv, done = carry
+        values = partial.astype(jnp.float32) * xsf * wsr
+        if bias is not None:
+            values = values + bias.astype(jnp.float32)
+        vmax = jnp.max(jnp.abs(values), axis=-1, keepdims=True)
+        bvec = bounds.f32[idx] * xsf * wsr * (1.0 + safety) + eps * vmax
+        decided, am = decision_state(values, bvec)
+        newly = decided & ~done
+        tok = jnp.where(newly, am, tok)
+        lv = jnp.where(newly, idx, lv)
+        return tok, lv, done | decided
+
+    init = (jnp.zeros((m,), jnp.int32),
+            jnp.full((m,), max(n_levels - 1, 0), jnp.int32),
+            jnp.zeros((m,), bool))
+    acc, (tok, lv, done), _ = streaming_matmul_scan(
+        xq, wq, fold, init, n_bits, log2_radix, levels)
+    # dequantize exactly like l2r_matmul_f: f32 product, then output cast
+    logits = (acc.astype(jnp.float32) * xsf * wsr).astype(out_dtype)
+    full = logits.astype(jnp.float32)
+    if bias is not None:
+        logits = logits + bias.astype(logits.dtype)
+        full = full + bias.astype(jnp.float32)
+    tok = jnp.where(done, tok, jnp.argmax(full, axis=-1).astype(jnp.int32))
+    return logits, tok, lv
 
 
 def earliest_decision_level(result: ProgressiveResult) -> jax.Array:
     """Earliest MSDF level at which greedy argmax over the last axis is
     already decided (top-1 margin exceeds twice the tail bound).
 
-    Returns (...,) int32 per row; value L-1 means "needed the full stream".
+    The margin and the bound are compared in ONE dtype (int32); levels
+    whose exact bound does not fit the int32 decision range carry
+    ``decidable=False`` and are skipped (conservative — a lossy float
+    comparison could declare an unsound early exit).  Returns (...,)
+    int32 per row; value L-1 means "needed the full stream".
     """
     partial = result.partial  # (L, ..., N)
-    bound = result.tail_bound.reshape((-1,) + (1,) * (partial.ndim - 1))
+    extra = (1,) * (partial.ndim - 2)
+    b32 = result.bound_i32.reshape((-1,) + extra)       # (L, 1, ..., 1)
+    ok = result.decidable.reshape((-1,) + extra)
     top2 = jax.lax.top_k(partial, 2)[0]  # (L, ..., 2)
-    margin = top2[..., 0] - top2[..., 1]
-    decided = margin > 2 * bound[..., 0]  # (L, ...)
+    margin = top2[..., 0] - top2[..., 1]  # int32, exact
+    decided = ok & (margin > 2 * b32)  # 2*b32 <= 2^31-2: no overflow
     lv = jnp.argmax(decided, axis=0)  # first True (0 if none True!)
     any_decided = jnp.any(decided, axis=0)
     return jnp.where(any_decided, lv, partial.shape[0] - 1).astype(jnp.int32)

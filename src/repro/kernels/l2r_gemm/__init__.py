@@ -1,12 +1,17 @@
 """L2R digit-plane GEMM: Pallas TPU kernels + backend dispatch + oracles."""
-from .kernel import l2r_gemm_pallas, l2r_gemm_pallas_stacked, stacked_schedule
-from .ops import (BACKENDS, BACKEND_ENV_VAR, l2r_conv2d, l2r_gemm,
+from .kernel import (l2r_gemm_pallas, l2r_gemm_pallas_stacked,
+                     l2r_gemm_pallas_streaming, stacked_schedule,
+                     streaming_schedule)
+from .ops import (BACKENDS, BACKEND_ENV_VAR, SCHEDULES, l2r_conv2d,
+                  l2r_conv2d_progressive, l2r_gemm, l2r_gemm_progressive,
                   l2r_matmul_f, pad_to, resolve_backend)
 from .ref import int_gemm_ref, l2r_gemm_ref, l2r_gemm_ref_stacked
 
 __all__ = [
-    "l2r_gemm_pallas", "l2r_gemm_pallas_stacked", "stacked_schedule",
-    "l2r_gemm", "l2r_matmul_f", "l2r_conv2d", "pad_to",
-    "resolve_backend", "BACKENDS", "BACKEND_ENV_VAR",
+    "l2r_gemm_pallas", "l2r_gemm_pallas_stacked", "l2r_gemm_pallas_streaming",
+    "stacked_schedule", "streaming_schedule",
+    "l2r_gemm", "l2r_gemm_progressive", "l2r_matmul_f", "l2r_conv2d",
+    "l2r_conv2d_progressive", "pad_to",
+    "resolve_backend", "BACKENDS", "BACKEND_ENV_VAR", "SCHEDULES",
     "l2r_gemm_ref", "l2r_gemm_ref_stacked", "int_gemm_ref",
 ]

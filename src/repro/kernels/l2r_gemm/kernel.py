@@ -61,7 +61,9 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.online import msdf_level_slices, msdf_pairs
 from repro.core.quant import stack_planes_lhs, stack_planes_rhs
 
-__all__ = ["l2r_gemm_pallas", "l2r_gemm_pallas_stacked", "stacked_schedule"]
+__all__ = ["l2r_gemm_pallas", "l2r_gemm_pallas_stacked",
+           "l2r_gemm_pallas_streaming", "stacked_schedule",
+           "streaming_schedule"]
 
 
 # --------------------------------------------------------------- pair loop
@@ -252,3 +254,103 @@ def l2r_gemm_pallas_stacked(
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
     )(jnp.asarray(a_idx), jnp.asarray(b_idx), a_stack, b_rev)
+
+
+# ------------------------------------------------------------- streaming
+def streaming_schedule(
+    d: int, k_blocks: int, levels: int | None
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The stacked (level, k-block) walk plus each step's level index.
+
+    The block walk IS :func:`stacked_schedule` (same arrays — that is
+    what makes per-level prefixes bit-identical to stacked truncation);
+    the third vector routes every step's output write to its level's
+    snapshot plane."""
+    a_blocks, b_blocks = stacked_schedule(d, k_blocks, levels)
+    steps_per_level = [(i_hi - i_lo + 1) * k_blocks
+                       for (_, i_lo, i_hi) in msdf_level_slices(d, levels)]
+    lv_idx = np.repeat(np.arange(len(steps_per_level), dtype=np.int32),
+                       steps_per_level)
+    return a_blocks, b_blocks, np.asarray(lv_idx, np.int32)
+
+
+def _l2r_streaming_kernel(a_idx_ref, b_idx_ref, lv_idx_ref,
+                          a_ref, b_ref, o_ref, acc_ref):
+    """One (bm, bn) tile of the per-level snapshot stream.
+
+    Same single-MXU-pass body as the stacked kernel; the running
+    accumulator is additionally written to the current level's output
+    plane every step — when the walk crosses a level boundary the block
+    index map moves to the next plane and the last write left behind IS
+    that level's prefix snapshot (the revisit-then-advance output idiom:
+    per output tile the level index is non-decreasing in t, never
+    revisited)."""
+    del a_idx_ref, b_idx_ref, lv_idx_ref  # consumed by the index maps
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[0] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn",
+                     "interpret"),
+)
+def l2r_gemm_pallas_streaming(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-level snapshot stream of the stacked MSDF GEMM: (L, M, N) int32.
+
+    Level l of the output is bit-identical to the stacked schedule
+    truncated at ``levels=l+1`` — the Pallas realization of the streaming
+    emitter (core/progressive.py) for on-TPU progressive serving.  Shapes
+    must be multiples of the block sizes (ops.py pads)."""
+    m, k = aq.shape
+    k2, n = bq.shape
+    assert k == k2, (aq.shape, bq.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k2},{n}) not padded to blocks ({bm},{bk},{bn})"
+    )
+    d = n_bits // log2_radix
+    a_idx, b_idx, lv_idx = streaming_schedule(d, k // bk, levels)
+    t_steps = int(a_idx.shape[0])
+    n_levels = int(lv_idx[-1]) + 1 if t_steps else 0
+    if t_steps == 0:  # levels=0: empty MSDF prefix
+        return jnp.zeros((0, m, n), jnp.int32)
+
+    a_stack = stack_planes_lhs(aq, n_bits, log2_radix)  # (M, D*K)
+    b_rev = stack_planes_rhs(bq, n_bits, log2_radix)    # (D*K, N)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(m // bm, n // bn, t_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t, ai, bi, li: (i, ai[t])),
+            pl.BlockSpec((bk, bn), lambda i, j, t, ai, bi, li: (bi[t], j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda i, j, t, ai, bi, li: (li[t], i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+    )
+    return pl.pallas_call(
+        _l2r_streaming_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_levels, m, n), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(a_idx), jnp.asarray(b_idx), jnp.asarray(lv_idx),
+      a_stack, b_rev)

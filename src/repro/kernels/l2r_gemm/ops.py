@@ -12,8 +12,13 @@ models/common.py:dense, serve/engine.py).  Three backends:
 
 Selection: explicit ``backend=`` argument > ``REPRO_L2R_BACKEND`` env var
 > platform default (``pallas-tpu`` on TPU hosts, ``jnp`` elsewhere).
-``schedule`` picks ``stacked`` (production, 2D-1 level matmuls) or
-``pairs`` (the D²-pass baseline, kept for regression benchmarks).
+``schedule`` picks ``stacked`` (production, 2D-1 level matmuls),
+``streaming`` (the same level walk emitted as a per-level prefix stream —
+scan-based, progressive-precision consumers fold over it; bit-identical
+to ``stacked`` at every truncation depth) or ``pairs`` (the D²-pass
+baseline, kept for regression benchmarks).  ``l2r_gemm_progressive`` /
+``l2r_conv2d_progressive`` expose the per-level snapshots + tail bounds
+(core/progressive.py) behind the same backend dispatch.
 
 The fused ``l2r_conv2d`` performs implicit im2col: the kh*kw taps of the
 window stream through the digit-plane GEMM as shifted views of the
@@ -34,15 +39,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.l2r_gemm import (l2r_matmul_int_stacked, stacked_gemm_planes)
-from repro.core.quant import (QuantConfig, QuantizedWeights, quantize,
-                              quantize_weights, stack_planes_lhs,
+from repro.core.progressive import (ProgressiveResult, l2r_matmul_int_streaming,
+                                    level_bounds, progressive_matmul)
+from repro.core.quant import (QuantConfig, QuantizedWeights, plane_count,
+                              quantize, quantize_weights, stack_planes_lhs,
                               stack_planes_rhs)
 
-from .kernel import l2r_gemm_pallas, l2r_gemm_pallas_stacked
+from .kernel import (l2r_gemm_pallas, l2r_gemm_pallas_stacked,
+                     l2r_gemm_pallas_streaming)
 from .ref import l2r_gemm_ref
 
-__all__ = ["l2r_gemm", "l2r_matmul_f", "l2r_conv2d", "pad_to",
-           "resolve_backend", "BACKENDS", "BACKEND_ENV_VAR"]
+__all__ = ["l2r_gemm", "l2r_gemm_progressive", "l2r_matmul_f", "l2r_conv2d",
+           "l2r_conv2d_progressive", "pad_to", "resolve_backend",
+           "BACKENDS", "BACKEND_ENV_VAR", "SCHEDULES"]
+
+SCHEDULES = ("stacked", "pairs", "streaming")
 
 BACKENDS = ("jnp", "pallas-interpret", "pallas-tpu")
 BACKEND_ENV_VAR = "REPRO_L2R_BACKEND"
@@ -96,14 +107,22 @@ def _l2r_gemm_backend(
     if backend == "jnp":
         if schedule == "stacked":
             return l2r_matmul_int_stacked(aq, bq, n_bits, log2_radix, levels)
+        if schedule == "streaming":
+            return l2r_matmul_int_streaming(aq, bq, n_bits, log2_radix, levels)
         return l2r_gemm_ref(aq, bq, n_bits, log2_radix, levels)
     m, k = aq.shape
     n = bq.shape[1]
     ap = pad_to(aq, (bm, bk))
     bp = pad_to(bq, (bk, bn))
-    fn = l2r_gemm_pallas_stacked if schedule == "stacked" else l2r_gemm_pallas
+    interpret = backend == "pallas-interpret"
+    # schedule="streaming" asks only for the FINAL prefix: the stacked
+    # kernel walks the identical (level, k-block) schedule, so it IS that
+    # prefix — writing the (L, M, N) snapshot planes
+    # (l2r_gemm_pallas_streaming, used by l2r_gemm_progressive) would
+    # spend L x the output HBM on a bit-identical result.
+    fn = l2r_gemm_pallas if schedule == "pairs" else l2r_gemm_pallas_stacked
     out = fn(ap, bp, n_bits, log2_radix, levels, bm, bk, bn,
-             interpret=(backend == "pallas-interpret"))
+             interpret=interpret)
     return out[:m, :n]
 
 
@@ -125,9 +144,55 @@ def l2r_gemm(
     matmul).  Bit-identical across backends and schedules, including
     truncated ``levels``.
     """
-    assert schedule in ("stacked", "pairs"), schedule
+    assert schedule in SCHEDULES, schedule
     return _l2r_gemm_backend(aq, bq, n_bits, log2_radix, levels,
                              bm, bk, bn, schedule, resolve_backend(backend))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn",
+                     "backend"),
+)
+def _l2r_gemm_progressive_backend(aq, bq, n_bits, log2_radix, levels,
+                                  bm, bk, bn, backend):
+    if backend == "jnp":
+        return progressive_matmul(aq, bq, n_bits, log2_radix, levels)
+    m, k = aq.shape
+    n = bq.shape[1]
+    ap = pad_to(aq, (bm, bk))
+    bp = pad_to(bq, (bk, bn))
+    stream = l2r_gemm_pallas_streaming(ap, bp, n_bits, log2_radix, levels,
+                                       bm, bk, bn,
+                                       interpret=(backend == "pallas-interpret"))
+    bounds = level_bounds(plane_count(n_bits, log2_radix), log2_radix, k,
+                          levels)
+    return ProgressiveResult(partial=stream[:, :m, :n], tail_bound=bounds.f32,
+                             bound_i32=bounds.i32, decidable=bounds.decidable)
+
+
+def l2r_gemm_progressive(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 128,
+    backend: str | None = None,
+) -> ProgressiveResult:
+    """Per-level MSDF snapshot stream with backend dispatch.
+
+    Level l of ``result.partial`` is bit-identical to
+    ``l2r_gemm(..., levels=l+1, schedule="stacked")`` on every backend;
+    bounds come with the int32 exactness guard (core/progressive.py).
+    Consumers that only need a fold over the stream (early-exit serving)
+    should use ``core.progressive.streaming_matmul_scan`` instead — this
+    entry materializes the ``(L, M, N)`` stack it returns.
+    """
+    return _l2r_gemm_progressive_backend(aq, bq, n_bits, log2_radix, levels,
+                                         bm, bk, bn, resolve_backend(backend))
 
 
 def l2r_matmul_f(
@@ -160,9 +225,34 @@ def l2r_matmul_f(
     return out.astype(x.dtype).reshape(*lead, wq.shape[-1])
 
 
+def _conv_same_geometry(h: int, w_: int, kh: int, kw: int,
+                        stride: tuple[int, int], dilation: tuple[int, int]):
+    """Output size + per-edge padding of a "SAME" conv (XLA/TF convention:
+    total pad = max((out-1)*stride + eff_k - in, 0), low edge gets the
+    floor half — matches lax.conv_general_dilated("SAME"))."""
+    sh, sw = stride
+    dh, dw = dilation
+    oh, ow = -(-h // sh), -(-w_ // sw)
+    eff_kh, eff_kw = (kh - 1) * dh + 1, (kw - 1) * dw + 1
+    ph = max((oh - 1) * sh + eff_kh - h, 0)
+    pw = max((ow - 1) * sw + eff_kw - w_, 0)
+    return oh, ow, (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2)
+
+
+def _tap_view(xp: jax.Array, dy: int, dx: int, oh: int, ow: int,
+              stride: tuple[int, int], dilation: tuple[int, int]) -> jax.Array:
+    """Shifted (strided) view of the padded map feeding tap (dy, dx):
+    out[y, x] consumes xp[y*sh + dy*dh, x*sw + dx*dw]."""
+    sh, sw = stride
+    dh, dw = dilation
+    return xp[:, dy * dh:dy * dh + (oh - 1) * sh + 1:sh,
+              dx * dw:dx * dw + (ow - 1) * sw + 1:sw]
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("n_bits", "log2_radix", "levels", "backend"),
+    static_argnames=("n_bits", "log2_radix", "levels", "backend", "stride",
+                     "dilation"),
 )
 def _l2r_conv2d_int(
     xq: jax.Array,
@@ -171,21 +261,25 @@ def _l2r_conv2d_int(
     log2_radix: int,
     levels: int | None,
     backend: str,
+    stride: tuple[int, int] = (1, 1),
+    dilation: tuple[int, int] = (1, 1),
 ) -> jax.Array:
     """Integer core of the fused conv: implicit im2col over kh*kw taps.
 
     xq: (B, H, W, cin) small ints; wq: (kh, kw, cin, cout) small ints;
-    "SAME" padding, stride 1.  Bit-identical to quantized im2col +
-    l2r_matmul_int on the same operands: the contraction over
-    (kh, kw, cin) splits into kh*kw independent cin-contractions, and
-    per-significance-level partial sums add across taps exactly.
+    "SAME" padding, arbitrary stride/dilation (each tap reads a
+    step-sliced shifted view — no patch matrix for any geometry).
+    Bit-identical to quantized im2col + l2r_matmul_int on the same
+    operands: the contraction over (kh, kw, cin) splits into kh*kw
+    independent cin-contractions, and per-significance-level partial
+    sums add across taps exactly.
     """
     bsz, h, w_, cin = xq.shape
     kh, kw, _, cout = wq.shape
-    ph_lo, pw_lo = (kh - 1) // 2, (kw - 1) // 2
-    xp = jnp.pad(xq, ((0, 0), (ph_lo, kh - 1 - ph_lo),
-                      (pw_lo, kw - 1 - pw_lo), (0, 0)))
-    acc = jnp.zeros((bsz, h, w_, cout), jnp.int32)
+    oh, ow, (ph_lo, ph_hi), (pw_lo, pw_hi) = _conv_same_geometry(
+        h, w_, kh, kw, stride, dilation)
+    xp = jnp.pad(xq, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+    acc = jnp.zeros((bsz, oh, ow, cout), jnp.int32)
     if backend == "jnp":
         # hoist plane extraction out of the tap loop: one LHS stack for
         # the whole feature map, one reversed RHS stack for all taps
@@ -195,7 +289,7 @@ def _l2r_conv2d_int(
                                 shifted=False)
         for dy in range(kh):
             for dx in range(kw):
-                a = xsp[:, dy:dy + h, dx:dx + w_, :]
+                a = _tap_view(xsp, dy, dx, oh, ow, stride, dilation)
                 acc = acc + stacked_gemm_planes(
                     a, wrev[dy, dx], cin, n_bits, log2_radix, levels,
                     shifted=False)
@@ -205,10 +299,11 @@ def _l2r_conv2d_int(
     bk = min(256, -(-cin // 128) * 128)
     for dy in range(kh):
         for dx in range(kw):
-            a = xp[:, dy:dy + h, dx:dx + w_, :].reshape(-1, cin)
-            t = _l2r_gemm_backend(a, wq[dy, dx], n_bits, log2_radix, levels,
-                                  128, bk, 128, "stacked", backend)
-            acc = acc + t.reshape(bsz, h, w_, cout)
+            a = _tap_view(xp, dy, dx, oh, ow, stride, dilation)
+            t = _l2r_gemm_backend(a.reshape(-1, cin), wq[dy, dx], n_bits,
+                                  log2_radix, levels, 128, bk, 128,
+                                  "stacked", backend)
+            acc = acc + t.reshape(bsz, oh, ow, cout)
     return acc
 
 
@@ -220,23 +315,160 @@ def l2r_conv2d(
     levels: int | None = None,
     w_q: QuantizedWeights | None = None,
     backend: str | None = None,
+    stride: int | tuple[int, int] = 1,
+    dilation: int | tuple[int, int] = 1,
 ) -> jax.Array:
-    """Fused L2R conv2d, NHWC/HWIO, stride 1, "SAME" padding.
+    """Fused L2R conv2d, NHWC/HWIO, "SAME" padding, any stride/dilation.
 
     The composite-IPU conv without the HBM patch matrix: activations are
     quantized per image (scales commute with the window contraction),
     digit planes are extracted once, and each kernel tap streams a
-    shifted view of the feature map through the level-stacked GEMM.
-    ``w_q`` reuses a load-time weight cache; otherwise ``w`` (kh, kw,
-    cin, cout) is quantized per output channel here.
+    shifted (stride-stepped, dilation-spaced) view of the feature map
+    through the level-stacked GEMM.  ``w_q`` reuses a load-time weight
+    cache; otherwise ``w`` (kh, kw, cin, cout) is quantized per output
+    channel here.
     """
     if w_q is None:
         w_q = quantize_weights(w, cfg)  # (kh,kw,cin,cout), scale (1,1,1,cout)
     xq, xs = quantize(x, cfg, axis=0)  # per-image scales (B,1,1,1)
     out = _l2r_conv2d_int(xq, w_q.q, cfg.n_bits, cfg.log2_radix, levels,
-                          resolve_backend(backend))
+                          resolve_backend(backend), _pair(stride),
+                          _pair(dilation))
     out = out.astype(jnp.float32) * xs * w_q.scale.reshape(1, 1, 1, -1)
     out = out.astype(x.dtype)
     if b is not None:
         out = out + b.astype(out.dtype)
     return out
+
+
+def _pair(v: int | tuple[int, int]) -> tuple[int, int]:
+    return (v, v) if isinstance(v, int) else tuple(v)
+
+
+# ------------------------------------------------------- progressive conv
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "log2_radix", "levels", "backend", "stride",
+                     "dilation"),
+)
+def _l2r_conv2d_progressive_int(
+    xq: jax.Array,
+    wq: jax.Array,
+    n_bits: int,
+    log2_radix: int,
+    levels: int | None,
+    backend: str,
+    stride: tuple[int, int] = (1, 1),
+    dilation: tuple[int, int] = (1, 1),
+) -> jax.Array:
+    """Per-level prefix stream of the fused conv: (L, B, OH, OW, cout).
+
+    Level l is bit-identical to ``_l2r_conv2d_int(..., levels=l+1)``: the
+    taps share each significance level, so the per-level conv term is the
+    tap sum of per-level GEMM terms.  The jnp path is the streaming scan
+    of core/progressive.py with the tap loop inside the level step
+    (activation planes hoisted once per feature map); Pallas backends sum
+    the per-tap snapshot streams of the streaming kernel.
+    """
+    from repro.core.l2r_gemm import _f32_dot_exact
+    from repro.core.progressive import _level_walk
+
+    bsz, h, w_, cin = xq.shape
+    kh, kw, _, cout = wq.shape
+    d = n_bits // log2_radix
+    oh, ow, (ph_lo, ph_hi), (pw_lo, pw_hi) = _conv_same_geometry(
+        h, w_, kh, kw, stride, dilation)
+    xp = jnp.pad(xq, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+    a_off, b_off, svals = _level_walk(d, levels)
+    n_steps = int(svals.shape[0])
+    if n_steps == 0:
+        return jnp.zeros((0, bsz, oh, ow, cout), jnp.int32)
+    if backend != "jnp":
+        bk = min(256, -(-cin // 128) * 128)
+        acc = jnp.zeros((n_steps, bsz, oh, ow, cout), jnp.int32)
+        for dy in range(kh):
+            for dx in range(kw):
+                a = _tap_view(xp, dy, dx, oh, ow, stride, dilation)
+                ap = pad_to(a.reshape(-1, cin), (128, bk))
+                bp = pad_to(wq[dy, dx], (bk, 128))
+                t = l2r_gemm_pallas_streaming(
+                    ap, bp, n_bits, log2_radix, levels, 128, bk, 128,
+                    interpret=(backend == "pallas-interpret"))
+                t = t[:, :bsz * oh * ow, :cout]
+                acc = acc + t.reshape(n_steps, bsz, oh, ow, cout)
+        return acc
+
+    # jnp: hoisted zero-padded plane stacks, one scan step per level with
+    # the tap loop inside (every tap contributes to the same level term)
+    xsp = stack_planes_lhs(xp, n_bits, log2_radix, shifted=False)
+    wrev = stack_planes_rhs(wq, n_bits, log2_radix, axis=-2, shifted=False)
+    pad = (d - 1) * cin
+    xsp = jnp.pad(xsp, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    wrev = jnp.pad(wrev, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    use_f32 = _f32_dot_exact(cin, d, log2_radix)
+    if use_f32:
+        xsp = xsp.astype(jnp.float32)
+        wrev = wrev.astype(jnp.float32)
+    width = d * cin
+
+    def step(acc, xs):
+        ao, bo, s = xs
+        term = jnp.zeros((bsz, oh, ow, cout), jnp.int32)
+        for dy in range(kh):
+            for dx in range(kw):
+                a = _tap_view(xsp, dy, dx, oh, ow, stride, dilation)
+                a_l = jax.lax.dynamic_slice_in_dim(a, ao * cin, width,
+                                                   axis=a.ndim - 1)
+                b_l = jax.lax.dynamic_slice_in_dim(wrev[dy, dx], bo * cin,
+                                                   width, axis=0)
+                t = jax.lax.dot_general(
+                    a_l, b_l,
+                    ((((a_l.ndim - 1),), ((0,))), ((), ())),
+                    preferred_element_type=jnp.float32 if use_f32
+                    else jnp.int32,
+                    precision=jax.lax.Precision.HIGHEST if use_f32 else None,
+                )
+                term = term + t.astype(jnp.int32)
+        acc = acc + (term << (log2_radix * s))
+        return acc, acc
+
+    acc0 = jnp.zeros((bsz, oh, ow, cout), jnp.int32)
+    xs = (jnp.asarray(a_off), jnp.asarray(b_off), jnp.asarray(svals))
+    _, stack = jax.lax.scan(step, acc0, xs)
+    return stack
+
+
+def l2r_conv2d_progressive(
+    x: jax.Array,
+    w: jax.Array | None = None,
+    cfg: QuantConfig = QuantConfig(),
+    levels: int | None = None,
+    w_q: QuantizedWeights | None = None,
+    backend: str | None = None,
+    stride: int | tuple[int, int] = 1,
+    dilation: int | tuple[int, int] = 1,
+):
+    """Progressive-precision fused conv: per-level snapshots + tail bounds.
+
+    Returns ``(result, scale)``: ``result`` is a
+    :class:`~repro.core.progressive.ProgressiveResult` whose
+    ``partial[l]`` is the integer conv truncated after l+1 MSDF levels
+    (bit-identical to ``l2r_conv2d``'s core at ``levels=l+1``), with tail
+    bounds for the conv's effective contraction K = kh*kw*cin; ``scale``
+    is the (B, 1, 1, cout) dequantization factor (per-image activation
+    scale x per-channel weight scale) — ``partial[l] * scale`` is the
+    float feature map prefix, and ``tail_bound[l] * scale`` bounds its
+    distance from the exact W8A8 conv.
+    """
+    if w_q is None:
+        w_q = quantize_weights(w, cfg)
+    xq, xs = quantize(x, cfg, axis=0)  # per-image scales (B,1,1,1)
+    kh, kw, cin, _ = w_q.q.shape
+    stack = _l2r_conv2d_progressive_int(
+        xq, w_q.q, cfg.n_bits, cfg.log2_radix, levels,
+        resolve_backend(backend), _pair(stride), _pair(dilation))
+    bounds = level_bounds(cfg.planes, cfg.log2_radix, kh * kw * cin, levels)
+    result = ProgressiveResult(partial=stack, tail_bound=bounds.f32,
+                               bound_i32=bounds.i32,
+                               decidable=bounds.decidable)
+    return result, xs * w_q.scale.reshape(1, 1, 1, -1)

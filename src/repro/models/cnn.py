@@ -21,13 +21,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cycle_model import VGG16_CONV_LAYERS
-from repro.core.quant import QuantConfig, QuantizedWeights, quantize_weights
+from repro.core.progressive import streaming_argmax
+from repro.core.quant import (QuantConfig, QuantizedWeights, quantize,
+                              quantize_weights)
 from repro.kernels.l2r_gemm.ops import l2r_conv2d, l2r_matmul_f
 
 from .common import Param, materialize
 
-__all__ = ["vgg16_build", "vgg16_apply", "vgg16_quantize_weights",
-           "VGG16_CONV_LAYERS"]
+__all__ = ["vgg16_build", "vgg16_apply", "vgg16_classify_progressive",
+           "vgg16_quantize_weights", "VGG16_CONV_LAYERS"]
 
 
 def vgg16_build(n_classes: int = 1000, in_channels: int = 3) -> dict:
@@ -82,6 +84,17 @@ def vgg16_apply(
     built here (once per call — callers that jit or loop should build it
     themselves so weights quantize once per model load, not per forward).
     """
+    x, weights_q = _vgg16_trunk(params, images, l2r, levels, weights_q,
+                                backend)
+    if l2r is not None:
+        return l2r_matmul_f(x, None, l2r, levels, w_q=weights_q["fc8"],
+                            backend=backend) + params["fc8"]["b"]
+    return x @ params["fc8"]["w"].astype(x.dtype) + params["fc8"]["b"]
+
+
+def _vgg16_trunk(params, images, l2r, levels, weights_q, backend):
+    """Everything up to the fc8 classifier head: (fc7 activations,
+    weights_q).  Shared by the one-shot and progressive classify paths."""
     x = images
     if l2r is not None and weights_q is None:
         weights_q = vgg16_quantize_weights(params, l2r)
@@ -110,4 +123,35 @@ def vgg16_apply(
         mm = lambda a, name: a @ params[name]["w"].astype(a.dtype)
     x = jax.nn.relu(mm(flat, "fc6") + params["fc6"]["b"])
     x = jax.nn.relu(mm(x, "fc7") + params["fc7"]["b"])
-    return mm(x, "fc8") + params["fc8"]["b"]
+    return x, weights_q
+
+
+def vgg16_classify_progressive(
+    params: dict,
+    images: jax.Array,
+    l2r: QuantConfig = QuantConfig(),
+    weights_q: dict[str, QuantizedWeights] | None = None,
+    backend: str | None = None,
+):
+    """Classification with online early exit on the fc8 logit stream.
+
+    The trunk (convs + fc6/fc7) runs exactly (all MSDF levels); the fc8
+    head streams level by level and each image commits its class as soon
+    as the top-1 logit margin beats the scaled tail bound on the unseen
+    digits — the paper's "most significant digits decide first" property
+    as a serving primitive.  The committed class ALWAYS equals
+    ``argmax(vgg16_apply(..., l2r=l2r))`` (undecided rows fall back to
+    the full stream).
+
+    Returns ``(pred (B,) int32, exit_level (B,) int32, logits (B, C))``;
+    exit_level counts MSDF levels consumed (2D-2 = needed everything).
+    """
+    x, weights_q = _vgg16_trunk(params, images, l2r, None, weights_q, backend)
+    w_q = weights_q["fc8"]
+    # quantize the head activations exactly as l2r_matmul_f does, so the
+    # streamed accumulator is bit-identical to the one-shot fc8 matmul
+    xq, xs = quantize(x, l2r, axis=0 if l2r.per_channel else None)
+    logits, pred, exit_level = streaming_argmax(
+        xq, w_q.q, xs, w_q.scale, l2r.n_bits, l2r.log2_radix,
+        bias=params["fc8"]["b"], out_dtype=x.dtype)
+    return pred, exit_level, logits

@@ -49,14 +49,18 @@ def moe_build(cfg: ModelConfig) -> dict:
 def _expert_ffn(cfg: ModelConfig, wi, wo, xb: jax.Array) -> jax.Array:
     """xb: (E, C, d) -> (E, C, d); per-expert GLU/GELU FFN.
 
-    With the L2R switch on, expert matmuls run through the digit-plane
-    pipeline vmapped over experts (per-expert weight scales)."""
+    With the L2R switch on, expert matmuls run through the **backend
+    dispatcher** (kernels/l2r_gemm/ops.py:l2r_matmul_f) vmapped over
+    experts: they pick up the level-stacked schedule, the guarded f32
+    BLAS fast path, and the ``REPRO_L2R_BACKEND`` override exactly like
+    the dense stack — per-expert activation/weight scales come from the
+    quantization happening inside the vmapped call."""
     glu = cfg.ffn_kind in ("swiglu", "geglu")
     if cfg.l2r is not None:
-        from repro.core.l2r_gemm import l2r_matmul
+        from repro.kernels.l2r_gemm.ops import l2r_matmul_f
 
         wi2 = wi.reshape(wi.shape[0], wi.shape[1], -1)
-        h = jax.vmap(lambda xe, we: l2r_matmul(xe, we, cfg.l2r, cfg.l2r_levels))(
+        h = jax.vmap(lambda xe, we: l2r_matmul_f(xe, we, cfg.l2r, cfg.l2r_levels))(
             xb, wi2
         ).reshape(xb.shape[0], xb.shape[1], *wi.shape[2:])
     else:
@@ -68,9 +72,9 @@ def _expert_ffn(cfg: ModelConfig, wi, wo, xb: jax.Array) -> jax.Array:
     else:
         h = jax.nn.gelu(h)
     if cfg.l2r is not None:
-        from repro.core.l2r_gemm import l2r_matmul
+        from repro.kernels.l2r_gemm.ops import l2r_matmul_f
 
-        return jax.vmap(lambda he, we: l2r_matmul(he, we, cfg.l2r, cfg.l2r_levels))(
+        return jax.vmap(lambda he, we: l2r_matmul_f(he, we, cfg.l2r, cfg.l2r_levels))(
             h, wo
         )
     return jnp.einsum("ecf,efd->ecd", h, wo.astype(xb.dtype))

@@ -406,8 +406,16 @@ def lm_forward(
 
 
 def logits_from_hidden(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    """LM head.  With an L2R config the head matmul runs through the
+    digit-plane pipeline like every other matmul — which also makes it
+    streamable level-by-level (serve/engine.py progressive decode commits
+    tokens bit-identically to this full evaluation).  A ``head_q`` cache
+    entry (serve/engine.py:prepare_params) skips the per-step head-weight
+    quantization on serving paths."""
+    if cfg.l2r is not None and "head_q" in params:
+        return dense(hidden, params["head_q"], cfg.l2r, cfg.l2r_levels)
     if cfg.tie_embeddings:
         w = params["embed"].T
     else:
         w = params["head"]
-    return dense(hidden, w.astype(hidden.dtype))
+    return dense(hidden, w.astype(hidden.dtype), cfg.l2r, cfg.l2r_levels)

@@ -39,6 +39,9 @@ class Request:
     eos_id: int | None = None
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
+    # progressive mode: MSDF exit level of each decoded token (the levels
+    # a digit-serial deployment would actually compute for that step)
+    exit_levels: list = dataclasses.field(default_factory=list)
     done: bool = False
 
 
@@ -84,18 +87,25 @@ def _pad_value(b):
 
 class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
-                 max_len: int = 128, cache_dtype=jnp.float32):
+                 max_len: int = 128, cache_dtype=jnp.float32,
+                 progressive: bool = False):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        self.progressive = progressive
         self.state = init_lm_state(cfg, n_slots, max_len, cache_dtype)
         self.slot_req: list[Request | None] = [None] * n_slots
         self.cur_tok = jnp.zeros((n_slots, 1), jnp.int32)
         self.queue: list[Request] = []
-        self._decode = jax.jit(make_decode_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg, progressive=progressive))
         self._prefill1 = jax.jit(make_prefill_step(cfg, max_len, cache_dtype))
         self.steps = 0
+        # saved-levels accounting (progressive mode): histogram over the
+        # MSDF exit level of every decoded token across all requests
+        self.n_levels = (2 * cfg.l2r.planes - 1
+                         if progressive and cfg.l2r is not None else 0)
+        self.exit_hist = np.zeros(max(self.n_levels, 1), np.int64)
 
     # ------------------------------------------------------------- api
     def submit(self, req: Request):
@@ -135,11 +145,21 @@ class ContinuousBatcher:
         self._admit()
         if all(r is None for r in self.slot_req):
             return False
-        self.state, nxt, _ = self._decode(self.params, self.state, self.cur_tok)
+        if self.progressive:
+            self.state, nxt, _, lv = self._decode(self.params, self.state,
+                                                  self.cur_tok)
+        else:
+            self.state, nxt, _ = self._decode(self.params, self.state,
+                                              self.cur_tok)
+            lv = None
         self.cur_tok = nxt
         for slot, req in enumerate(self.slot_req):
             if req is not None:
                 req.output.append(int(nxt[slot, 0]))
+                if lv is not None:
+                    level = int(lv[slot, 0])
+                    req.exit_levels.append(level)
+                    self.exit_hist[level] += 1
         self.steps += 1
         self._retire()
         return True
@@ -150,3 +170,22 @@ class ContinuousBatcher:
             if not self.step() and self.queue:
                 continue
         return self.steps
+
+    def stats(self) -> dict:
+        """Engine counters; in progressive mode also the saved-levels
+        histogram: exit_level_hist[l] tokens committed after l+1 MSDF
+        levels (a digit-serial deployment skips the remaining
+        n_levels-1-l levels of head compute for those tokens)."""
+        out = {"steps": self.steps, "progressive": self.progressive}
+        if self.progressive and self.exit_hist.sum():
+            total = int(self.exit_hist.sum())
+            levels = np.arange(self.n_levels)
+            mean_exit = float((self.exit_hist * levels).sum() / total)
+            out.update(
+                n_levels=self.n_levels,
+                tokens=total,
+                exit_level_hist=self.exit_hist.tolist(),
+                mean_exit_level=mean_exit,
+                mean_levels_saved=float(self.n_levels - 1 - mean_exit),
+            )
+        return out

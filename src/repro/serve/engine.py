@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.progressive import streaming_argmax
+from repro.core.quant import QuantConfig, QuantizedWeights, quantize
 from repro.models.attention import KVCache
 from repro.models.config import ModelConfig
 from repro.models.encdec import (EncDecState, encdec_forward, encode,
@@ -26,7 +28,8 @@ from repro.models.transformer import (LMState, init_lm_state, lm_forward,
 from repro.sharding.axes import dp_axes
 
 __all__ = ["prepare_params", "make_prefill_step", "make_decode_step",
-           "state_specs", "abstract_state", "greedy_generate"]
+           "progressive_logits_from_hidden", "state_specs", "abstract_state",
+           "greedy_generate"]
 
 
 # ------------------------------------------------------- weight preparation
@@ -45,6 +48,7 @@ def prepare_params(cfg: ModelConfig, params, desc=None):
     """
     if cfg.l2r is None:
         return params
+    from repro.core.quant import quantize_weights
     from repro.models.common import quantize_tree
 
     if desc is None:
@@ -52,7 +56,16 @@ def prepare_params(cfg: ModelConfig, params, desc=None):
         from repro.models.transformer import lm_build
 
         desc = lm_build(cfg)
-    return quantize_tree(desc, params, cfg.l2r)
+    out = quantize_tree(desc, params, cfg.l2r)
+    # the LM head (vocab-axis, excluded from quantize_tree so embedding
+    # lookups keep the f32 table) is the LARGEST matmul of every decode
+    # step — cache its int8 form too so logits_from_hidden and the
+    # progressive head stream skip per-step weight quantization
+    head = (out["embed"].T if cfg.tie_embeddings else out.get("head")) \
+        if isinstance(out, dict) else None
+    if head is not None and not isinstance(head, QuantizedWeights):
+        out = {**out, "head_q": quantize_weights(head, cfg.l2r)}
+    return out
 
 
 # ------------------------------------------------------------- shardings
@@ -93,7 +106,6 @@ def state_specs(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
 
     def kv_spec():
         if kv_shard == "seq":
-            length = max_len if cfg is None else max_len
             seq_ax = "model"
             return KVCache(k=P(b, seq_ax, None, None),
                            v=P(b, seq_ax, None, None),
@@ -176,8 +188,50 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
     return prefill
 
 
-def make_decode_step(cfg: ModelConfig) -> Callable:
-    """(params, state, tokens (B,1)) -> (state, next_tokens (B,1), logits)."""
+def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden):
+    """Stream the LM head level-by-level, committing each row's token at
+    its earliest sound MSDF level.
+
+    The quantization recipe is exactly `logits_from_hidden`'s L2R path
+    (dense -> l2r_matmul_f), so the returned logits are bit-identical to
+    the full head evaluation and the committed tokens ALWAYS equal
+    ``argmax(logits_from_hidden(...))`` — rows that never reach a sound
+    early margin simply consume the whole stream.  Returns
+    ``(logits (..., V), tok (...,) int32, exit_level (...,) int32)``.
+    """
+    qcfg = cfg.l2r or QuantConfig()
+    if "head_q" in params:  # the prepare_params load-time head cache
+        wq, ws = params["head_q"].q, params["head_q"].scale
+    else:
+        if cfg.tie_embeddings:
+            w = params["embed"].T
+        else:
+            w = params["head"]
+        wq, ws = quantize(w.astype(hidden.dtype), qcfg, axis=-1)
+    lead = hidden.shape[:-1]
+    x2 = hidden.reshape(-1, hidden.shape[-1])
+    xq, xs = quantize(x2, qcfg, axis=0 if qcfg.per_channel else None)
+    logits, tok, lv = streaming_argmax(xq, wq, xs, ws, qcfg.n_bits,
+                                       qcfg.log2_radix,
+                                       levels=cfg.l2r_levels,
+                                       out_dtype=hidden.dtype)
+    return (logits.reshape(*lead, -1), tok.reshape(lead), lv.reshape(lead))
+
+
+def make_decode_step(cfg: ModelConfig, progressive: bool = False) -> Callable:
+    """(params, state, tokens (B,1)) -> (state, next_tokens (B,1), logits).
+
+    ``progressive=True`` (LM families, requires ``cfg.l2r``) streams the
+    final head matmul most-significant-level first and commits each
+    token at its earliest decision level; the step then also returns the
+    per-row exit levels: ``(state, next_tokens, logits, exit_level
+    (B,1))``.  Tokens are bit-identical to the non-progressive step —
+    the exit levels are what a digit-serial deployment would NOT compute.
+    """
+    if progressive:
+        assert cfg.family != "encdec", "progressive decode: LM families only"
+        assert cfg.l2r is not None, \
+            "progressive decode streams the quantized head: set cfg.l2r"
 
     def decode(params, state, tokens, rope_positions=None):
         if cfg.family == "encdec":
@@ -187,6 +241,10 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
             hidden, state, _ = lm_forward(
                 cfg, params, tokens=tokens, rope_positions=rope_positions,
                 mode="decode", state=state)
+        if progressive:
+            logits, tok, lv = progressive_logits_from_hidden(
+                cfg, params, hidden)
+            return state, tok.astype(jnp.int32), logits, lv
         logits = logits_from_hidden(cfg, params, hidden)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return state, next_tok, logits

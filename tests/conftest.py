@@ -1,7 +1,18 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # tests/ itself, so test modules can import the shared _hypothesis_compat
 # shim regardless of pytest's rootdir/importmode.
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+def pytest_collection_modifyitems(items):
+    """`tier1` is an alias for "everything that is not slow", so the
+    verify gate is the single entry point `pytest -m tier1` instead of a
+    marker-expression every runner has to get right."""
+    for item in items:
+        if item.get_closest_marker("slow") is None:
+            item.add_marker(pytest.mark.tier1)

@@ -13,8 +13,9 @@ import pytest
 
 from repro.core.l2r_gemm import l2r_matmul_int
 from repro.core.quant import QuantConfig, QuantizedWeights, quantize_weights
-from repro.kernels.l2r_gemm import l2r_conv2d
-from repro.kernels.l2r_gemm.ops import _l2r_conv2d_int
+from repro.kernels.l2r_gemm import l2r_conv2d, l2r_conv2d_progressive
+from repro.kernels.l2r_gemm.ops import (_l2r_conv2d_int,
+                                        _l2r_conv2d_progressive_int)
 
 
 def _im2col_int(xq, wq, levels=None):
@@ -71,6 +72,102 @@ def test_fused_conv_w8a8_close_to_lax_conv():
         dimension_numbers=("NHWC", "HWIO", "NHWC")) + b)
     rel = np.abs(out - ref).max() / np.abs(ref).max()
     assert rel < 0.02, rel  # int8 W8A8 quantization error
+
+
+def _lax_conv_int(xq, wq, stride=(1, 1), dilation=(1, 1)):
+    """Strided/dilated integer conv oracle (f32 is exact for int8 taps)."""
+    out = jax.lax.conv_general_dilated(
+        xq.astype(jnp.float32), wq.astype(jnp.float32), stride, "SAME",
+        rhs_dilation=dilation, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return np.round(np.asarray(out)).astype(np.int64)
+
+
+@pytest.mark.parametrize("stride,dilation", [
+    ((2, 2), (1, 1)), ((1, 1), (2, 2)), ((2, 1), (1, 3)), ((3, 3), (2, 2)),
+])
+def test_fused_conv_stride_dilation_parity(stride, dilation):
+    """Strided/dilated shifted-view slicing vs lax.conv_general_dilated,
+    exact on the integer operands."""
+    rng = np.random.default_rng(sum(stride) * 10 + sum(dilation))
+    xq = jnp.asarray(rng.integers(-128, 128, (2, 11, 9, 5), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-128, 128, (3, 3, 5, 6), dtype=np.int8))
+    out = np.asarray(_l2r_conv2d_int(xq, wq, 8, 2, None, "jnp",
+                                     stride, dilation))
+    np.testing.assert_array_equal(out.astype(np.int64),
+                                  _lax_conv_int(xq, wq, stride, dilation))
+
+
+def test_fused_conv_stride_backends_agree():
+    rng = np.random.default_rng(21)
+    xq = jnp.asarray(rng.integers(-128, 128, (1, 6, 6, 3), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-128, 128, (3, 3, 3, 4), dtype=np.int8))
+    out_j = np.asarray(_l2r_conv2d_int(xq, wq, 8, 2, None, "jnp",
+                                       (2, 2), (1, 1)))
+    out_p = np.asarray(_l2r_conv2d_int(xq, wq, 8, 2, None,
+                                       "pallas-interpret", (2, 2), (1, 1)))
+    np.testing.assert_array_equal(out_p, out_j)
+
+
+def test_fused_conv_strided_float_close_to_lax():
+    rng = np.random.default_rng(22)
+    x = jnp.asarray(rng.standard_normal((1, 9, 9, 4)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((3, 3, 4, 6)) * 0.2).astype(np.float32))
+    out = np.asarray(l2r_conv2d(x, w, None, QuantConfig(), stride=2,
+                                dilation=2))
+    ref = np.asarray(jax.lax.conv_general_dilated(
+        x, w, (2, 2), "SAME", rhs_dilation=(2, 2),
+        dimension_numbers=("NHWC", "HWIO", "NHWC")))
+    assert out.shape == ref.shape
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert rel < 0.02, rel
+
+
+# ------------------------------------------------------- progressive conv
+@pytest.mark.parametrize("stride,dilation", [((1, 1), (1, 1)), ((2, 2), (1, 1))])
+def test_conv_progressive_prefixes_bit_identical(stride, dilation):
+    """Level l of the conv stream == the fused conv truncated at l+1 —
+    the conv-level analogue of the streaming GEMM invariant."""
+    rng = np.random.default_rng(23)
+    xq = jnp.asarray(rng.integers(-128, 128, (2, 7, 6, 5), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-128, 128, (3, 3, 5, 4), dtype=np.int8))
+    stack = np.asarray(_l2r_conv2d_progressive_int(
+        xq, wq, 8, 2, None, "jnp", stride, dilation))
+    assert stack.shape[0] == 7
+    for t in range(7):
+        np.testing.assert_array_equal(
+            stack[t],
+            np.asarray(_l2r_conv2d_int(xq, wq, 8, 2, t + 1, "jnp",
+                                       stride, dilation)),
+            err_msg=f"level {t + 1}")
+
+
+def test_conv_progressive_backends_agree():
+    rng = np.random.default_rng(24)
+    xq = jnp.asarray(rng.integers(-128, 128, (1, 5, 5, 3), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-128, 128, (3, 3, 3, 4), dtype=np.int8))
+    s_j = np.asarray(_l2r_conv2d_progressive_int(xq, wq, 8, 2, None, "jnp",
+                                                 (1, 1), (1, 1)))
+    s_p = np.asarray(_l2r_conv2d_progressive_int(
+        xq, wq, 8, 2, None, "pallas-interpret", (1, 1), (1, 1)))
+    np.testing.assert_array_equal(s_p, s_j)
+
+
+def test_conv_progressive_float_envelope():
+    """The dequantized stream converges to the exact W8A8 conv and every
+    prefix stays inside the scaled tail-bound envelope."""
+    rng = np.random.default_rng(25)
+    cfg = QuantConfig()
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 4)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((3, 3, 4, 6)) * 0.2).astype(np.float32))
+    res, scale = l2r_conv2d_progressive(x, w, cfg)
+    exact = np.asarray(l2r_conv2d(x, w, None, cfg), np.float64)
+    final = np.asarray(res.partial[-1], np.float64) * np.asarray(scale,
+                                                                 np.float64)
+    np.testing.assert_allclose(final, exact, rtol=1e-6, atol=1e-6)
+    for t in range(res.partial.shape[0]):
+        err = np.abs(np.asarray(res.partial[t], np.int64)
+                     - np.asarray(res.partial[-1], np.int64))
+        assert (err <= float(res.tail_bound[t])).all(), t
 
 
 def test_fused_conv_weight_cache_bit_identical():
