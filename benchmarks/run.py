@@ -38,8 +38,14 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+# --check smoke mode (CI): 1 repetition, no warmup — exercises every
+# bench path without pretending the numbers are a timing signal.
+CHECK_MODE = False
+
 
 def _timeit(fn, n=5, warmup=2):
+    if CHECK_MODE:
+        n, warmup = 1, 0
     for _ in range(warmup):
         fn()
     t0 = time.perf_counter()
@@ -277,20 +283,108 @@ def progressive_bench(json_path: str | None = None):
     # the full stream, on the real head operands (rows tiled to a
     # serving-sized batch so the timing is dominated by the GEMM, not
     # dispatch noise)
+    # interleaved min-of-rounds timing for every A-vs-B comparison below:
+    # the effects are 10-30% of a GEMM on a shared CPU host, where
+    # one-round means drift by that much between the two measurements
+    def best_pair(fa, fb, n, rounds=3):
+        if CHECK_MODE:
+            rounds = 1
+        best_a = best_b = float("inf")
+        for _ in range(rounds):
+            best_a = min(best_a, _timeit(fa, n=n, warmup=0))
+            best_b = min(best_b, _timeit(fb, n=n, warmup=0))
+        return best_a, best_b
+
     x, _ = _vgg16_trunk(params, imgs, cfg, None, cache, None)
-    xq, _ = quantize(x, cfg, axis=0)
-    xq = jnp.tile(xq, (16, 1))  # (256, 4096)
+    xq, xs = quantize(x, cfg, axis=0)
+    xqt = jnp.tile(xq, (16, 1))  # (256, 4096)
     wq = cache["fc8"].q
     trunc = int(round(mean_exit)) + 1
     f_full = jax.jit(lambda a, b: l2r_gemm(a, b, cfg.n_bits, cfg.log2_radix))
     f_trunc = jax.jit(
         lambda a, b: l2r_gemm(a, b, cfg.n_bits, cfg.log2_radix, levels=trunc))
-    us_full = _timeit(lambda: jax.block_until_ready(f_full(xq, wq)), n=20)
-    us_trunc = _timeit(lambda: jax.block_until_ready(f_trunc(xq, wq)), n=20)
+    jax.block_until_ready(f_full(xqt, wq))  # compile untimed
+    jax.block_until_ready(f_trunc(xqt, wq))
+    us_full, us_trunc = best_pair(
+        lambda: jax.block_until_ready(f_full(xqt, wq)),
+        lambda: jax.block_until_ready(f_trunc(xqt, wq)), n=10)
     saved = 1.0 - us_trunc / us_full
     emit("progressive_vgg16_head_gemm_truncated", us_trunc,
          f"full_us={us_full:.1f} levels={trunc}/{n_levels} "
          f"wallclock_saved={saved * 100:.0f}%")
+
+    # early-exit SCAN wall-clock: the while-loop emitter stops the level
+    # loop inside one fused computation the moment every row has decided
+    # — measured against the fixed-length scan on the SAME head operands
+    # and decision fold (not a static truncation: the exit level is
+    # discovered at runtime).  Rows are tiled (decision state is
+    # per-row-identical under tiling) so the timing is GEMM-dominated.
+    from repro.core.progressive import streaming_argmax
+
+    ws = cache["fc8"].scale
+    bias = params["fc8"]["b"]
+    xst = jnp.tile(xs, (16, 1))
+    f_scan = jax.jit(lambda a, s: streaming_argmax(
+        a, wq, s, ws, cfg.n_bits, cfg.log2_radix, bias=bias)[1])
+    f_while = jax.jit(lambda a, s: streaming_argmax(
+        a, wq, s, ws, cfg.n_bits, cfg.log2_radix, bias=bias,
+        early_exit=True)[1])
+    tok_scan = np.asarray(f_scan(xqt, xst))
+    tok_while = np.asarray(f_while(xqt, xst))
+    assert (tok_scan == tok_while).all(), "early-exit changed a decision"
+    us_scan, us_while = best_pair(
+        lambda: jax.block_until_ready(f_scan(xqt, xst)),
+        lambda: jax.block_until_ready(f_while(xqt, xst)), n=10)
+    ee_saved = 1.0 - us_while / us_scan
+    emit("progressive_vgg16_head_early_exit_scan", us_while,
+         f"scan_us={us_scan:.1f} batch_exit_level={int(lv.max())}/"
+         f"{n_levels - 1} wallclock_saved={ee_saved * 100:.0f}%")
+
+    # per-image tiles exit at each image's OWN level (a batch tile exits
+    # at its slowest row): the serving-shaped measurement
+    tiles = [(jnp.tile(xq[i:i + 1], (128, 1)),
+              jnp.tile(xs[i:i + 1], (128, 1)))
+             for i in range(xq.shape[0])]
+    for a, s in tiles[:1]:  # compile the (128, K) traces untimed
+        jax.block_until_ready(f_scan(a, s))
+        jax.block_until_ready(f_while(a, s))
+    us_scan1, us_while1 = best_pair(
+        lambda: [jax.block_until_ready(f_scan(a, s)) for a, s in tiles],
+        lambda: [jax.block_until_ready(f_while(a, s)) for a, s in tiles],
+        n=4)
+    ee_saved1 = 1.0 - us_while1 / us_scan1
+    emit("progressive_vgg16_head_early_exit_per_image", us_while1,
+         f"scan_us={us_scan1:.1f} mean_exit={mean_exit:.2f}/{n_levels - 1} "
+         f"wallclock_saved={ee_saved1 * 100:.0f}%")
+
+    # decisive-margin head: a prototype classifier whose logit margins
+    # clear the tail bound around mid-stream (exit ~3-4 of 6) — shows the
+    # early-exit win scaling with the margin regime (the VGG head above
+    # decides at 5/6, so it can only ever skip one of seven levels).
+    # Own rng: the shared stream feeds the pre-existing random-head
+    # trajectory row below, which must stay draw-for-draw comparable
+    # across commits.
+    from repro.models.protohead import prototype_head
+
+    dk, dclasses, drows = 2048, 64, 256
+    dxq, dxs, dw_q, _ = prototype_head(np.random.default_rng(42), dk,
+                                       dclasses, drows, cfg=cfg)
+    g_scan = jax.jit(lambda a, s: streaming_argmax(
+        a, dw_q.q, s, dw_q.scale, cfg.n_bits, cfg.log2_radix)[1:])
+    g_while = jax.jit(lambda a, s: streaming_argmax(
+        a, dw_q.q, s, dw_q.scale, cfg.n_bits, cfg.log2_radix,
+        early_exit=True)[1:])
+    (dtok_s, dlv_s) = jax.tree.map(np.asarray, g_scan(dxq, dxs))
+    (dtok_w, dlv_w) = jax.tree.map(np.asarray, g_while(dxq, dxs))
+    assert (dtok_s == dtok_w).all() and (dlv_s == dlv_w).all()
+    us_dscan, us_dwhile = best_pair(
+        lambda: jax.block_until_ready(g_scan(dxq, dxs)),
+        lambda: jax.block_until_ready(g_while(dxq, dxs)), n=10)
+    d_saved = 1.0 - us_dwhile / us_dscan
+    emit("progressive_decisive_head_early_exit_scan", us_dwhile,
+         f"scan_us={us_dscan:.1f} batch_exit_level={int(dlv_w.max())}/"
+         f"{n_levels - 1} mean_exit={float(dlv_w.mean()):.2f} "
+         f"wallclock_saved={d_saved * 100:.0f}%")
 
     # random classifier heads (the old online_* setting) for the JSON
     # trajectory: margins come from genuine top-order statistics
@@ -304,6 +398,27 @@ def progressive_bench(json_path: str | None = None):
         "head_full_us": us_full, "head_truncated_us": us_trunc,
         "truncated_levels": trunc,
         "wallclock_saved_frac": saved,
+    }, {
+        # the early-exit WHILE scan: runtime-discovered exit, decisions
+        # verified identical to the fixed scan before timing
+        "name": "vgg16_logit_head_early_exit_scan", "n_levels": n_levels,
+        "batch": {
+            "scan_us": us_scan, "early_exit_us": us_while,
+            "exit_level": int(lv.max()),
+            "wallclock_saved_frac": ee_saved,
+        },
+        "per_image": {
+            "scan_us": us_scan1, "early_exit_us": us_while1,
+            "mean_exit_level": mean_exit,
+            "wallclock_saved_frac": ee_saved1,
+        },
+    }, {
+        "name": "decisive_head_early_exit_scan", "n_levels": n_levels,
+        "k": dk, "classes": dclasses, "rows": drows,
+        "scan_us": us_dscan, "early_exit_us": us_dwhile,
+        "batch_exit_level": int(dlv_w.max()),
+        "mean_exit_level": float(dlv_w.mean()),
+        "wallclock_saved_frac": d_saved,
     }]
     a = jnp.asarray(rng.integers(-128, 128, (256, 64), dtype=np.int8))
     b = jnp.asarray(rng.integers(-128, 128, (64, 32), dtype=np.int8))
@@ -330,18 +445,32 @@ def progressive_bench(json_path: str | None = None):
         emit("progressive_json", 0.0, f"wrote={json_path}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+
+    global CHECK_MODE
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="smoke mode: 1 repetition, no warmup, JSON "
+                         "records land in a temp dir (exercises every "
+                         "bench path in CI without overwriting the "
+                         "checked-in trajectory files)")
+    args = ap.parse_args(argv)
+    CHECK_MODE = args.check
+    if args.check:
+        import tempfile
+        json_dir = tempfile.mkdtemp(prefix="bench_check_")
+    else:
+        json_dir = os.path.dirname(__file__)
     print("name,us_per_call,derived")
     table1()
     table2()
     vgg16_cycles()
     kernel_bench()
-    kernel_stacked_bench(
-        os.path.join(os.path.dirname(__file__), "BENCH_l2r_gemm.json"))
+    kernel_stacked_bench(os.path.join(json_dir, "BENCH_l2r_gemm.json"))
     ipu_bench()
     online_stats()
-    progressive_bench(
-        os.path.join(os.path.dirname(__file__), "BENCH_progressive.json"))
+    progressive_bench(os.path.join(json_dir, "BENCH_progressive.json"))
 
 
 if __name__ == "__main__":

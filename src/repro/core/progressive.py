@@ -20,6 +20,13 @@ consumers *fold* over the stream (`streaming_matmul_scan`) without ever
 materializing the ``(L, …, M, N)`` snapshot stack: early-exit consumers
 (VGG classify heads, progressive decode) carry only their decision state.
 
+Two control flows share that per-level step: the fixed-length ``lax.scan``
+(`streaming_matmul_scan` — the oracle, always runs every level) and the
+``lax.while_loop`` early-exit emitter (`streaming_matmul_while`), which
+carries the consumer's fold/decision state and STOPS once every row in
+the tile has decided — turning saved levels into saved wall-clock inside
+one fused computation instead of merely skipped follow-up passes.
+
 Decision machinery: `level_bounds` gives per-level hard bounds on the
 unseen tail (core/online.py:tail_bound) in three forms — a conservatively
 up-rounded float32 (for scaled-domain decisions), an int32 bound with an
@@ -48,6 +55,7 @@ __all__ = [
     "level_bounds",
     "progressive_matmul",
     "streaming_matmul_scan",
+    "streaming_matmul_while",
     "l2r_matmul_int_streaming",
     "streaming_argmax",
     "decision_state",
@@ -141,6 +149,38 @@ def _level_walk(d: int, levels: int | None):
     return a_off, b_off, np.asarray(svals, np.int32)
 
 
+def _stream_setup(aq, bq, n_bits, log2_radix):
+    """Shared operand prep of the scan and while emitters: zero-padded
+    plane stacks, the f32 fast-path decision, and the per-level term
+    function.  BOTH control flows call the identical ``term(ao, bo)`` —
+    same slices, same dot, same dtypes — which is what makes the
+    while-loop path bit-identical to the scan oracle."""
+    d = plane_count(n_bits, log2_radix)
+    k = aq.shape[-1]
+    a_pad, b_pad = _streaming_operands(aq, bq, n_bits, log2_radix)
+    # the fixed window spans up to D real pairs -> the f32 exactness guard
+    # must hold for a depth-D*K contraction of raw digits
+    use_f32 = _f32_dot_exact(k, d, log2_radix)
+    if use_f32:
+        a_pad = a_pad.astype(jnp.float32)
+        b_pad = b_pad.astype(jnp.float32)
+    w = d * k
+
+    def term(ao, bo):
+        a_l = jax.lax.dynamic_slice_in_dim(a_pad, ao * k, w,
+                                           axis=a_pad.ndim - 1)
+        b_l = jax.lax.dynamic_slice_in_dim(b_pad, bo * k, w, axis=0)
+        t = jax.lax.dot_general(
+            a_l, b_l,
+            ((((a_l.ndim - 1),), ((0,))), ((), ())),
+            preferred_element_type=jnp.float32 if use_f32 else jnp.int32,
+            precision=jax.lax.Precision.HIGHEST if use_f32 else None,
+        )
+        return t.astype(jnp.int32)
+
+    return term
+
+
 def streaming_matmul_scan(
     aq: jax.Array,
     bq: jax.Array,
@@ -163,9 +203,13 @@ def streaming_matmul_scan(
 
     Returns ``(final_partial, final_fold_carry, stack_or_None)``.  Each
     prefix is bit-identical to ``l2r_matmul_int_stacked(..., levels=t+1)``.
+
+    This fixed-length scan is the ORACLE of the streaming subsystem: it
+    always executes every requested level.  :func:`streaming_matmul_while`
+    runs the same walk as a ``lax.while_loop`` that stops once the fold's
+    decision state says no more digits are needed.
     """
     d = plane_count(n_bits, log2_radix)
-    k = aq.shape[-1]
     a_off, b_off, svals = _level_walk(d, levels)
     n_steps = int(svals.shape[0])
     acc0 = jnp.zeros((*aq.shape[:-1], bq.shape[-1]), jnp.int32)
@@ -173,28 +217,12 @@ def streaming_matmul_scan(
         empty = jnp.zeros((0, *acc0.shape), jnp.int32) if emit else None
         return acc0, init, empty
 
-    a_pad, b_pad = _streaming_operands(aq, bq, n_bits, log2_radix)
-    # the fixed window spans up to D real pairs -> the f32 exactness guard
-    # must hold for a depth-D*K contraction of raw digits
-    use_f32 = _f32_dot_exact(k, d, log2_radix)
-    if use_f32:
-        a_pad = a_pad.astype(jnp.float32)
-        b_pad = b_pad.astype(jnp.float32)
-    w = d * k
+    term = _stream_setup(aq, bq, n_bits, log2_radix)
 
     def step(carry, xs):
         acc, fold_c = carry
         ao, bo, s, idx = xs
-        a_l = jax.lax.dynamic_slice_in_dim(a_pad, ao * k, w,
-                                           axis=a_pad.ndim - 1)
-        b_l = jax.lax.dynamic_slice_in_dim(b_pad, bo * k, w, axis=0)
-        term = jax.lax.dot_general(
-            a_l, b_l,
-            ((((a_l.ndim - 1),), ((0,))), ((), ())),
-            preferred_element_type=jnp.float32 if use_f32 else jnp.int32,
-            precision=jax.lax.Precision.HIGHEST if use_f32 else None,
-        )
-        acc = acc + (term.astype(jnp.int32) << (log2_radix * s))
+        acc = acc + (term(ao, bo) << (log2_radix * s))
         if fold is not None:
             fold_c = fold(fold_c, acc, idx)
         return (acc, fold_c), (acc if emit else None)
@@ -205,19 +233,99 @@ def streaming_matmul_scan(
     return acc, fold_c, ys
 
 
-@partial(jax.jit, static_argnames=("n_bits", "log2_radix", "levels"))
+def _while_emitter(term, a_off, b_off, svals, log2_radix, acc0,
+                   fold, init, done_fn):
+    """Shared ``lax.while_loop`` harness of the early-exit emitters (GEMM
+    and fused conv): one significance level per iteration — ``term(ao,
+    bo)`` shifted to its level and accumulated, the fold applied, the
+    done predicate polled in the loop condition.  Returns ``(levels_run,
+    acc, fold_carry)``."""
+    n_steps = int(svals.shape[0])
+    a_off = jnp.asarray(a_off)
+    b_off = jnp.asarray(b_off)
+    svals = jnp.asarray(svals)
+
+    def cond(state):
+        t, _, fold_c = state
+        running = t < n_steps
+        if done_fn is not None:
+            running = running & ~done_fn(fold_c)
+        return running
+
+    def body(state):
+        t, acc, fold_c = state
+        acc = acc + (term(a_off[t], b_off[t]) << (log2_radix * svals[t]))
+        if fold is not None:
+            fold_c = fold(fold_c, acc, t)
+        return t + 1, acc, fold_c
+
+    return jax.lax.while_loop(cond, body, (jnp.int32(0), acc0, init))
+
+
+def streaming_matmul_while(
+    aq: jax.Array,
+    bq: jax.Array,
+    fold: Callable | None = None,
+    init=None,
+    done_fn: Callable | None = None,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+):
+    """Early-exit streaming emitter: the SAME level walk as
+    :func:`streaming_matmul_scan`, run as a ``lax.while_loop`` that stops
+    as soon as ``done_fn(fold_carry)`` (a scalar bool — typically "every
+    row in the tile has decided") becomes True, so saved levels are saved
+    wall-clock *inside* the fused computation, not just skipped follow-up
+    passes.
+
+    The loop body is the identical per-level arithmetic of the scan (same
+    slices, same dot, same order), so after ``levels_run`` iterations the
+    accumulator is bit-identical to the scan's prefix at that depth — and
+    since ``done_fn`` only reads the fold state the scan would have
+    produced, the exit level itself is bit-identical too.  With
+    ``done_fn=None`` the loop runs every level (control-flow-only change;
+    final result bit-identical to the scan and the stacked schedule).
+
+    Returns ``(partial, fold_carry, levels_run)``: ``partial`` is the
+    prefix after ``levels_run`` levels (== the full result iff the stream
+    was exhausted), ``levels_run`` the number of levels actually executed.
+    """
+    d = plane_count(n_bits, log2_radix)
+    a_off, b_off, svals = _level_walk(d, levels)
+    n_steps = int(svals.shape[0])
+    acc0 = jnp.zeros((*aq.shape[:-1], bq.shape[-1]), jnp.int32)
+    if n_steps == 0:  # levels=0: empty MSDF prefix
+        return acc0, init, jnp.int32(0)
+
+    term = _stream_setup(aq, bq, n_bits, log2_radix)
+    t, acc, fold_c = _while_emitter(term, a_off, b_off, svals, log2_radix,
+                                    acc0, fold, init, done_fn)
+    return acc, fold_c, t
+
+
+@partial(jax.jit,
+         static_argnames=("n_bits", "log2_radix", "levels", "early_exit"))
 def l2r_matmul_int_streaming(
     aq: jax.Array,
     bq: jax.Array,
     n_bits: int = 8,
     log2_radix: int = 2,
     levels: int | None = None,
+    early_exit: bool = False,
 ) -> jax.Array:
     """Final (or `levels`-truncated) result via the streaming schedule.
 
     Bit-identical to `l2r_matmul_int_stacked`; carries only the running
     accumulator — the dispatcher's ``schedule="streaming"`` jnp entry.
+    ``early_exit=True`` runs the while-loop emitter instead of the fixed
+    scan: with no consumer decision state it still executes every level
+    (control-flow-only — the mode consumers with a fold terminate early).
     """
+    if early_exit:
+        acc, _, _ = streaming_matmul_while(aq, bq, None, None, None,
+                                           n_bits, log2_radix, levels)
+        return acc
     acc, _, _ = streaming_matmul_scan(aq, bq, None, None, n_bits,
                                       log2_radix, levels)
     return acc
@@ -274,6 +382,7 @@ def streaming_argmax(
     bias: jax.Array | None = None,
     out_dtype=jnp.float32,
     safety: float = 1e-5,
+    early_exit: bool = False,
 ):
     """Stream a quantized classifier/LM-head matmul, committing the argmax
     of the *dequantized* scores at the earliest sound level.
@@ -293,11 +402,20 @@ def streaming_argmax(
     decided early fall back to the final argmax, so the committed index
     ALWAYS equals the full-precision (or `levels`-truncated) argmax.
 
+    ``early_exit=True`` runs the while-loop emitter: the level loop STOPS
+    once every row has decided, so the committed tokens and exit levels
+    (bit-identical to the scan path) come with actual wall-clock savings
+    inside the fused computation.  The returned ``logits`` are then the
+    dequantized prefix at the exit level — every committed row's argmax
+    equals the full argmax (that is the decision guarantee), but the logit
+    VALUES carry the undigested tail; consumers that need full-depth logit
+    values keep ``early_exit=False``.
+
     Returns ``(logits (M, N) out_dtype, tok (M,) int32, exit_level (M,)
     int32)`` where exit_level counts levels actually needed (L-1 = full
-    stream).  ``logits`` reproduces kernels/l2r_gemm ``l2r_matmul_f``
-    dequantization bit-for-bit (same op order), so downstream argmaxes
-    agree with the non-streaming path.
+    stream).  With ``early_exit=False`` the ``logits`` reproduce
+    kernels/l2r_gemm ``l2r_matmul_f`` dequantization bit-for-bit (same op
+    order), so downstream argmaxes agree with the non-streaming path.
     """
     d = plane_count(n_bits, log2_radix)
     bounds = level_bounds(d, log2_radix, xq.shape[-1], levels)
@@ -325,9 +443,18 @@ def streaming_argmax(
     init = (jnp.zeros((m,), jnp.int32),
             jnp.full((m,), max(n_levels - 1, 0), jnp.int32),
             jnp.zeros((m,), bool))
-    acc, (tok, lv, done), _ = streaming_matmul_scan(
-        xq, wq, fold, init, n_bits, log2_radix, levels)
-    # dequantize exactly like l2r_matmul_f: f32 product, then output cast
+    if early_exit:
+        acc, (tok, lv, done), _ = streaming_matmul_while(
+            xq, wq, fold, init, lambda c: jnp.all(c[2]),
+            n_bits, log2_radix, levels)
+    else:
+        acc, (tok, lv, done), _ = streaming_matmul_scan(
+            xq, wq, fold, init, n_bits, log2_radix, levels)
+    # dequantize exactly like l2r_matmul_f: f32 product, then output cast.
+    # Early exit only stops the loop short when EVERY row decided, so
+    # whenever the fallback below is reachable (some row undecided) the
+    # stream was exhausted and `acc` IS the full (or levels-truncated)
+    # result — the fallback argmax is identical on both control flows.
     logits = (acc.astype(jnp.float32) * xsf * wsr).astype(out_dtype)
     full = logits.astype(jnp.float32)
     if bias is not None:

@@ -274,7 +274,7 @@ def streaming_schedule(
     return a_blocks, b_blocks, np.asarray(lv_idx, np.int32)
 
 
-def _l2r_streaming_kernel(a_idx_ref, b_idx_ref, lv_idx_ref,
+def _l2r_streaming_kernel(a_idx_ref, b_idx_ref, lv_idx_ref, cnt_ref,
                           a_ref, b_ref, o_ref, acc_ref):
     """One (bm, bn) tile of the per-level snapshot stream.
 
@@ -284,18 +284,27 @@ def _l2r_streaming_kernel(a_idx_ref, b_idx_ref, lv_idx_ref,
     index map moves to the next plane and the last write left behind IS
     that level's prefix snapshot (the revisit-then-advance output idiom:
     per output tile the level index is non-decreasing in t, never
-    revisited)."""
-    del a_idx_ref, b_idx_ref, lv_idx_ref  # consumed by the index maps
+    revisited).
+
+    ``cnt_ref`` is the dynamic level-count scalar: grid steps whose level
+    index is >= the count skip BOTH the MXU pass and the output write —
+    the grid-level analogue of the jnp while-loop's early exit (the grid
+    itself still iterates; a Mosaic grid cannot shrink at runtime, but
+    skipped steps cost a scalar compare instead of an MXU pass + HBM
+    write)."""
+    del a_idx_ref, b_idx_ref  # consumed by the index maps
 
     @pl.when(pl.program_id(2) == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jax.lax.dot_general(
-        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    )
-    o_ref[0] = acc_ref[...]
+    @pl.when(lv_idx_ref[pl.program_id(2)] < cnt_ref[0])
+    def _work():
+        acc_ref[...] += jax.lax.dot_general(
+            a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        o_ref[0] = acc_ref[...]
 
 
 @functools.partial(
@@ -313,13 +322,23 @@ def l2r_gemm_pallas_streaming(
     bk: int = 256,
     bn: int = 128,
     interpret: bool = False,
+    level_count: jax.Array | int | None = None,
 ) -> jax.Array:
     """Per-level snapshot stream of the stacked MSDF GEMM: (L, M, N) int32.
 
     Level l of the output is bit-identical to the stacked schedule
     truncated at ``levels=l+1`` — the Pallas realization of the streaming
     emitter (core/progressive.py) for on-TPU progressive serving.  Shapes
-    must be multiples of the block sizes (ops.py pads)."""
+    must be multiples of the block sizes (ops.py pads).
+
+    ``level_count`` is a DYNAMIC int32 scalar (no recompilation when it
+    changes, unlike the static ``levels``): grid steps at levels >= the
+    count skip their MXU pass and output write, so a consumer that has
+    already decided (e.g. the while-loop early exit on the jnp backend)
+    can stop the snapshot stream short at runtime.  Output planes at
+    levels >= ``level_count`` are left unwritten (unspecified); planes
+    below it are bit-identical to the full run.  ``None`` processes every
+    scheduled level."""
     m, k = aq.shape
     k2, n = bq.shape
     assert k == k2, (aq.shape, bq.shape)
@@ -332,19 +351,24 @@ def l2r_gemm_pallas_streaming(
     n_levels = int(lv_idx[-1]) + 1 if t_steps else 0
     if t_steps == 0:  # levels=0: empty MSDF prefix
         return jnp.zeros((0, m, n), jnp.int32)
+    if level_count is None:
+        level_count = n_levels
+    cnt = jnp.asarray(level_count, jnp.int32).reshape(1)
 
     a_stack = stack_planes_lhs(aq, n_bits, log2_radix)  # (M, D*K)
     b_rev = stack_planes_rhs(bq, n_bits, log2_radix)    # (D*K, N)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(m // bm, n // bn, t_steps),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, t, ai, bi, li: (i, ai[t])),
-            pl.BlockSpec((bk, bn), lambda i, j, t, ai, bi, li: (bi[t], j)),
+            pl.BlockSpec((bm, bk),
+                         lambda i, j, t, ai, bi, li, ct: (i, ai[t])),
+            pl.BlockSpec((bk, bn),
+                         lambda i, j, t, ai, bi, li, ct: (bi[t], j)),
         ],
         out_specs=pl.BlockSpec((1, bm, bn),
-                               lambda i, j, t, ai, bi, li: (li[t], i, j)),
+                               lambda i, j, t, ai, bi, li, ct: (li[t], i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
     )
     return pl.pallas_call(
@@ -352,5 +376,5 @@ def l2r_gemm_pallas_streaming(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_levels, m, n), jnp.int32),
         interpret=interpret,
-    )(jnp.asarray(a_idx), jnp.asarray(b_idx), jnp.asarray(lv_idx),
+    )(jnp.asarray(a_idx), jnp.asarray(b_idx), jnp.asarray(lv_idx), cnt,
       a_stack, b_rev)

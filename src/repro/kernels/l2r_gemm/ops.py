@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import functools
 import os
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +51,8 @@ from .kernel import (l2r_gemm_pallas, l2r_gemm_pallas_stacked,
 from .ref import l2r_gemm_ref
 
 __all__ = ["l2r_gemm", "l2r_gemm_progressive", "l2r_matmul_f", "l2r_conv2d",
-           "l2r_conv2d_progressive", "pad_to", "resolve_backend",
+           "l2r_conv2d_progressive", "l2r_conv2d_progressive_while",
+           "pad_to", "resolve_backend",
            "BACKENDS", "BACKEND_ENV_VAR", "SCHEDULES"]
 
 SCHEDULES = ("stacked", "pairs", "streaming")
@@ -88,7 +90,7 @@ def pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
 @functools.partial(
     jax.jit,
     static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn",
-                     "schedule", "backend"),
+                     "schedule", "backend", "early_exit"),
 )
 def _l2r_gemm_backend(
     aq: jax.Array,
@@ -101,6 +103,7 @@ def _l2r_gemm_backend(
     bn: int,
     schedule: str,
     backend: str,
+    early_exit: bool = False,
 ) -> jax.Array:
     """Backend-resolved integer GEMM (backend is a static, already-resolved
     string here so the trace cache keys on it)."""
@@ -108,7 +111,8 @@ def _l2r_gemm_backend(
         if schedule == "stacked":
             return l2r_matmul_int_stacked(aq, bq, n_bits, log2_radix, levels)
         if schedule == "streaming":
-            return l2r_matmul_int_streaming(aq, bq, n_bits, log2_radix, levels)
+            return l2r_matmul_int_streaming(aq, bq, n_bits, log2_radix,
+                                            levels, early_exit)
         return l2r_gemm_ref(aq, bq, n_bits, log2_radix, levels)
     m, k = aq.shape
     n = bq.shape[1]
@@ -137,16 +141,29 @@ def l2r_gemm(
     bn: int = 128,
     schedule: str = "stacked",
     backend: str | None = None,
+    early_exit: bool = False,
 ) -> jax.Array:
     """Integer MSDF GEMM with backend dispatch. (M,K)x(K,N) -> int32.
 
     Any shape is accepted (Pallas backends zero-pad to blocks — exact for
     matmul).  Bit-identical across backends and schedules, including
     truncated ``levels``.
+
+    ``early_exit`` (``schedule="streaming"``, jnp backend) runs the level
+    walk as the ``lax.while_loop`` emitter instead of the fixed scan —
+    bit-identical result here (with no consumer fold every level runs; it
+    is the control flow early-exit consumers terminate inside, see
+    core/progressive.py).  Pallas backends ignore the flag: their stacked
+    walk already IS the final prefix, and runtime shortening is the
+    streaming kernel's ``level_count`` scalar.
     """
     assert schedule in SCHEDULES, schedule
+    assert not early_exit or schedule == "streaming", \
+        "early_exit is a streaming-schedule control flow; " \
+        f"schedule={schedule!r} does not read it"
     return _l2r_gemm_backend(aq, bq, n_bits, log2_radix, levels,
-                             bm, bk, bn, schedule, resolve_backend(backend))
+                             bm, bk, bn, schedule, resolve_backend(backend),
+                             early_exit)
 
 
 @functools.partial(
@@ -346,6 +363,53 @@ def _pair(v: int | tuple[int, int]) -> tuple[int, int]:
 
 
 # ------------------------------------------------------- progressive conv
+def _conv_level_term(xq, wq, n_bits, log2_radix, stride, dilation):
+    """Per-level term of the progressive conv's jnp paths: hoisted
+    zero-padded plane stacks + a ``term(ao, bo)`` closure summing the tap
+    contributions of one significance level.  Shared by the fixed scan
+    AND the early-exit while loop — identical ops in identical order is
+    what keeps the two control flows bit-identical."""
+    from repro.core.l2r_gemm import _f32_dot_exact
+
+    bsz, h, w_, cin = xq.shape
+    kh, kw, _, cout = wq.shape
+    d = n_bits // log2_radix
+    oh, ow, (ph_lo, ph_hi), (pw_lo, pw_hi) = _conv_same_geometry(
+        h, w_, kh, kw, stride, dilation)
+    xp = jnp.pad(xq, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+    xsp = stack_planes_lhs(xp, n_bits, log2_radix, shifted=False)
+    wrev = stack_planes_rhs(wq, n_bits, log2_radix, axis=-2, shifted=False)
+    pad = (d - 1) * cin
+    xsp = jnp.pad(xsp, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    wrev = jnp.pad(wrev, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    use_f32 = _f32_dot_exact(cin, d, log2_radix)
+    if use_f32:
+        xsp = xsp.astype(jnp.float32)
+        wrev = wrev.astype(jnp.float32)
+    width = d * cin
+
+    def term(ao, bo):
+        t_sum = jnp.zeros((bsz, oh, ow, cout), jnp.int32)
+        for dy in range(kh):
+            for dx in range(kw):
+                a = _tap_view(xsp, dy, dx, oh, ow, stride, dilation)
+                a_l = jax.lax.dynamic_slice_in_dim(a, ao * cin, width,
+                                                   axis=a.ndim - 1)
+                b_l = jax.lax.dynamic_slice_in_dim(wrev[dy, dx], bo * cin,
+                                                   width, axis=0)
+                t = jax.lax.dot_general(
+                    a_l, b_l,
+                    ((((a_l.ndim - 1),), ((0,))), ((), ())),
+                    preferred_element_type=jnp.float32 if use_f32
+                    else jnp.int32,
+                    precision=jax.lax.Precision.HIGHEST if use_f32 else None,
+                )
+                t_sum = t_sum + t.astype(jnp.int32)
+        return t_sum
+
+    return term, (bsz, oh, ow, cout)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("n_bits", "log2_radix", "levels", "backend", "stride",
@@ -370,7 +434,6 @@ def _l2r_conv2d_progressive_int(
     (activation planes hoisted once per feature map); Pallas backends sum
     the per-tap snapshot streams of the streaming kernel.
     """
-    from repro.core.l2r_gemm import _f32_dot_exact
     from repro.core.progressive import _level_walk
 
     bsz, h, w_, cin = xq.shape
@@ -378,12 +441,12 @@ def _l2r_conv2d_progressive_int(
     d = n_bits // log2_radix
     oh, ow, (ph_lo, ph_hi), (pw_lo, pw_hi) = _conv_same_geometry(
         h, w_, kh, kw, stride, dilation)
-    xp = jnp.pad(xq, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
     a_off, b_off, svals = _level_walk(d, levels)
     n_steps = int(svals.shape[0])
     if n_steps == 0:
         return jnp.zeros((0, bsz, oh, ow, cout), jnp.int32)
     if backend != "jnp":
+        xp = jnp.pad(xq, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
         bk = min(256, -(-cin // 128) * 128)
         acc = jnp.zeros((n_steps, bsz, oh, ow, cout), jnp.int32)
         for dy in range(kh):
@@ -398,44 +461,68 @@ def _l2r_conv2d_progressive_int(
                 acc = acc + t.reshape(n_steps, bsz, oh, ow, cout)
         return acc
 
-    # jnp: hoisted zero-padded plane stacks, one scan step per level with
-    # the tap loop inside (every tap contributes to the same level term)
-    xsp = stack_planes_lhs(xp, n_bits, log2_radix, shifted=False)
-    wrev = stack_planes_rhs(wq, n_bits, log2_radix, axis=-2, shifted=False)
-    pad = (d - 1) * cin
-    xsp = jnp.pad(xsp, ((0, 0), (0, 0), (0, 0), (0, pad)))
-    wrev = jnp.pad(wrev, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    use_f32 = _f32_dot_exact(cin, d, log2_radix)
-    if use_f32:
-        xsp = xsp.astype(jnp.float32)
-        wrev = wrev.astype(jnp.float32)
-    width = d * cin
+    term, out_shape = _conv_level_term(xq, wq, n_bits, log2_radix, stride,
+                                       dilation)
 
     def step(acc, xs):
         ao, bo, s = xs
-        term = jnp.zeros((bsz, oh, ow, cout), jnp.int32)
-        for dy in range(kh):
-            for dx in range(kw):
-                a = _tap_view(xsp, dy, dx, oh, ow, stride, dilation)
-                a_l = jax.lax.dynamic_slice_in_dim(a, ao * cin, width,
-                                                   axis=a.ndim - 1)
-                b_l = jax.lax.dynamic_slice_in_dim(wrev[dy, dx], bo * cin,
-                                                   width, axis=0)
-                t = jax.lax.dot_general(
-                    a_l, b_l,
-                    ((((a_l.ndim - 1),), ((0,))), ((), ())),
-                    preferred_element_type=jnp.float32 if use_f32
-                    else jnp.int32,
-                    precision=jax.lax.Precision.HIGHEST if use_f32 else None,
-                )
-                term = term + t.astype(jnp.int32)
-        acc = acc + (term << (log2_radix * s))
+        acc = acc + (term(ao, bo) << (log2_radix * s))
         return acc, acc
 
-    acc0 = jnp.zeros((bsz, oh, ow, cout), jnp.int32)
+    acc0 = jnp.zeros(out_shape, jnp.int32)
     xs = (jnp.asarray(a_off), jnp.asarray(b_off), jnp.asarray(svals))
     _, stack = jax.lax.scan(step, acc0, xs)
     return stack
+
+
+def l2r_conv2d_progressive_while(
+    x: jax.Array,
+    w: jax.Array | None = None,
+    cfg: QuantConfig = QuantConfig(),
+    fold: Callable | None = None,
+    init=None,
+    done_fn: Callable | None = None,
+    levels: int | None = None,
+    w_q: QuantizedWeights | None = None,
+    backend: str | None = None,
+    stride: int | tuple[int, int] = 1,
+    dilation: int | tuple[int, int] = 1,
+):
+    """Early-exit fused conv stream: the progressive conv's level loop run
+    as a ``lax.while_loop`` carrying the consumer's fold state.
+
+    The per-level arithmetic is the SAME tap-summed term the fixed scan
+    of :func:`l2r_conv2d_progressive` executes (shared closure), so after
+    ``levels_run`` iterations the integer prefix is bit-identical to
+    ``result.partial[levels_run - 1]`` of the scan path.  ``fold(carry,
+    partial, level_index) -> carry`` consumes each integer prefix;
+    ``done_fn(fold_carry) -> scalar bool`` stops the loop (``None`` runs
+    every level — control-flow-only).  jnp backend only: the grid-level
+    analogue on Pallas is the streaming kernel's ``level_count`` scalar.
+
+    Returns ``(prefix (B, OH, OW, cout) int32, fold_carry, levels_run
+    () int32, scale (B, 1, 1, cout))`` — ``prefix * scale`` is the float
+    feature-map prefix at the exit level.
+    """
+    assert resolve_backend(backend) == "jnp", (
+        "l2r_conv2d_progressive_while: jnp backend only (use the streaming "
+        "kernel's level_count scalar for grid-level shortening)")
+    if w_q is None:
+        w_q = quantize_weights(w, cfg)
+    xq, xs = quantize(x, cfg, axis=0)  # per-image scales (B,1,1,1)
+    from repro.core.progressive import _level_walk, _while_emitter
+
+    a_off, b_off, svals = _level_walk(cfg.planes, levels)
+    scale = xs * w_q.scale.reshape(1, 1, 1, -1)
+    term, out_shape = _conv_level_term(xq, w_q.q, cfg.n_bits, cfg.log2_radix,
+                                       _pair(stride), _pair(dilation))
+    acc0 = jnp.zeros(out_shape, jnp.int32)
+    if int(svals.shape[0]) == 0:
+        return acc0, init, jnp.int32(0), scale
+    t, acc, fold_c = _while_emitter(term, a_off, b_off, svals,
+                                    cfg.log2_radix, acc0, fold, init,
+                                    done_fn)
+    return acc, fold_c, t, scale
 
 
 def l2r_conv2d_progressive(

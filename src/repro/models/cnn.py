@@ -132,6 +132,7 @@ def vgg16_classify_progressive(
     l2r: QuantConfig = QuantConfig(),
     weights_q: dict[str, QuantizedWeights] | None = None,
     backend: str | None = None,
+    early_exit: bool = False,
 ):
     """Classification with online early exit on the fc8 logit stream.
 
@@ -143,6 +144,12 @@ def vgg16_classify_progressive(
     ``argmax(vgg16_apply(..., l2r=l2r))`` (undecided rows fall back to
     the full stream).
 
+    ``early_exit=True`` stops the head's level loop once EVERY image in
+    the batch has decided (the while-loop emitter): classes and exit
+    levels stay bit-identical, the saved levels become saved wall-clock,
+    and the returned logits are the dequantized prefix at the exit level
+    (full-depth values only when some image needed the whole stream).
+
     Returns ``(pred (B,) int32, exit_level (B,) int32, logits (B, C))``;
     exit_level counts MSDF levels consumed (2D-2 = needed everything).
     """
@@ -153,5 +160,5 @@ def vgg16_classify_progressive(
     xq, xs = quantize(x, l2r, axis=0 if l2r.per_channel else None)
     logits, pred, exit_level = streaming_argmax(
         xq, w_q.q, xs, w_q.scale, l2r.n_bits, l2r.log2_radix,
-        bias=params["fc8"]["b"], out_dtype=x.dtype)
+        bias=params["fc8"]["b"], out_dtype=x.dtype, early_exit=early_exit)
     return pred, exit_level, logits

@@ -1,0 +1,41 @@
+"""Synthetic decisive-margin prototype head.
+
+Early-exit demos and benchmarks need a classifier whose logit margins
+clear the MSDF tail bound mid-stream — an untrained random head has
+exchangeable logits (top-1 margins ~0, nothing ever exits early), while
+a trained classifier operates in the decisive-margin regime.  The
+construction here reproduces that regime synthetically: class c's weight
+column is the unit-normalized prototype vector of class c, and queries
+are noisy copies of prototypes, so the true-class logit dominates by a
+margin set by the noise level.  Shared by benchmarks/run.py and
+examples/progressive_precision.py so the two stay in sync.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QuantConfig, quantize, quantize_weights
+
+__all__ = ["prototype_head"]
+
+
+def prototype_head(rng: np.random.Generator, k: int, classes: int,
+                   rows: int, noise: float = 0.05,
+                   cfg: QuantConfig = QuantConfig()):
+    """Quantized operands of a decisive-margin head matmul.
+
+    Returns ``(xq, xs, w_q, labels)``: per-row-quantized query
+    activations ``xq (rows, k)`` with scales ``xs``, the quantized
+    unit-norm prototype weights ``w_q`` (``(k, classes)`` +
+    per-out-channel scale), and the true class of each query row.
+    """
+    proto = rng.standard_normal((classes, k)).astype(np.float32)
+    labels = rng.integers(0, classes, rows)
+    x = proto[labels] + noise * rng.standard_normal(
+        (rows, k)).astype(np.float32)
+    xq, xs = quantize(jnp.asarray(x), cfg, axis=0)
+    w_q = quantize_weights(jnp.asarray(
+        proto.T / np.linalg.norm(proto.T, axis=0, keepdims=True)), cfg)
+    return xq, xs, w_q, labels

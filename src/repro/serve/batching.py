@@ -28,7 +28,8 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import init_lm_state
 from .engine import make_decode_step, make_prefill_step
 
-__all__ = ["Request", "ContinuousBatcher"]
+__all__ = ["Request", "ContinuousBatcher", "infer_batch_axes",
+           "state_batch_axes"]
 
 
 @dataclasses.dataclass
@@ -42,70 +43,114 @@ class Request:
     # progressive mode: MSDF exit level of each decoded token (the levels
     # a digit-serial deployment would actually compute for that step)
     exit_levels: list = dataclasses.field(default_factory=list)
+    # progressive mode: MSDF exit level of the streamed prefill head
+    # (the first generated token, committed from the LAST prompt
+    # position's logit stream)
+    prefill_exit_level: int | None = None
     done: bool = False
 
 
-def _splice(batch_tree, single_tree, slot: int):
-    """Write `single` (batch=1 leaves) into `batch` at index `slot`.
+def infer_batch_axes(abstract_a, abstract_b):
+    """Per-leaf batch-axis tree, derived from the state pytree STRUCTURE:
+    the same init evaluated abstractly at two batch sizes; each leaf's
+    batch axis is the unique axis whose size changed.  -1 = no batch axis
+    (batch-independent leaf).
+
+    This replaces the old shape-coincidence heuristic in `_splice`
+    (``s.shape[0] == b.shape[0] and ... != 1``), which mis-located the
+    batch axis for stacked ``(layers, batch, ...)`` leaves with
+    ``n_layers == 1`` and for leaves where ``n_slots`` happened to equal
+    a non-batch dim.
+    """
+    def ax(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        if not diffs:
+            return -1
+        assert len(diffs) == 1, (
+            f"ambiguous batch axis: {a.shape} vs {b.shape}")
+        return diffs[0]
+
+    return jax.tree.map(ax, abstract_a, abstract_b)
+
+
+def state_batch_axes(cfg: ModelConfig, max_len: int,
+                     cache_dtype=jnp.float32):
+    """Batch-axis tree of the LM serving state (see infer_batch_axes)."""
+    return infer_batch_axes(
+        jax.eval_shape(lambda: init_lm_state(cfg, 1, max_len, cache_dtype)),
+        jax.eval_shape(lambda: init_lm_state(cfg, 2, max_len, cache_dtype)))
+
+
+def _splice(batch_tree, single_tree, slot: int, axes_tree):
+    """Write `single` (batch=1 leaves) into `batch` at index `slot` of
+    each leaf's EXPLICIT batch axis (`axes_tree`, from infer_batch_axes).
 
     Leaves may differ in non-batch dims (a fresh prefill cache is sized
     to the prompt): the update is placed at offset 0 of each non-batch
     dim, which is correct because positions beyond the prompt are marked
     empty (-1) in the donor cache.
     """
-    def f(b, s):
-        if b.ndim == 0:
+    def f(b, s, ax):
+        if ax < 0:  # batch-independent leaf: nothing to splice
             return b
-        # locate the batch axis: the first axis where sizes differ by
-        # batch semantics — by construction it is axis 0 for pos and
-        # axis 0/1 for stacked caches (leading 'layers' axis).
-        if s.shape[0] == b.shape[0] and b.ndim > 1 and s.shape[0] != 1:
-            # stacked (layers, batch, ...) leaf
-            start = (0, slot) + (0,) * (b.ndim - 2)
-            upd = s
-            if upd.shape[2:] != b.shape[2:]:
-                pads = [(0, 0), (0, 0)] + [
-                    (0, bd - ud) for bd, ud in zip(b.shape[2:], upd.shape[2:])
-                ]
-                upd = jnp.pad(upd, pads, constant_values=_pad_value(b))
-            return jax.lax.dynamic_update_slice(b, upd.astype(b.dtype), start)
-        start = (slot,) + (0,) * (b.ndim - 1)
+        start = tuple(slot if i == ax else 0 for i in range(b.ndim))
         upd = s
-        if upd.shape[1:] != b.shape[1:]:
-            pads = [(0, 0)] + [
-                (0, bd - ud) for bd, ud in zip(b.shape[1:], upd.shape[1:])
-            ]
+        want = tuple(1 if i == ax else d for i, d in enumerate(b.shape))
+        if upd.shape != want:
+            pads = [(0, 0) if i == ax else (0, bd - ud)
+                    for i, (bd, ud) in enumerate(zip(b.shape, upd.shape))]
             upd = jnp.pad(upd, pads, constant_values=_pad_value(b))
         return jax.lax.dynamic_update_slice(b, upd.astype(b.dtype), start)
 
-    return jax.tree.map(f, batch_tree, single_tree)
+    return jax.tree.map(f, batch_tree, single_tree, axes_tree)
 
 
 def _pad_value(b):
-    return -1 if b.dtype == jnp.int32 else 0
+    """Empty sentinel for donor-cache padding.  Integer leaves carry
+    position/validity semantics in this state tree (positions use -1 =
+    empty), so EVERY integer dtype pads with the all-ones "empty"
+    sentinel — keying on int32 alone left int8/int16/uint caches padded
+    with 0, silently marking padded positions as valid.  Unsigned
+    integers cannot hold -1 and saturate to their max (the same all-ones
+    bit pattern); floats are data-only and pad with 0.
+    """
+    if jnp.issubdtype(b.dtype, jnp.unsignedinteger):
+        return int(jnp.iinfo(b.dtype).max)
+    if jnp.issubdtype(b.dtype, jnp.integer):
+        return -1
+    return 0
 
 
 class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  max_len: int = 128, cache_dtype=jnp.float32,
-                 progressive: bool = False):
+                 progressive: bool = False, early_exit: bool = False):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.progressive = progressive
         self.state = init_lm_state(cfg, n_slots, max_len, cache_dtype)
+        # explicit per-leaf batch axes for slot splicing (derived from the
+        # state pytree structure, never from shape coincidences)
+        self._axes = state_batch_axes(cfg, max_len, cache_dtype)
         self.slot_req: list[Request | None] = [None] * n_slots
         self.cur_tok = jnp.zeros((n_slots, 1), jnp.int32)
         self.queue: list[Request] = []
-        self._decode = jax.jit(make_decode_step(cfg, progressive=progressive))
-        self._prefill1 = jax.jit(make_prefill_step(cfg, max_len, cache_dtype))
+        self._decode = jax.jit(make_decode_step(cfg, progressive=progressive,
+                                                early_exit=early_exit))
+        self._prefill1 = jax.jit(make_prefill_step(
+            cfg, max_len, cache_dtype, progressive=progressive,
+            early_exit=early_exit))
         self.steps = 0
-        # saved-levels accounting (progressive mode): histogram over the
-        # MSDF exit level of every decoded token across all requests
+        # saved-levels accounting (progressive mode): histograms over the
+        # MSDF exit level of every decoded token across all requests AND
+        # of every streamed prefill head (the first generated token)
         self.n_levels = (2 * cfg.l2r.planes - 1
                          if progressive and cfg.l2r is not None else 0)
         self.exit_hist = np.zeros(max(self.n_levels, 1), np.int64)
+        self.prefill_exit_hist = np.zeros(max(self.n_levels, 1), np.int64)
 
     # ------------------------------------------------------------- api
     def submit(self, req: Request):
@@ -117,13 +162,21 @@ class ContinuousBatcher:
                 continue
             req = self.queue.pop(0)
             prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
-            st1, logits = self._prefill1(self.params, {"tokens": prompt})
-            first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            if self.progressive:
+                # batch-progressive prefill: the head streams the LAST
+                # prompt position only, committing the first token at its
+                # earliest sound level
+                st1, _, tok, lv = self._prefill1(self.params,
+                                                 {"tokens": prompt})
+                first = tok[0, 0]
+                level = int(lv[0, 0])
+                req.prefill_exit_level = level
+                self.prefill_exit_hist[level] += 1
+            else:
+                st1, logits = self._prefill1(self.params, {"tokens": prompt})
+                first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
             # splice the single-sequence state into the live batch state
-            self.state = _splice(self.state, st1, slot)
-            # pos leaf is (B,): fix it explicitly (splice handles arrays,
-            # but pos from st1 is scalar-per-seq)
-            self.state.pos = self.state.pos.at[slot].set(int(st1.pos[0]))
+            self.state = _splice(self.state, st1, slot, self._axes)
             self.cur_tok = self.cur_tok.at[slot, 0].set(first)
             req.output.append(int(first))
             self.slot_req[slot] = req
@@ -173,9 +226,12 @@ class ContinuousBatcher:
 
     def stats(self) -> dict:
         """Engine counters; in progressive mode also the saved-levels
-        histogram: exit_level_hist[l] tokens committed after l+1 MSDF
-        levels (a digit-serial deployment skips the remaining
-        n_levels-1-l levels of head compute for those tokens)."""
+        histograms: exit_level_hist[l] tokens committed after l+1 MSDF
+        levels during DECODE (a digit-serial deployment skips the
+        remaining n_levels-1-l levels of head compute for those tokens),
+        and prefill_exit_level_hist[l] streamed PREFILL heads (one per
+        admitted request — the first generated token, committed from the
+        last prompt position's stream)."""
         out = {"steps": self.steps, "progressive": self.progressive}
         if self.progressive and self.exit_hist.sum():
             total = int(self.exit_hist.sum())
@@ -187,5 +243,15 @@ class ContinuousBatcher:
                 exit_level_hist=self.exit_hist.tolist(),
                 mean_exit_level=mean_exit,
                 mean_levels_saved=float(self.n_levels - 1 - mean_exit),
+            )
+        if self.progressive and self.prefill_exit_hist.sum():
+            total_p = int(self.prefill_exit_hist.sum())
+            levels = np.arange(self.n_levels)
+            out.update(
+                n_levels=self.n_levels,
+                prefills=total_p,
+                prefill_exit_level_hist=self.prefill_exit_hist.tolist(),
+                mean_prefill_exit_level=float(
+                    (self.prefill_exit_hist * levels).sum() / total_p),
             )
         return out

@@ -163,8 +163,29 @@ def abstract_state(cfg: ModelConfig, batch: int, max_len: int,
 
 # ------------------------------------------------------------ step factories
 def make_prefill_step(cfg: ModelConfig, max_len: int,
-                      cache_dtype=jnp.bfloat16) -> Callable:
-    """(params, batch) -> (state, last_token_logits)."""
+                      cache_dtype=jnp.bfloat16,
+                      progressive: bool = False,
+                      early_exit: bool = False) -> Callable:
+    """(params, batch) -> (state, last_token_logits).
+
+    ``progressive=True`` (LM families, requires ``cfg.l2r``) is
+    batch-level progressive prefill: the backbone runs exactly over the
+    whole prompt, and the LM head streams for the LAST prompt token ONLY
+    — the other positions are never argmaxed by anyone, so they take the
+    exact one-shot path (here: they are simply never fed to the head,
+    the same ``hidden[:, -1:]`` slice the one-shot prefill uses).  The
+    step then returns ``(state, logits, first_tok (B, 1) int32,
+    exit_level (B, 1) int32)``; ``first_tok`` always equals
+    ``argmax(logits_from_hidden(...))`` of the one-shot prefill.
+    ``early_exit`` stops the head's level loop once every sequence in the
+    prefill batch has decided (see make_decode_step).
+    """
+    assert progressive or not early_exit, \
+        "early_exit stops the streamed head: requires progressive=True"
+    if progressive:
+        assert cfg.family != "encdec", "progressive prefill: LM families only"
+        assert cfg.l2r is not None, \
+            "progressive prefill streams the quantized head: set cfg.l2r"
 
     def prefill(params, batch):
         if cfg.family == "encdec":
@@ -182,13 +203,18 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
                 cfg, params, tokens=tokens, embeds=embeds,
                 rope_positions=batch.get("rope_positions"),
                 mode="prefill", state=state)
+        if progressive:
+            logits, tok, lv = progressive_logits_from_hidden(
+                cfg, params, hidden[:, -1:], early_exit=early_exit)
+            return state, logits, tok.astype(jnp.int32), lv
         logits = logits_from_hidden(cfg, params, hidden[:, -1:])
         return state, logits
 
     return prefill
 
 
-def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden):
+def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden,
+                                   early_exit: bool = False):
     """Stream the LM head level-by-level, committing each row's token at
     its earliest sound MSDF level.
 
@@ -196,7 +222,11 @@ def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden):
     (dense -> l2r_matmul_f), so the returned logits are bit-identical to
     the full head evaluation and the committed tokens ALWAYS equal
     ``argmax(logits_from_hidden(...))`` — rows that never reach a sound
-    early margin simply consume the whole stream.  Returns
+    early margin simply consume the whole stream.  ``early_exit=True``
+    runs the head stream as the while-loop emitter that STOPS once every
+    row has decided: tokens and exit levels stay bit-identical, but the
+    returned logits are then the dequantized prefix at the exit level
+    (core/progressive.py:streaming_argmax).  Returns
     ``(logits (..., V), tok (...,) int32, exit_level (...,) int32)``.
     """
     qcfg = cfg.l2r or QuantConfig()
@@ -214,11 +244,13 @@ def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden):
     logits, tok, lv = streaming_argmax(xq, wq, xs, ws, qcfg.n_bits,
                                        qcfg.log2_radix,
                                        levels=cfg.l2r_levels,
-                                       out_dtype=hidden.dtype)
+                                       out_dtype=hidden.dtype,
+                                       early_exit=early_exit)
     return (logits.reshape(*lead, -1), tok.reshape(lead), lv.reshape(lead))
 
 
-def make_decode_step(cfg: ModelConfig, progressive: bool = False) -> Callable:
+def make_decode_step(cfg: ModelConfig, progressive: bool = False,
+                     early_exit: bool = False) -> Callable:
     """(params, state, tokens (B,1)) -> (state, next_tokens (B,1), logits).
 
     ``progressive=True`` (LM families, requires ``cfg.l2r``) streams the
@@ -227,7 +259,14 @@ def make_decode_step(cfg: ModelConfig, progressive: bool = False) -> Callable:
     per-row exit levels: ``(state, next_tokens, logits, exit_level
     (B,1))``.  Tokens are bit-identical to the non-progressive step —
     the exit levels are what a digit-serial deployment would NOT compute.
+    ``early_exit=True`` additionally stops the head's level loop once
+    every slot in the batch has decided (the while-loop emitter): the
+    skipped levels become skipped wall-clock on this host, not just an
+    accounting entry, at the price of exit-level logit values for the
+    non-argmax entries (tokens and exit levels are unchanged).
     """
+    assert progressive or not early_exit, \
+        "early_exit stops the streamed head: requires progressive=True"
     if progressive:
         assert cfg.family != "encdec", "progressive decode: LM families only"
         assert cfg.l2r is not None, \
@@ -243,7 +282,7 @@ def make_decode_step(cfg: ModelConfig, progressive: bool = False) -> Callable:
                 mode="decode", state=state)
         if progressive:
             logits, tok, lv = progressive_logits_from_hidden(
-                cfg, params, hidden)
+                cfg, params, hidden, early_exit=early_exit)
             return state, tok.astype(jnp.int32), logits, lv
         logits = logits_from_hidden(cfg, params, hidden)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)

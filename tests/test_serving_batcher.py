@@ -1,4 +1,8 @@
-"""Continuous batching engine: correctness vs straight-line decoding."""
+"""Continuous batching engine: correctness vs straight-line decoding,
+and the slot-splice tree surgery (explicit batch axes, no shape
+heuristics)."""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +12,8 @@ import pytest
 from repro.configs import get_smoke
 from repro.models.common import materialize
 from repro.models.transformer import lm_build
-from repro.serve.batching import ContinuousBatcher, Request
+from repro.serve.batching import (ContinuousBatcher, Request, _pad_value,
+                                  _splice, infer_batch_axes)
 from repro.serve.engine import greedy_generate
 
 
@@ -70,3 +75,101 @@ def test_batcher_eos_retires_early(model):
     eng.run(max_steps=100)
     assert req.done
     assert len(req.output) == 2  # stopped at EOS, not max_new_tokens
+
+
+# --------------------------------------------------- slot splice surgery
+def _axes_for(batch_tree, single_tree):
+    """Batch-axis tree for synthetic splice tests, via the same
+    structure-derived inference the batcher uses (two abstract batch
+    sizes; here the donor IS the batch=1 evaluation)."""
+    two = jax.tree.map(
+        lambda b, s: jax.ShapeDtypeStruct(
+            tuple(2 if bd != sd else sd
+                  for bd, sd in zip(b.shape, s.shape)), b.dtype),
+        batch_tree, single_tree)
+    return infer_batch_axes(
+        jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                     single_tree), two)
+
+
+def test_splice_stacked_leaf_with_single_layer():
+    """Regression: a stacked (layers, batch, ...) cache leaf with
+    n_layers == 1.  The old shape heuristic (`s.shape[0] == b.shape[0]
+    and ... != 1`) fell through to the batch-axis-0 branch and smeared
+    the donor over the whole batch at layer 0; the explicit batch-axis
+    tag splices on axis 1."""
+    n_slots, n_layers, L, dh = 4, 1, 6, 3
+    b = {"cache": jnp.zeros((n_layers, n_slots, L, dh), jnp.float32),
+         "pos": jnp.zeros((n_slots,), jnp.int32)}
+    s = {"cache": jnp.ones((n_layers, 1, L, dh), jnp.float32),
+         "pos": jnp.full((1,), 5, jnp.int32)}
+    axes = _axes_for(b, s)
+    assert axes["cache"] == 1 and axes["pos"] == 0
+    out = _splice(b, s, 2, axes)
+    np.testing.assert_array_equal(np.asarray(out["cache"][0, 2]), 1.0)
+    for slot in (0, 1, 3):
+        np.testing.assert_array_equal(np.asarray(out["cache"][0, slot]), 0.0)
+    assert int(out["pos"][2]) == 5 and int(out["pos"][0]) == 0
+
+
+def test_splice_ignores_batch_independent_nslots_sized_leaf():
+    """Regression: a batch-INDEPENDENT leaf whose leading dim happens to
+    equal n_slots (and a head_dim == n_slots cache) must not be spliced
+    on the coincidental axis."""
+    n_slots = 4
+    head_dim = n_slots  # the coincidence the heuristic tripped over
+    b = {"per_layer": jnp.arange(n_slots, dtype=jnp.float32),  # (layers,)
+         "kv": jnp.zeros((1, n_slots, 6, head_dim), jnp.float32),
+         "pos": jnp.zeros((n_slots,), jnp.int32)}
+    s = {"per_layer": jnp.arange(n_slots, dtype=jnp.float32),
+         "kv": jnp.ones((1, 1, 6, head_dim), jnp.float32),
+         "pos": jnp.full((1,), 3, jnp.int32)}
+    axes = _axes_for(b, s)
+    assert axes["per_layer"] == -1 and axes["kv"] == 1
+    out = _splice(b, s, 1, axes)
+    # batch-independent leaf untouched; kv landed at [:, 1] only
+    np.testing.assert_array_equal(np.asarray(out["per_layer"]),
+                                  np.arange(n_slots, dtype=np.float32))
+    np.testing.assert_array_equal(np.asarray(out["kv"][0, 1]), 1.0)
+    np.testing.assert_array_equal(np.asarray(out["kv"][0, 0]), 0.0)
+
+
+def test_splice_pad_value_all_integer_dtypes():
+    """Regression: the empty sentinel must cover EVERY integer dtype, not
+    just int32 — an int8/int16 donor cache shorter than the live leaf
+    pads with -1 (and unsigned with all-ones), never with a "valid" 0."""
+    assert _pad_value(jnp.zeros((1,), jnp.int32)) == -1
+    assert _pad_value(jnp.zeros((1,), jnp.int8)) == -1
+    assert _pad_value(jnp.zeros((1,), jnp.int16)) == -1
+    assert _pad_value(jnp.zeros((1,), jnp.uint32)) == 2**32 - 1
+    assert _pad_value(jnp.zeros((1,), jnp.float32)) == 0
+    b = {"positions": jnp.zeros((4, 8), jnp.int8)}
+    s = {"positions": jnp.arange(1, 6, dtype=jnp.int8).reshape(1, 5)}
+    out = _splice(b, s, 2, {"positions": 0})
+    np.testing.assert_array_equal(np.asarray(out["positions"][2, :5]),
+                                  np.arange(1, 6, dtype=np.int8))
+    np.testing.assert_array_equal(np.asarray(out["positions"][2, 5:]), -1)
+
+
+def test_batcher_single_layer_model_matches_greedy(model):
+    """End-to-end regression for the n_layers == 1 splice: the stacked
+    cache has a leading axis of size 1, which the old heuristic spliced
+    on the wrong axis (corrupting every other slot's cache)."""
+    cfg, _ = model
+    cfg1 = dataclasses.replace(cfg, n_layers=1)
+    params = materialize(lm_build(cfg1), jax.random.PRNGKey(1))
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg1.vocab, size=(L,)).astype(np.int32)
+               for L in (7, 4, 9)]
+    refs = [np.asarray(greedy_generate(cfg1, params, jnp.asarray(p[None]),
+                                       steps=5, max_len=32))[0].tolist()
+            for p in prompts]
+    eng = ContinuousBatcher(cfg1, params, n_slots=2, max_len=32)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=200)
+    for r, ref in zip(reqs, refs):
+        assert r.done
+        assert r.output[:5] == ref, (r.uid, r.output, ref)
