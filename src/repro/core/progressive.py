@@ -47,7 +47,8 @@ import numpy as np
 
 from .l2r_gemm import _f32_dot_exact
 from .online import msdf_levels, tail_bound
-from .quant import plane_count, stack_planes_lhs, stack_planes_rhs
+from .quant import (PlaneOperands, plane_count, stack_planes_lhs,
+                    stack_planes_rhs)
 
 __all__ = [
     "ProgressiveResult",
@@ -123,15 +124,57 @@ def level_bounds(d: int, log2_radix: int, k: int,
 
 
 # ------------------------------------------------------- streaming emitter
+def _contract_k(x) -> int:
+    """Contraction length of a raw operand or a pre-stacked PlaneOperands."""
+    return x.k if isinstance(x, PlaneOperands) else x.shape[-1]
+
+
+def _lhs_lead(aq) -> tuple[int, ...]:
+    """Leading (…, M) output shape contributed by the LHS operand."""
+    return aq.stack.shape[:-1] if isinstance(aq, PlaneOperands) \
+        else aq.shape[:-1]
+
+
+def _rhs_n(bq) -> int:
+    return bq.stack.shape[-1] if isinstance(bq, PlaneOperands) \
+        else bq.shape[-1]
+
+
 def _streaming_operands(aq, bq, n_bits, log2_radix):
-    """Zero-padded raw-digit plane stacks for the fixed-width level scan."""
+    """Zero-padded raw-digit plane stacks for the fixed-width level scan.
+
+    Either operand may already be a :class:`~repro.core.quant.PlaneOperands`
+    (e.g. the load-time weight-stack cache): its window stack is consumed
+    directly — bit-identical to inline extraction, which produces the
+    very same stack — so per-step streaming does no plane extraction at
+    all for pre-stacked sides.  A stack built for a different digit
+    config would walk the level schedule wrong, so mismatches raise
+    rather than silently mis-slice.
+    """
     d = plane_count(n_bits, log2_radix)
-    k = aq.shape[-1]
-    a_stack = stack_planes_lhs(aq, n_bits, log2_radix, shifted=False)
-    b_rev = stack_planes_rhs(bq, n_bits, log2_radix, shifted=False)
-    pad = (d - 1) * k
-    a_pad = jnp.pad(a_stack, [(0, 0)] * (a_stack.ndim - 1) + [(0, pad)])
-    b_pad = jnp.pad(b_rev, [(0, pad)] + [(0, 0)] * (b_rev.ndim - 1))
+    for op, want in ((aq, "lhs"), (bq, "rhs")):
+        if isinstance(op, PlaneOperands) \
+                and not op.matches(n_bits, log2_radix, side=want):
+            raise ValueError(
+                f"PlaneOperands(side={op.side!r}, n_bits={op.n_bits}, "
+                f"log2_radix={op.log2_radix}) cannot feed the {want} slot "
+                f"of a streaming walk with n_bits={n_bits}, "
+                f"log2_radix={log2_radix}; re-prepare the stack for this "
+                f"config")
+    if isinstance(aq, PlaneOperands):
+        a_pad = aq.window_stack()
+    else:
+        k = aq.shape[-1]
+        a_stack = stack_planes_lhs(aq, n_bits, log2_radix, shifted=False)
+        a_pad = jnp.pad(a_stack,
+                        [(0, 0)] * (a_stack.ndim - 1) + [(0, (d - 1) * k)])
+    if isinstance(bq, PlaneOperands):
+        b_pad = bq.window_stack()
+    else:
+        k = bq.shape[0]
+        b_rev = stack_planes_rhs(bq, n_bits, log2_radix, shifted=False)
+        b_pad = jnp.pad(b_rev,
+                        [(0, (d - 1) * k)] + [(0, 0)] * (b_rev.ndim - 1))
     return a_pad, b_pad
 
 
@@ -156,7 +199,7 @@ def _stream_setup(aq, bq, n_bits, log2_radix):
     same slices, same dot, same dtypes — which is what makes the
     while-loop path bit-identical to the scan oracle."""
     d = plane_count(n_bits, log2_radix)
-    k = aq.shape[-1]
+    k = _contract_k(aq)
     a_pad, b_pad = _streaming_operands(aq, bq, n_bits, log2_radix)
     # the fixed window spans up to D real pairs -> the f32 exactness guard
     # must hold for a depth-D*K contraction of raw digits
@@ -208,11 +251,15 @@ def streaming_matmul_scan(
     always executes every requested level.  :func:`streaming_matmul_while`
     runs the same walk as a ``lax.while_loop`` that stops once the fold's
     decision state says no more digits are needed.
+
+    Either operand may be a pre-stacked
+    :class:`~repro.core.quant.PlaneOperands` (raw-digit layout) — the
+    stream is bit-identical to inline extraction.
     """
     d = plane_count(n_bits, log2_radix)
     a_off, b_off, svals = _level_walk(d, levels)
     n_steps = int(svals.shape[0])
-    acc0 = jnp.zeros((*aq.shape[:-1], bq.shape[-1]), jnp.int32)
+    acc0 = jnp.zeros((*_lhs_lead(aq), _rhs_n(bq)), jnp.int32)
     if n_steps == 0:  # levels=0: empty MSDF prefix
         empty = jnp.zeros((0, *acc0.shape), jnp.int32) if emit else None
         return acc0, init, empty
@@ -294,7 +341,7 @@ def streaming_matmul_while(
     d = plane_count(n_bits, log2_radix)
     a_off, b_off, svals = _level_walk(d, levels)
     n_steps = int(svals.shape[0])
-    acc0 = jnp.zeros((*aq.shape[:-1], bq.shape[-1]), jnp.int32)
+    acc0 = jnp.zeros((*_lhs_lead(aq), _rhs_n(bq)), jnp.int32)
     if n_steps == 0:  # levels=0: empty MSDF prefix
         return acc0, init, jnp.int32(0)
 
@@ -347,7 +394,7 @@ def progressive_matmul(
     :func:`streaming_matmul_scan` / :func:`streaming_argmax` instead.
     """
     bounds = level_bounds(plane_count(n_bits, log2_radix), log2_radix,
-                          aq.shape[-1], levels)
+                          _contract_k(aq), levels)
     _, _, stack = streaming_matmul_scan(aq, bq, None, None, n_bits,
                                         log2_radix, levels, emit=True)
     return ProgressiveResult(partial=stack, tail_bound=bounds.f32,
@@ -388,7 +435,10 @@ def streaming_argmax(
     of the *dequantized* scores at the earliest sound level.
 
     xq (M, K) int row activations with per-row scales xs (M, 1); wq (K, N)
-    int weights with per-out-channel scales ws (1, N).  ``levels``
+    int weights with per-out-channel scales ws (1, N) — either side may
+    instead be a pre-stacked :class:`~repro.core.quant.PlaneOperands`
+    (the ``QuantizedWeights.planes`` load-time cache for wq), which skips
+    per-call plane extraction with a bit-identical stream.  ``levels``
     truncates the stream exactly like every other `levels` in the stack
     (the final prefix then equals the truncated one-shot matmul).
 
@@ -418,11 +468,11 @@ def streaming_argmax(
     order), so downstream argmaxes agree with the non-streaming path.
     """
     d = plane_count(n_bits, log2_radix)
-    bounds = level_bounds(d, log2_radix, xq.shape[-1], levels)
+    bounds = level_bounds(d, log2_radix, _contract_k(xq), levels)
     n_levels = int(bounds.f32.shape[0])
     wsr = ws.reshape(1, -1).astype(jnp.float32)
     xsf = xs.astype(jnp.float32)
-    m = xq.shape[0]
+    m = _lhs_lead(xq)[-1]
     # |fl(v) - v| <= ~3 ulp(|v|) across the cast + two scale products and
     # the bias add; 8 ulp of the row max is a comfortable envelope
     eps = 8.0 * jnp.finfo(jnp.float32).eps

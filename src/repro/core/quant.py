@@ -24,6 +24,7 @@ import jax.numpy as jnp
 __all__ = [
     "QuantConfig",
     "QuantizedWeights",
+    "PlaneOperands",
     "quantize",
     "quantize_weights",
     "dequantize",
@@ -199,7 +200,160 @@ def stack_planes_rhs(wq: jax.Array, n_bits: int = 8, log2_radix: int = 2,
                            else axis % wq.ndim)
 
 
-@partial(jax.tree_util.register_dataclass, data_fields=("q", "scale"),
+@partial(jax.tree_util.register_dataclass, data_fields=("stack",),
+         meta_fields=("side", "n_bits", "log2_radix", "k", "axis", "shifted",
+                      "pad_planes"))
+@dataclasses.dataclass(frozen=True)
+class PlaneOperands:
+    """A digit-plane stack as a first-class operand.
+
+    The L2R schedules never consume raw int tensors — every one of them
+    walks a *plane stack* (ascending LHS / descending RHS, see
+    :func:`stack_planes_lhs` / :func:`stack_planes_rhs`).  This record
+    makes that stack an explicit, reusable operand so callers that feed
+    the same tensor into many GEMM calls (the fused conv's kh*kw taps,
+    the decode loop's per-step weight matmuls) extract planes once and
+    pass the stack everywhere.
+
+    Fields (``stack`` is the only array; the rest are static pytree meta,
+    so jit traces key on the layout):
+
+      side:       "lhs" (ascending planes on the last axis) or "rhs"
+                  (descending planes on the contraction axis).
+      k:          the un-stacked contraction length (stack axis length is
+                  ``(d + pad_planes) * k``).
+      axis:       the stacking axis, counted FROM THE END (negative) so
+                  the meta survives leading-axis slicing (e.g. scanning a
+                  stacked-layer weight cache strips the layer axis).
+      shifted:    True -> pre-shifted bit-field planes (the Pallas/MXU
+                  operand format); False -> raw digits in [0, radix)
+                  (small magnitudes: the jnp f32-BLAS fast-path format).
+      pad_planes: trailing zero plane blocks appended after the D real
+                  planes (the streaming emitters read fixed-width windows
+                  of a (2D-1)-block stack; caches built with
+                  ``window_pad=True`` carry the zeros so per-step
+                  streaming needs no padding copy).
+
+    The two layouts convert exactly in both directions (a shifted plane
+    is its raw digit ``<< b*i``, a bit-field of the operand, so both fit
+    the operand dtype); every consumer therefore accepts either and
+    converts with :meth:`core_stack` / :meth:`window_stack`.
+    """
+
+    stack: jax.Array
+    side: str
+    n_bits: int
+    log2_radix: int
+    k: int
+    axis: int
+    shifted: bool
+    pad_planes: int
+
+    @property
+    def d(self) -> int:
+        return plane_count(self.n_bits, self.log2_radix)
+
+    @classmethod
+    def prepare_lhs(cls, aq: jax.Array, n_bits: int = 8, log2_radix: int = 2,
+                    shifted: bool = False,
+                    window_pad: bool = False) -> "PlaneOperands":
+        """Stack LHS planes once: (..., M, K) -> (..., M, D*K) operand."""
+        st = stack_planes_lhs(aq, n_bits, log2_radix, shifted=shifted)
+        d = plane_count(n_bits, log2_radix)
+        k = aq.shape[-1]
+        pad = d - 1 if window_pad else 0
+        if pad:
+            st = jnp.pad(st, [(0, 0)] * (st.ndim - 1) + [(0, pad * k)])
+        return cls(st, "lhs", n_bits, log2_radix, k, -1, shifted, pad)
+
+    @classmethod
+    def prepare_rhs(cls, wq: jax.Array, n_bits: int = 8, log2_radix: int = 2,
+                    axis: int = 0, shifted: bool = False,
+                    window_pad: bool = False) -> "PlaneOperands":
+        """Stack RHS planes once: contraction ``axis`` grows to D*K
+        (descending significance — every level a contiguous slice)."""
+        ax = axis if axis < 0 else axis - wq.ndim
+        st = stack_planes_rhs(wq, n_bits, log2_radix, axis=ax, shifted=shifted)
+        d = plane_count(n_bits, log2_radix)
+        k = wq.shape[ax]
+        pad = d - 1 if window_pad else 0
+        if pad:
+            pads = [(0, 0)] * st.ndim
+            pads[ax % st.ndim] = (0, pad * k)
+            st = jnp.pad(st, pads)
+        return cls(st, "rhs", n_bits, log2_radix, k, ax, shifted, pad)
+
+    def matches(self, n_bits: int, log2_radix: int, ndim: int | None = None,
+                side: str | None = None,
+                contract_axis: int | None = None) -> bool:
+        """Is this stack usable for a call with the given digit config
+        (and optionally rank / side / contraction-axis position)?  The
+        ONE compatibility predicate every consumer guards on — a stack
+        built for another radix walks the level schedule wrong, so
+        mismatches must fall back to the raw weight or raise."""
+        if (self.n_bits, self.log2_radix) != (n_bits, log2_radix):
+            return False
+        if ndim is not None and self.stack.ndim != ndim:
+            return False
+        if side is not None and self.side != side:
+            return False
+        if contract_axis is not None \
+                and self.axis % self.stack.ndim != contract_axis:
+            return False
+        return True
+
+    def with_layout(self, shifted: bool) -> "PlaneOperands":
+        """Exact raw-digit <-> pre-shifted conversion (chunk-wise shifts;
+        bit-fields stay in the operand dtype, zero pad blocks unaffected)."""
+        if shifted == self.shifted:
+            return self
+        ax = self.axis % self.stack.ndim
+        n_chunks = self.d + self.pad_planes
+        shp = self.stack.shape
+        r = self.stack.reshape(*shp[:ax], n_chunks, self.k, *shp[ax + 1:])
+        if self.side == "lhs":
+            amt = [self.log2_radix * i if i < self.d else 0
+                   for i in range(n_chunks)]
+        else:
+            amt = [self.log2_radix * (self.d - 1 - i) if i < self.d else 0
+                   for i in range(n_chunks)]
+        # raw low digits are non-negative and the top chunk is a sign-
+        # extended bit-field, so arithmetic shifts are exact both ways.
+        # Layout dtypes differ: raw digits live in int8 (digit_planes),
+        # shifted bit-fields in the operand dtype (shifted_planes) — cast
+        # BEFORE the left shift so high-significance chunks don't wrap.
+        if shifted:
+            r = r.astype(_int_dtype(self.n_bits))
+        sh = jnp.asarray(amt, r.dtype).reshape(
+            (1,) * ax + (n_chunks,) + (1,) * (r.ndim - ax - 1))
+        out = jnp.left_shift(r, sh) if shifted \
+            else jnp.right_shift(r, sh).astype(jnp.int8)
+        return dataclasses.replace(self, stack=out.reshape(shp),
+                                   shifted=shifted)
+
+    def core_stack(self, shifted: bool) -> jax.Array:
+        """The D-plane stack (window padding sliced off) in the requested
+        layout — the stacked-schedule operand."""
+        po = self.with_layout(shifted)
+        if self.pad_planes == 0:
+            return po.stack
+        ax = self.axis % self.stack.ndim
+        return jax.lax.slice_in_dim(po.stack, 0, self.d * self.k, axis=ax)
+
+    def window_stack(self) -> jax.Array:
+        """Raw-digit stack zero-padded to the fixed (2D-1)-block streaming
+        window — the streaming-emitter operand (core/progressive.py)."""
+        st = self.with_layout(False).stack
+        need = (self.d - 1) - self.pad_planes
+        if need > 0:
+            ax = self.axis % st.ndim
+            pads = [(0, 0)] * st.ndim
+            pads[ax] = (0, need * self.k)
+            st = jnp.pad(st, pads)
+        return st
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=("q", "scale", "planes"),
          meta_fields=())
 @dataclasses.dataclass
 class QuantizedWeights:
@@ -210,10 +364,18 @@ class QuantizedWeights:
     Passing this through the model stack removes per-forward weight
     re-quantization (abs-max reduce + divide + round per call) from the
     traced hot path — weights quantize exactly once per load.
+
+    ``planes`` optionally caches the reversed RHS digit-plane stack
+    (:class:`PlaneOperands`, built by ``quantize_weights(...,
+    prestack=True)``): consumers then skip per-call plane extraction too
+    — the stack is extracted exactly once per process.  Costs D x (or
+    2D-1 x with ``window_pad``) the int8 weight bytes; ``None`` keeps
+    the extract-per-call behavior.
     """
 
     q: jax.Array
     scale: jax.Array
+    planes: PlaneOperands | None = None
 
     @property
     def shape(self) -> tuple[int, ...]:
@@ -224,11 +386,17 @@ class QuantizedWeights:
         return self.q.ndim
 
 
-@partial(jax.jit, static_argnames=("cfg", "channel_axes"))
+@partial(jax.jit, static_argnames=("cfg", "channel_axes", "prestack",
+                                   "plane_axis", "window_pad",
+                                   "plane_shifted"))
 def quantize_weights(
     w: jax.Array,
     cfg: QuantConfig = QuantConfig(),
     channel_axes: tuple[int, ...] = (-1,),
+    prestack: bool = False,
+    plane_axis: int | None = None,
+    window_pad: bool = False,
+    plane_shifted: bool = False,
 ) -> QuantizedWeights:
     """Symmetric per-channel weight quantization -> :class:`QuantizedWeights`.
 
@@ -237,12 +405,31 @@ def quantize_weights(
     Jitted and sharing :func:`_symmetric_quant` with :func:`quantize` so
     the cached scales are bit-identical to on-the-fly quantization (XLA
     folds the /qmax divide identically under jit).
+
+    ``prestack=True`` additionally caches the reversed RHS plane stack
+    (:class:`PlaneOperands`) along ``plane_axis`` (the contraction axis:
+    default 0, conv weights pass -2, stacked-layer weights 1);
+    ``window_pad`` appends the streaming window's zero plane blocks so
+    per-step streaming consumers skip the padding copy too.
+    ``plane_shifted`` picks the cached layout: False (default) stores
+    raw digits — consumed as-is by the jnp f32-fast-path and streaming
+    schedules, converted per call (exact chunk shifts) on Pallas; True
+    stores the pre-shifted Pallas/MXU layout, moving that conversion to
+    load time — the right choice when the deployment backend is
+    ``pallas-tpu`` (jnp consumers then convert instead, equally exact).
     """
     wf = w.astype(jnp.float32)
     keep = {a % w.ndim for a in channel_axes}
     reduce_axes = tuple(a for a in range(w.ndim) if a not in keep)
     amax = jnp.max(jnp.abs(wf), axis=reduce_axes, keepdims=True)
-    return QuantizedWeights(*_symmetric_quant(wf, amax, cfg))
+    q, scale = _symmetric_quant(wf, amax, cfg)
+    planes = None
+    if prestack:
+        planes = PlaneOperands.prepare_rhs(
+            q, cfg.n_bits, cfg.log2_radix,
+            axis=0 if plane_axis is None else plane_axis,
+            shifted=plane_shifted, window_pad=window_pad)
+    return QuantizedWeights(q, scale, planes)
 
 
 @partial(jax.jit, static_argnames=("log2_radix",))

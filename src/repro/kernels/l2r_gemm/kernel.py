@@ -62,7 +62,8 @@ from repro.core.online import msdf_level_slices, msdf_pairs
 from repro.core.quant import stack_planes_lhs, stack_planes_rhs
 
 __all__ = ["l2r_gemm_pallas", "l2r_gemm_pallas_stacked",
-           "l2r_gemm_pallas_streaming", "stacked_schedule",
+           "l2r_gemm_pallas_stacked_planes", "l2r_gemm_pallas_streaming",
+           "l2r_gemm_pallas_streaming_planes", "stacked_schedule",
            "streaming_schedule"]
 
 
@@ -204,9 +205,9 @@ def _l2r_stacked_kernel(a_idx_ref, b_idx_ref, a_ref, b_ref, o_ref, acc_ref,
     jax.jit,
     static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn", "interpret"),
 )
-def l2r_gemm_pallas_stacked(
-    aq: jax.Array,
-    bq: jax.Array,
+def l2r_gemm_pallas_stacked_planes(
+    a_stack: jax.Array,
+    b_rev: jax.Array,
     n_bits: int = 8,
     log2_radix: int = 2,
     levels: int | None = None,
@@ -215,28 +216,33 @@ def l2r_gemm_pallas_stacked(
     bn: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    """Level-stacked MSDF GEMM. aq: (M, K), bq: (K, N) small ints -> int32.
+    """Level-stacked MSDF GEMM over PRE-STACKED plane operands.
 
-    Bit-identical to ``core.l2r_gemm.l2r_matmul_int`` for exact and
-    truncated ``levels``.  Shapes must be multiples of the block sizes
-    (ops.py pads; zero padding is exact).  Plane extraction happens here,
-    once, outside the grid — the kernel streams pre-shifted plane blocks.
+    The pre-stacked kernel entry: operands are the already-extracted,
+    PRE-SHIFTED plane stacks — ``a_stack (M, D*K)`` ascending
+    (quant.py:stack_planes_lhs), ``b_rev (D*K, N)`` descending
+    (stack_planes_rhs) — exactly D plane chunks each (no streaming
+    window padding), every chunk's K a multiple of ``bk`` and M/N
+    multiples of ``bm``/``bn`` (ops.py block-pads per chunk).  Callers
+    that feed one tensor through many GEMMs (the fused conv's kh*kw
+    taps, per-decode-step weight matmuls) extract planes once and call
+    this entry per GEMM — the hoist the jnp backend already performs,
+    now available to the TPU kernel (ROADMAP follow-up).
     """
-    m, k = aq.shape
-    k2, n = bq.shape
-    assert k == k2, (aq.shape, bq.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
-        f"shape ({m},{k})x({k2},{n}) not padded to blocks ({bm},{bk},{bn})"
-    )
+    m, dk = a_stack.shape
+    dk2, n = b_rev.shape
     d = n_bits // log2_radix
+    assert dk == dk2 and dk % d == 0, (a_stack.shape, b_rev.shape, d)
+    k = dk // d
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"plane stacks ({m},{d}x{k})x({d}x{k},{n}) not padded to blocks "
+        f"({bm},{bk},{bn})"
+    )
     k_blocks = k // bk
     a_idx, b_idx = stacked_schedule(d, k_blocks, levels)
     t_steps = int(a_idx.shape[0])
     if t_steps == 0:  # levels=0: empty MSDF prefix
         return jnp.zeros((m, n), jnp.int32)
-
-    a_stack = stack_planes_lhs(aq, n_bits, log2_radix)  # (M, D*K)
-    b_rev = stack_planes_rhs(bq, n_bits, log2_radix)    # (D*K, N)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -254,6 +260,40 @@ def l2r_gemm_pallas_stacked(
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
     )(jnp.asarray(a_idx), jnp.asarray(b_idx), a_stack, b_rev)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn", "interpret"),
+)
+def l2r_gemm_pallas_stacked(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Level-stacked MSDF GEMM. aq: (M, K), bq: (K, N) small ints -> int32.
+
+    Bit-identical to ``core.l2r_gemm.l2r_matmul_int`` for exact and
+    truncated ``levels``.  Shapes must be multiples of the block sizes
+    (ops.py pads; zero padding is exact).  Plane extraction happens here,
+    once, outside the grid, and the stacks feed the pre-stacked entry
+    (:func:`l2r_gemm_pallas_stacked_planes`) — the kernel streams
+    pre-shifted plane blocks.
+    """
+    m, k = aq.shape
+    k2, n = bq.shape
+    assert k == k2, (aq.shape, bq.shape)
+    a_stack = stack_planes_lhs(aq, n_bits, log2_radix)  # (M, D*K)
+    b_rev = stack_planes_rhs(bq, n_bits, log2_radix)    # (D*K, N)
+    return l2r_gemm_pallas_stacked_planes(
+        a_stack, b_rev, n_bits, log2_radix, levels, bm, bk, bn,
+        interpret=interpret)
 
 
 # ------------------------------------------------------------- streaming
@@ -312,9 +352,9 @@ def _l2r_streaming_kernel(a_idx_ref, b_idx_ref, lv_idx_ref, cnt_ref,
     static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn",
                      "interpret"),
 )
-def l2r_gemm_pallas_streaming(
-    aq: jax.Array,
-    bq: jax.Array,
+def l2r_gemm_pallas_streaming_planes(
+    a_stack: jax.Array,
+    b_rev: jax.Array,
     n_bits: int = 8,
     log2_radix: int = 2,
     levels: int | None = None,
@@ -324,28 +364,24 @@ def l2r_gemm_pallas_streaming(
     interpret: bool = False,
     level_count: jax.Array | int | None = None,
 ) -> jax.Array:
-    """Per-level snapshot stream of the stacked MSDF GEMM: (L, M, N) int32.
+    """Per-level snapshot stream over PRE-STACKED plane operands.
 
-    Level l of the output is bit-identical to the stacked schedule
-    truncated at ``levels=l+1`` — the Pallas realization of the streaming
-    emitter (core/progressive.py) for on-TPU progressive serving.  Shapes
-    must be multiples of the block sizes (ops.py pads).
-
-    ``level_count`` is a DYNAMIC int32 scalar (no recompilation when it
-    changes, unlike the static ``levels``): grid steps at levels >= the
-    count skip their MXU pass and output write, so a consumer that has
-    already decided (e.g. the while-loop early exit on the jnp backend)
-    can stop the snapshot stream short at runtime.  Output planes at
-    levels >= ``level_count`` are left unwritten (unspecified); planes
-    below it are bit-identical to the full run.  ``None`` processes every
-    scheduled level."""
-    m, k = aq.shape
-    k2, n = bq.shape
-    assert k == k2, (aq.shape, bq.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
-        f"shape ({m},{k})x({k2},{n}) not padded to blocks ({bm},{bk},{bn})"
-    )
+    The streaming analogue of :func:`l2r_gemm_pallas_stacked_planes`:
+    operands are the already-extracted PRE-SHIFTED stacks (``a_stack
+    (M, D*K)`` ascending, ``b_rev (D*K, N)`` descending, exactly D
+    chunks, chunk K padded to ``bk`` and M/N to ``bm``/``bn``), the
+    output the ``(L, M, N)`` snapshot stream.  ``level_count`` semantics
+    as in :func:`l2r_gemm_pallas_streaming`.
+    """
+    m, dk = a_stack.shape
+    dk2, n = b_rev.shape
     d = n_bits // log2_radix
+    assert dk == dk2 and dk % d == 0, (a_stack.shape, b_rev.shape, d)
+    k = dk // d
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"plane stacks ({m},{d}x{k})x({d}x{k},{n}) not padded to blocks "
+        f"({bm},{bk},{bn})"
+    )
     a_idx, b_idx, lv_idx = streaming_schedule(d, k // bk, levels)
     t_steps = int(a_idx.shape[0])
     n_levels = int(lv_idx[-1]) + 1 if t_steps else 0
@@ -354,9 +390,6 @@ def l2r_gemm_pallas_streaming(
     if level_count is None:
         level_count = n_levels
     cnt = jnp.asarray(level_count, jnp.int32).reshape(1)
-
-    a_stack = stack_planes_lhs(aq, n_bits, log2_radix)  # (M, D*K)
-    b_rev = stack_planes_rhs(bq, n_bits, log2_radix)    # (D*K, N)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
@@ -378,3 +411,47 @@ def l2r_gemm_pallas_streaming(
         interpret=interpret,
     )(jnp.asarray(a_idx), jnp.asarray(b_idx), jnp.asarray(lv_idx), cnt,
       a_stack, b_rev)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "log2_radix", "levels", "bm", "bk", "bn",
+                     "interpret"),
+)
+def l2r_gemm_pallas_streaming(
+    aq: jax.Array,
+    bq: jax.Array,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 128,
+    interpret: bool = False,
+    level_count: jax.Array | int | None = None,
+) -> jax.Array:
+    """Per-level snapshot stream of the stacked MSDF GEMM: (L, M, N) int32.
+
+    Level l of the output is bit-identical to the stacked schedule
+    truncated at ``levels=l+1`` — the Pallas realization of the streaming
+    emitter (core/progressive.py) for on-TPU progressive serving.  Shapes
+    must be multiples of the block sizes (ops.py pads).  Plane extraction
+    happens once here and feeds the pre-stacked entry
+    (:func:`l2r_gemm_pallas_streaming_planes`).
+
+    ``level_count`` is a DYNAMIC int32 scalar (no recompilation when it
+    changes, unlike the static ``levels``): grid steps at levels >= the
+    count skip their MXU pass and output write, so a consumer that has
+    already decided (e.g. the while-loop early exit on the jnp backend)
+    can stop the snapshot stream short at runtime.  Output planes at
+    levels >= ``level_count`` are left unwritten (unspecified); planes
+    below it are bit-identical to the full run.  ``None`` processes every
+    scheduled level."""
+    m, k = aq.shape
+    k2, n = bq.shape
+    assert k == k2, (aq.shape, bq.shape)
+    a_stack = stack_planes_lhs(aq, n_bits, log2_radix)  # (M, D*K)
+    b_rev = stack_planes_rhs(bq, n_bits, log2_radix)    # (D*K, N)
+    return l2r_gemm_pallas_streaming_planes(
+        a_stack, b_rev, n_bits, log2_radix, levels, bm, bk, bn,
+        interpret=interpret, level_count=level_count)

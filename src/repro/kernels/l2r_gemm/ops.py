@@ -23,11 +23,30 @@ baseline, kept for regression benchmarks).  ``l2r_gemm_progressive`` /
 The fused ``l2r_conv2d`` performs implicit im2col: the kh*kw taps of the
 window stream through the digit-plane GEMM as shifted views of the
 feature map, so the (B*H*W, cin*kh*kw) patch matrix is never
-materialized in HBM.  On the jnp backend the activation digit planes are
-additionally hoisted out of the tap loop (extracted once per feature
-map); the Pallas backends still extract planes inside each per-tap
-kernel call — hoisting them behind a pre-stacked kernel entry point is a
-noted ROADMAP follow-up for real-TPU tuning.
+materialized in HBM.
+
+**Pre-stacked plane operands** (``PlaneOperands``, core/quant.py): the
+digit-plane stacks — not the raw int tensors — are the real operands of
+every schedule, so the stacks are a first-class API.  ``l2r_gemm`` (and
+the streaming consumers in core/progressive.py) accept a
+``PlaneOperands`` in place of either raw operand on every backend;
+``l2r_conv2d`` / ``l2r_conv2d_progressive*`` consume the
+``QuantizedWeights.planes`` load-time weight-stack cache (built by
+``quantize_weights(..., prestack=True)``).  The operand story:
+
+  * activations: plane extraction is hoisted ONCE per feature map on
+    EVERY backend — the jnp conv stacks raw digits (f32 BLAS fast path),
+    the Pallas conv stacks pre-shifted bit-fields and each tap feeds a
+    shifted view straight into the pre-stacked kernel entries
+    (kernel.py:l2r_gemm_pallas_stacked_planes / _streaming_planes), so
+    the kh*kw taps share one extraction instead of paying one each;
+  * weights: ``QuantizedWeights`` caches the reversed RHS stack at model
+    load (raw-digit layout — converts to the pre-shifted Pallas layout
+    with exact chunk shifts) — weight planes are extracted exactly once
+    per process instead of once per call/decode step;
+  * all prestacked paths are bit-identical to inline extraction (the
+    inline paths build the very same stacks; swept in
+    tests/test_prestacked.py).
 """
 
 from __future__ import annotations
@@ -42,17 +61,19 @@ import jax.numpy as jnp
 from repro.core.l2r_gemm import (l2r_matmul_int_stacked, stacked_gemm_planes)
 from repro.core.progressive import (ProgressiveResult, l2r_matmul_int_streaming,
                                     level_bounds, progressive_matmul)
-from repro.core.quant import (QuantConfig, QuantizedWeights, plane_count,
-                              quantize, quantize_weights, stack_planes_lhs,
-                              stack_planes_rhs)
+from repro.core.quant import (PlaneOperands, QuantConfig, QuantizedWeights,
+                              plane_count, quantize, quantize_weights,
+                              stack_planes_lhs, stack_planes_rhs)
 
 from .kernel import (l2r_gemm_pallas, l2r_gemm_pallas_stacked,
-                     l2r_gemm_pallas_streaming)
+                     l2r_gemm_pallas_stacked_planes,
+                     l2r_gemm_pallas_streaming,
+                     l2r_gemm_pallas_streaming_planes)
 from .ref import l2r_gemm_ref
 
 __all__ = ["l2r_gemm", "l2r_gemm_progressive", "l2r_matmul_f", "l2r_conv2d",
            "l2r_conv2d_progressive", "l2r_conv2d_progressive_while",
-           "pad_to", "resolve_backend",
+           "pad_to", "resolve_backend", "PlaneOperands",
            "BACKENDS", "BACKEND_ENV_VAR", "SCHEDULES"]
 
 SCHEDULES = ("stacked", "pairs", "streaming")
@@ -67,6 +88,11 @@ def resolve_backend(backend: str | None = None) -> str:
     The platform default is ``pallas-tpu`` when jax runs on TPU and the
     ``jnp`` level-stacked schedule everywhere else (interpret-mode Pallas
     is a validation tool, never a production default).
+
+    An explicit ``pallas-tpu`` on a host whose jax platform is not TPU is
+    rejected HERE, with a clear message — previously the mismatch
+    surfaced as an opaque Mosaic lowering error deep inside the first
+    ``pallas_call``.
     """
     chosen = backend or os.environ.get(BACKEND_ENV_VAR, "").strip() or "auto"
     if chosen == "auto":
@@ -74,10 +100,27 @@ def resolve_backend(backend: str | None = None) -> str:
     if chosen not in BACKENDS:
         raise ValueError(
             f"unknown L2R backend {chosen!r}; expected one of {BACKENDS} or 'auto'")
+    if chosen == "pallas-tpu" and jax.default_backend() != "tpu":
+        raise RuntimeError(
+            f"backend='pallas-tpu' requires a TPU host, but jax is running "
+            f"on {jax.default_backend()!r}.  Use backend='pallas-interpret' "
+            f"to validate the kernel dataflow on this host (slow, "
+            f"correctness only), backend='jnp' for the production CPU/GPU "
+            f"path, or unset ${BACKEND_ENV_VAR} for the platform default.")
     return chosen
 
 
 def pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    """Zero-pad every dim of ``x`` up to a multiple of ``mults`` (exact for
+    matmul operands).  ``mults`` must name every dim: a shorter (or
+    longer) tuple used to be silently zip-truncated, leaving trailing
+    dims unpadded with no error — now a ValueError.
+    """
+    if len(mults) != x.ndim:
+        raise ValueError(
+            f"pad_to: mults {mults!r} has rank {len(mults)} but x has rank "
+            f"{x.ndim} (shape {x.shape}); every dim needs a multiple — "
+            f"pass 1 for dims that should stay unpadded")
     pads = []
     for dim, mult in zip(x.shape, mults):
         rem = (-dim) % mult
@@ -85,6 +128,46 @@ def pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
     if all(p == (0, 0) for p in pads):
         return x
     return jnp.pad(x, pads)
+
+
+def _lhs_stack_blocked(a, n_bits: int, log2_radix: int, bm: int, bk: int):
+    """Pre-shifted LHS plane stack block-padded for the Pallas kernels.
+
+    ``a`` is a raw (M, K) operand (padded then stacked — identical to
+    stacking the padded operand) or a :class:`PlaneOperands` (its core
+    stack is chunk-padded: zero digits of zero values, exact).  Returns
+    ``(stack (Mp, D*Kp), m)``.
+    """
+    d = plane_count(n_bits, log2_radix)
+    if isinstance(a, PlaneOperands):
+        st = a.core_stack(shifted=True)
+        m, k = st.shape[-2], a.k
+        r = st.reshape(m, d, k)
+        r = jnp.pad(r, (((0, (-m) % bm), (0, 0), (0, (-k) % bk))))
+        return r.reshape(r.shape[0], -1), m
+    m = a.shape[0]
+    return stack_planes_lhs(pad_to(a, (bm, bk)), n_bits, log2_radix), m
+
+
+def _rhs_stack_blocked(b, n_bits: int, log2_radix: int, bk: int, bn: int):
+    """Pre-shifted (descending) RHS plane stack block-padded per chunk.
+    Returns ``(stack (D*Kp, Np), n)``; accepts raw (K, N) or a 2-D
+    :class:`PlaneOperands`."""
+    d = plane_count(n_bits, log2_radix)
+    if isinstance(b, PlaneOperands):
+        st = b.core_stack(shifted=True)
+        k, n = b.k, st.shape[-1]
+        r = st.reshape(d, k, n)
+        r = jnp.pad(r, ((0, 0), (0, (-k) % bk), (0, (-n) % bn)))
+        return r.reshape(-1, r.shape[-1]), n
+    n = b.shape[1]
+    return stack_planes_rhs(pad_to(b, (bk, bn)), n_bits, log2_radix), n
+
+
+def _gemm_mk(a) -> tuple[int, int]:
+    if isinstance(a, PlaneOperands):
+        return a.stack.shape[-2], a.k
+    return a.shape
 
 
 @functools.partial(
@@ -106,28 +189,65 @@ def _l2r_gemm_backend(
     early_exit: bool = False,
 ) -> jax.Array:
     """Backend-resolved integer GEMM (backend is a static, already-resolved
-    string here so the trace cache keys on it)."""
+    string here so the trace cache keys on it).  Either operand may be a
+    pre-stacked :class:`PlaneOperands` (schedule "stacked"/"streaming")."""
+    a_pre = isinstance(aq, PlaneOperands)
+    b_pre = isinstance(bq, PlaneOperands)
     if backend == "jnp":
         if schedule == "stacked":
-            return l2r_matmul_int_stacked(aq, bq, n_bits, log2_radix, levels)
+            if not (a_pre or b_pre):
+                return l2r_matmul_int_stacked(aq, bq, n_bits, log2_radix,
+                                              levels)
+            # raw-digit layout whenever every operand allows it (the f32
+            # BLAS fast path); a pre-shifted cache pulls both sides to
+            # the shift-free int-dot layout instead of being unshifted
+            shifted = (a_pre and aq.shifted) or (b_pre and bq.shifted)
+            a_st = aq.core_stack(shifted) if a_pre else stack_planes_lhs(
+                aq, n_bits, log2_radix, shifted=shifted)
+            b_st = bq.core_stack(shifted) if b_pre else stack_planes_rhs(
+                bq, n_bits, log2_radix, shifted=shifted)
+            k = aq.k if a_pre else aq.shape[-1]
+            return stacked_gemm_planes(a_st, b_st, k, n_bits, log2_radix,
+                                       levels, shifted=shifted)
         if schedule == "streaming":
             return l2r_matmul_int_streaming(aq, bq, n_bits, log2_radix,
                                             levels, early_exit)
         return l2r_gemm_ref(aq, bq, n_bits, log2_radix, levels)
-    m, k = aq.shape
-    n = bq.shape[1]
-    ap = pad_to(aq, (bm, bk))
-    bp = pad_to(bq, (bk, bn))
     interpret = backend == "pallas-interpret"
+    m, _ = _gemm_mk(aq)
+    if schedule == "pairs":  # raw-only baseline (validated in l2r_gemm)
+        n = bq.shape[1]
+        out = l2r_gemm_pallas(pad_to(aq, (bm, bk)), pad_to(bq, (bk, bn)),
+                              n_bits, log2_radix, levels, bm, bk, bn,
+                              interpret=interpret)
+        return out[:m, :n]
     # schedule="streaming" asks only for the FINAL prefix: the stacked
     # kernel walks the identical (level, k-block) schedule, so it IS that
     # prefix — writing the (L, M, N) snapshot planes
     # (l2r_gemm_pallas_streaming, used by l2r_gemm_progressive) would
     # spend L x the output HBM on a bit-identical result.
-    fn = l2r_gemm_pallas if schedule == "pairs" else l2r_gemm_pallas_stacked
-    out = fn(ap, bp, n_bits, log2_radix, levels, bm, bk, bn,
-             interpret=interpret)
+    a_stack, m = _lhs_stack_blocked(aq, n_bits, log2_radix, bm, bk)
+    b_rev, n = _rhs_stack_blocked(bq, n_bits, log2_radix, bk, bn)
+    out = l2r_gemm_pallas_stacked_planes(a_stack, b_rev, n_bits, log2_radix,
+                                         levels, bm, bk, bn,
+                                         interpret=interpret)
     return out[:m, :n]
+
+
+def _check_plane_operand(x, side: str, n_bits: int, log2_radix: int) -> None:
+    if not isinstance(x, PlaneOperands):
+        return
+    if x.side != side:
+        raise ValueError(
+            f"PlaneOperands prepared as {x.side!r} passed as the {side} "
+            f"operand (LHS stacks ascend, RHS stacks descend — they are "
+            f"not interchangeable)")
+    if (x.n_bits, x.log2_radix) != (n_bits, log2_radix):
+        raise ValueError(
+            f"PlaneOperands layout (n_bits={x.n_bits}, "
+            f"log2_radix={x.log2_radix}) does not match the call "
+            f"(n_bits={n_bits}, log2_radix={log2_radix}); re-prepare the "
+            f"stack for this config")
 
 
 def l2r_gemm(
@@ -149,20 +269,49 @@ def l2r_gemm(
     matmul).  Bit-identical across backends and schedules, including
     truncated ``levels``.
 
+    Either operand may be a pre-stacked
+    :class:`~repro.core.quant.PlaneOperands` (``PlaneOperands.prepare_lhs``
+    / ``prepare_rhs``, or the ``QuantizedWeights.planes`` load-time
+    cache) on every backend — plane extraction then happens exactly once
+    where the operand was prepared, not once per call, with bit-identical
+    results.  The ``pairs`` baseline schedule consumes raw int tensors
+    only.
+
     ``early_exit`` (``schedule="streaming"``, jnp backend) runs the level
     walk as the ``lax.while_loop`` emitter instead of the fixed scan —
     bit-identical result here (with no consumer fold every level runs; it
     is the control flow early-exit consumers terminate inside, see
-    core/progressive.py).  Pallas backends ignore the flag: their stacked
-    walk already IS the final prefix, and runtime shortening is the
-    streaming kernel's ``level_count`` scalar.
+    core/progressive.py).  Schedules/backends that cannot honor the flag
+    REJECT it: the pairs/stacked schedules have no level loop to stop,
+    and the Pallas grids cannot shrink at runtime — their analogue is the
+    streaming kernel's dynamic ``level_count`` scalar
+    (kernel.py:l2r_gemm_pallas_streaming).
     """
     assert schedule in SCHEDULES, schedule
-    assert not early_exit or schedule == "streaming", \
-        "early_exit is a streaming-schedule control flow; " \
-        f"schedule={schedule!r} does not read it"
+    if early_exit and schedule != "streaming":
+        raise ValueError(
+            f"early_exit is a streaming-schedule control flow; "
+            f"schedule={schedule!r} has no level loop to stop short "
+            f"(it would be silently dropped)")
+    resolved = resolve_backend(backend)
+    if early_exit and resolved != "jnp":
+        raise ValueError(
+            f"early_exit=True is the jnp while-loop emitter; the "
+            f"{resolved!r} backend cannot shrink its grid at runtime and "
+            f"would silently drop the flag — use the streaming kernel's "
+            f"dynamic level_count scalar "
+            f"(l2r_gemm_pallas_streaming(level_count=...)) for grid-level "
+            f"stop-short on Pallas")
+    _check_plane_operand(aq, "lhs", n_bits, log2_radix)
+    _check_plane_operand(bq, "rhs", n_bits, log2_radix)
+    if schedule == "pairs" and (isinstance(aq, PlaneOperands)
+                                or isinstance(bq, PlaneOperands)):
+        raise TypeError(
+            "schedule='pairs' (the D²-pass baseline) consumes raw int "
+            "operands; pre-stacked PlaneOperands are a stacked/streaming-"
+            "schedule format")
     return _l2r_gemm_backend(aq, bq, n_bits, log2_radix, levels,
-                             bm, bk, bn, schedule, resolve_backend(backend),
+                             bm, bk, bn, schedule, resolved,
                              early_exit)
 
 
@@ -175,13 +324,12 @@ def _l2r_gemm_progressive_backend(aq, bq, n_bits, log2_radix, levels,
                                   bm, bk, bn, backend):
     if backend == "jnp":
         return progressive_matmul(aq, bq, n_bits, log2_radix, levels)
-    m, k = aq.shape
-    n = bq.shape[1]
-    ap = pad_to(aq, (bm, bk))
-    bp = pad_to(bq, (bk, bn))
-    stream = l2r_gemm_pallas_streaming(ap, bp, n_bits, log2_radix, levels,
-                                       bm, bk, bn,
-                                       interpret=(backend == "pallas-interpret"))
+    m, k = _gemm_mk(aq)
+    a_stack, m = _lhs_stack_blocked(aq, n_bits, log2_radix, bm, bk)
+    b_rev, n = _rhs_stack_blocked(bq, n_bits, log2_radix, bk, bn)
+    stream = l2r_gemm_pallas_streaming_planes(
+        a_stack, b_rev, n_bits, log2_radix, levels, bm, bk, bn,
+        interpret=(backend == "pallas-interpret"))
     bounds = level_bounds(plane_count(n_bits, log2_radix), log2_radix, k,
                           levels)
     return ProgressiveResult(partial=stream[:, :m, :n], tail_bound=bounds.f32,
@@ -204,10 +352,14 @@ def l2r_gemm_progressive(
     Level l of ``result.partial`` is bit-identical to
     ``l2r_gemm(..., levels=l+1, schedule="stacked")`` on every backend;
     bounds come with the int32 exactness guard (core/progressive.py).
-    Consumers that only need a fold over the stream (early-exit serving)
-    should use ``core.progressive.streaming_matmul_scan`` instead — this
-    entry materializes the ``(L, M, N)`` stack it returns.
+    Either operand may be a pre-stacked :class:`PlaneOperands` (as in
+    :func:`l2r_gemm`).  Consumers that only need a fold over the stream
+    (early-exit serving) should use
+    ``core.progressive.streaming_matmul_scan`` instead — this entry
+    materializes the ``(L, M, N)`` stack it returns.
     """
+    _check_plane_operand(aq, "lhs", n_bits, log2_radix)
+    _check_plane_operand(bq, "rhs", n_bits, log2_radix)
     return _l2r_gemm_progressive_backend(aq, bq, n_bits, log2_radix, levels,
                                          bm, bk, bn, resolve_backend(backend))
 
@@ -224,20 +376,30 @@ def l2r_matmul_f(
     """Float -> quantize -> dispatched MSDF GEMM -> dequantized float.
 
     ``w_q`` (core/quant.py:QuantizedWeights, built once at load) skips
-    the per-forward weight quantization; ``w`` may then be None.
+    the per-forward weight quantization; ``w`` may then be None.  When
+    the cache also carries its pre-stacked RHS plane stack
+    (``quantize_weights(..., prestack=True)``) and the layout matches
+    this call's config, the GEMM consumes the stack directly — weight
+    plane extraction then happened exactly once at load time.
     """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     # per-row (per-token) activation scales commute with the K-contraction
     xq, xs = quantize(x2, cfg, axis=0 if cfg.per_channel else None)
+    w_in = None
     if w_q is None:
         wq, ws = quantize(w, cfg, axis=-1)  # per-out-channel: (1, N)
     elif isinstance(w_q, QuantizedWeights):
         wq, ws = w_q.q, w_q.scale
+        p = w_q.planes
+        if (p is not None and schedule != "pairs"
+                and p.matches(cfg.n_bits, cfg.log2_radix, ndim=2,
+                              side="rhs")):
+            w_in = p
     else:
         wq, ws = w_q
-    out = l2r_gemm(xq, wq, cfg.n_bits, cfg.log2_radix, levels,
-                   schedule=schedule, backend=backend)
+    out = l2r_gemm(xq, wq if w_in is None else w_in, cfg.n_bits,
+                   cfg.log2_radix, levels, schedule=schedule, backend=backend)
     out = out.astype(jnp.float32) * xs * ws.reshape(1, -1)
     return out.astype(x.dtype).reshape(*lead, wq.shape[-1])
 
@@ -266,6 +428,24 @@ def _tap_view(xp: jax.Array, dy: int, dx: int, oh: int, ow: int,
               dx * dw:dx * dw + (ow - 1) * sw + 1:sw]
 
 
+def _conv_w_geom(w_in) -> tuple[int, int, int, int]:
+    """(kh, kw, cin, cout) of a raw conv weight or its PlaneOperands cache."""
+    if isinstance(w_in, PlaneOperands):
+        kh, kw = w_in.stack.shape[0], w_in.stack.shape[1]
+        return kh, kw, w_in.k, w_in.stack.shape[-1]
+    return w_in.shape
+
+
+def _conv_wrev(w_in, n_bits: int, log2_radix: int, shifted: bool) -> jax.Array:
+    """Reversed RHS plane stack (kh, kw, D*cin, cout) of the conv weight —
+    from the load-time cache when present (exact layout conversion),
+    extracted here otherwise."""
+    if isinstance(w_in, PlaneOperands):
+        return w_in.core_stack(shifted)
+    return stack_planes_rhs(w_in, n_bits, log2_radix, axis=-2,
+                            shifted=shifted)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("n_bits", "log2_radix", "levels", "backend", "stride",
@@ -273,7 +453,7 @@ def _tap_view(xp: jax.Array, dy: int, dx: int, oh: int, ow: int,
 )
 def _l2r_conv2d_int(
     xq: jax.Array,
-    wq: jax.Array,
+    w_in,
     n_bits: int,
     log2_radix: int,
     levels: int | None,
@@ -283,27 +463,35 @@ def _l2r_conv2d_int(
 ) -> jax.Array:
     """Integer core of the fused conv: implicit im2col over kh*kw taps.
 
-    xq: (B, H, W, cin) small ints; wq: (kh, kw, cin, cout) small ints;
+    xq: (B, H, W, cin) small ints; ``w_in``: (kh, kw, cin, cout) small
+    ints OR the pre-stacked :class:`PlaneOperands` weight cache;
     "SAME" padding, arbitrary stride/dilation (each tap reads a
     step-sliced shifted view — no patch matrix for any geometry).
     Bit-identical to quantized im2col + l2r_matmul_int on the same
     operands: the contraction over (kh, kw, cin) splits into kh*kw
     independent cin-contractions, and per-significance-level partial
     sums add across taps exactly.
+
+    Activation plane extraction is hoisted out of the tap loop on EVERY
+    backend — one stack per feature map (raw digits on jnp for the f32
+    BLAS fast path, pre-shifted bit-fields feeding the pre-stacked
+    Pallas kernel entry) — and the weight stack comes from the load-time
+    cache when provided, so a cached 3x3 layer performs exactly one
+    activation extraction and zero weight extractions per call.
     """
     bsz, h, w_, cin = xq.shape
-    kh, kw, _, cout = wq.shape
+    kh, kw, _, cout = _conv_w_geom(w_in)
     oh, ow, (ph_lo, ph_hi), (pw_lo, pw_hi) = _conv_same_geometry(
         h, w_, kh, kw, stride, dilation)
     xp = jnp.pad(xq, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
     acc = jnp.zeros((bsz, oh, ow, cout), jnp.int32)
+    d = plane_count(n_bits, log2_radix)
     if backend == "jnp":
         # hoist plane extraction out of the tap loop: one LHS stack for
         # the whole feature map, one reversed RHS stack for all taps
         # (raw digits -> the guarded f32 BLAS fast path)
         xsp = stack_planes_lhs(xp, n_bits, log2_radix, shifted=False)
-        wrev = stack_planes_rhs(wq, n_bits, log2_radix, axis=-2,
-                                shifted=False)
+        wrev = _conv_wrev(w_in, n_bits, log2_radix, shifted=False)
         for dy in range(kh):
             for dx in range(kw):
                 a = _tap_view(xsp, dy, dx, oh, ow, stride, dilation)
@@ -311,16 +499,31 @@ def _l2r_conv2d_int(
                     a, wrev[dy, dx], cin, n_bits, log2_radix, levels,
                     shifted=False)
         return acc
-    # per-tap K is only cin: shrink the contraction block to the smallest
-    # 128-lane multiple so shallow layers (cin=3) don't pad 9 taps to 256
+    # Pallas: the same per-feature-map hoist, in the kernels' pre-shifted
+    # layout — each tap view of the stacked map feeds the pre-stacked
+    # kernel entry directly (channels-last stacking commutes with the
+    # spatial tap slicing), instead of re-extracting planes per tap.
+    # Per-tap K is only cin: shrink the contraction block to the smallest
+    # 128-lane multiple so shallow layers (cin=3) don't pad 9 taps to 256.
     bk = min(256, -(-cin // 128) * 128)
+    ckp = cin + (-cin) % bk
+    xsp = stack_planes_lhs(xp, n_bits, log2_radix)  # (B, H', W', D*cin)
+    wrev = _conv_wrev(w_in, n_bits, log2_radix, shifted=True)
+    wrev = jnp.pad(wrev.reshape(kh, kw, d, cin, cout),
+                   ((0, 0), (0, 0), (0, 0), (0, ckp - cin),
+                    (0, (-cout) % 128)))
+    wrev = wrev.reshape(kh, kw, d * ckp, -1)
+    interpret = backend == "pallas-interpret"
     for dy in range(kh):
         for dx in range(kw):
-            a = _tap_view(xp, dy, dx, oh, ow, stride, dilation)
-            t = _l2r_gemm_backend(a.reshape(-1, cin), wq[dy, dx], n_bits,
-                                  log2_radix, levels, 128, bk, 128,
-                                  "stacked", backend)
-            acc = acc + t.reshape(bsz, oh, ow, cout)
+            a = _tap_view(xsp, dy, dx, oh, ow, stride, dilation)
+            a2 = a.reshape(-1, d, cin)
+            m0 = a2.shape[0]
+            a2 = jnp.pad(a2, (((0, (-m0) % 128), (0, 0), (0, ckp - cin))))
+            t = l2r_gemm_pallas_stacked_planes(
+                a2.reshape(a2.shape[0], -1), wrev[dy, dx], n_bits,
+                log2_radix, levels, 128, bk, 128, interpret=interpret)
+            acc = acc + t[:m0, :cout].reshape(bsz, oh, ow, cout)
     return acc
 
 
@@ -339,16 +542,20 @@ def l2r_conv2d(
 
     The composite-IPU conv without the HBM patch matrix: activations are
     quantized per image (scales commute with the window contraction),
-    digit planes are extracted once, and each kernel tap streams a
-    shifted (stride-stepped, dilation-spaced) view of the feature map
-    through the level-stacked GEMM.  ``w_q`` reuses a load-time weight
-    cache; otherwise ``w`` (kh, kw, cin, cout) is quantized per output
-    channel here.
+    digit planes are extracted once per feature map on every backend,
+    and each kernel tap streams a shifted (stride-stepped,
+    dilation-spaced) view of the feature map through the level-stacked
+    GEMM.  ``w_q`` reuses a load-time weight cache — when it carries the
+    pre-stacked plane stack (``quantize_weights(..., prestack=True,
+    plane_axis=-2)``) the conv consumes that stack directly and performs
+    no weight plane extraction at all; otherwise ``w`` (kh, kw, cin,
+    cout) is quantized per output channel here.
     """
     if w_q is None:
         w_q = quantize_weights(w, cfg)  # (kh,kw,cin,cout), scale (1,1,1,cout)
     xq, xs = quantize(x, cfg, axis=0)  # per-image scales (B,1,1,1)
-    out = _l2r_conv2d_int(xq, w_q.q, cfg.n_bits, cfg.log2_radix, levels,
+    out = _l2r_conv2d_int(xq, _conv_w_in(w_q, cfg), cfg.n_bits,
+                          cfg.log2_radix, levels,
                           resolve_backend(backend), _pair(stride),
                           _pair(dilation))
     out = out.astype(jnp.float32) * xs * w_q.scale.reshape(1, 1, 1, -1)
@@ -362,26 +569,43 @@ def _pair(v: int | tuple[int, int]) -> tuple[int, int]:
     return (v, v) if isinstance(v, int) else tuple(v)
 
 
+def _conv_w_in(w_q: QuantizedWeights, cfg: QuantConfig):
+    """The conv weight operand: the cached plane stack when its layout
+    matches this call's config (contraction axis -2), the raw int weight
+    otherwise (inline extraction — bit-identical)."""
+    p = w_q.planes
+    if p is not None and p.matches(cfg.n_bits, cfg.log2_radix, ndim=4,
+                                   side="rhs", contract_axis=2):
+        return p
+    return w_q.q
+
+
 # ------------------------------------------------------- progressive conv
-def _conv_level_term(xq, wq, n_bits, log2_radix, stride, dilation):
+def _conv_level_term(xq, w_in, n_bits, log2_radix, stride, dilation):
     """Per-level term of the progressive conv's jnp paths: hoisted
     zero-padded plane stacks + a ``term(ao, bo)`` closure summing the tap
     contributions of one significance level.  Shared by the fixed scan
     AND the early-exit while loop — identical ops in identical order is
-    what keeps the two control flows bit-identical."""
+    what keeps the two control flows bit-identical.  ``w_in`` may be the
+    pre-stacked weight cache (its window stack IS the padded ``wrev``
+    built here — zero extraction, bit-identical stream)."""
     from repro.core.l2r_gemm import _f32_dot_exact
 
     bsz, h, w_, cin = xq.shape
-    kh, kw, _, cout = wq.shape
+    kh, kw, _, cout = _conv_w_geom(w_in)
     d = n_bits // log2_radix
     oh, ow, (ph_lo, ph_hi), (pw_lo, pw_hi) = _conv_same_geometry(
         h, w_, kh, kw, stride, dilation)
     xp = jnp.pad(xq, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
     xsp = stack_planes_lhs(xp, n_bits, log2_radix, shifted=False)
-    wrev = stack_planes_rhs(wq, n_bits, log2_radix, axis=-2, shifted=False)
     pad = (d - 1) * cin
     xsp = jnp.pad(xsp, ((0, 0), (0, 0), (0, 0), (0, pad)))
-    wrev = jnp.pad(wrev, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    if isinstance(w_in, PlaneOperands):
+        wrev = w_in.window_stack()
+    else:
+        wrev = stack_planes_rhs(w_in, n_bits, log2_radix, axis=-2,
+                                shifted=False)
+        wrev = jnp.pad(wrev, ((0, 0), (0, 0), (0, pad), (0, 0)))
     use_f32 = _f32_dot_exact(cin, d, log2_radix)
     if use_f32:
         xsp = xsp.astype(jnp.float32)
@@ -417,7 +641,7 @@ def _conv_level_term(xq, wq, n_bits, log2_radix, stride, dilation):
 )
 def _l2r_conv2d_progressive_int(
     xq: jax.Array,
-    wq: jax.Array,
+    w_in,
     n_bits: int,
     log2_radix: int,
     levels: int | None,
@@ -430,14 +654,16 @@ def _l2r_conv2d_progressive_int(
     Level l is bit-identical to ``_l2r_conv2d_int(..., levels=l+1)``: the
     taps share each significance level, so the per-level conv term is the
     tap sum of per-level GEMM terms.  The jnp path is the streaming scan
-    of core/progressive.py with the tap loop inside the level step
-    (activation planes hoisted once per feature map); Pallas backends sum
-    the per-tap snapshot streams of the streaming kernel.
+    of core/progressive.py with the tap loop inside the level step;
+    Pallas backends sum the per-tap snapshot streams of the streaming
+    kernel.  Activation planes are hoisted once per feature map on every
+    backend, and ``w_in`` may be the pre-stacked weight cache (zero
+    weight extraction).
     """
     from repro.core.progressive import _level_walk
 
     bsz, h, w_, cin = xq.shape
-    kh, kw, _, cout = wq.shape
+    kh, kw, _, cout = _conv_w_geom(w_in)
     d = n_bits // log2_radix
     oh, ow, (ph_lo, ph_hi), (pw_lo, pw_hi) = _conv_same_geometry(
         h, w_, kh, kw, stride, dilation)
@@ -448,20 +674,30 @@ def _l2r_conv2d_progressive_int(
     if backend != "jnp":
         xp = jnp.pad(xq, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
         bk = min(256, -(-cin // 128) * 128)
+        ckp = cin + (-cin) % bk
+        xsp = stack_planes_lhs(xp, n_bits, log2_radix)  # once per map
+        wrev = _conv_wrev(w_in, n_bits, log2_radix, shifted=True)
+        wrev = jnp.pad(wrev.reshape(kh, kw, d, cin, cout),
+                       ((0, 0), (0, 0), (0, 0), (0, ckp - cin),
+                        (0, (-cout) % 128)))
+        wrev = wrev.reshape(kh, kw, d * ckp, -1)
         acc = jnp.zeros((n_steps, bsz, oh, ow, cout), jnp.int32)
         for dy in range(kh):
             for dx in range(kw):
-                a = _tap_view(xp, dy, dx, oh, ow, stride, dilation)
-                ap = pad_to(a.reshape(-1, cin), (128, bk))
-                bp = pad_to(wq[dy, dx], (bk, 128))
-                t = l2r_gemm_pallas_streaming(
-                    ap, bp, n_bits, log2_radix, levels, 128, bk, 128,
+                a = _tap_view(xsp, dy, dx, oh, ow, stride, dilation)
+                a2 = a.reshape(-1, d, cin)
+                m0 = a2.shape[0]
+                a2 = jnp.pad(a2,
+                             (((0, (-m0) % 128), (0, 0), (0, ckp - cin))))
+                t = l2r_gemm_pallas_streaming_planes(
+                    a2.reshape(a2.shape[0], -1), wrev[dy, dx], n_bits,
+                    log2_radix, levels, 128, bk, 128,
                     interpret=(backend == "pallas-interpret"))
-                t = t[:, :bsz * oh * ow, :cout]
+                t = t[:, :m0, :cout]
                 acc = acc + t.reshape(n_steps, bsz, oh, ow, cout)
         return acc
 
-    term, out_shape = _conv_level_term(xq, wq, n_bits, log2_radix, stride,
+    term, out_shape = _conv_level_term(xq, w_in, n_bits, log2_radix, stride,
                                        dilation)
 
     def step(acc, xs):
@@ -514,7 +750,8 @@ def l2r_conv2d_progressive_while(
 
     a_off, b_off, svals = _level_walk(cfg.planes, levels)
     scale = xs * w_q.scale.reshape(1, 1, 1, -1)
-    term, out_shape = _conv_level_term(xq, w_q.q, cfg.n_bits, cfg.log2_radix,
+    term, out_shape = _conv_level_term(xq, _conv_w_in(w_q, cfg), cfg.n_bits,
+                                       cfg.log2_radix,
                                        _pair(stride), _pair(dilation))
     acc0 = jnp.zeros(out_shape, jnp.int32)
     if int(svals.shape[0]) == 0:
@@ -552,7 +789,7 @@ def l2r_conv2d_progressive(
     xq, xs = quantize(x, cfg, axis=0)  # per-image scales (B,1,1,1)
     kh, kw, cin, _ = w_q.q.shape
     stack = _l2r_conv2d_progressive_int(
-        xq, w_q.q, cfg.n_bits, cfg.log2_radix, levels,
+        xq, _conv_w_in(w_q, cfg), cfg.n_bits, cfg.log2_radix, levels,
         resolve_backend(backend), _pair(stride), _pair(dilation))
     bounds = level_bounds(cfg.planes, cfg.log2_radix, kh * kw * cin, levels)
     result = ProgressiveResult(partial=stack, tail_bound=bounds.f32,

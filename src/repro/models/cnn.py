@@ -50,11 +50,23 @@ def vgg16_build(n_classes: int = 1000, in_channels: int = 3) -> dict:
     return params
 
 
-def vgg16_quantize_weights(params: dict, cfg: QuantConfig = QuantConfig()
+def vgg16_quantize_weights(params: dict, cfg: QuantConfig = QuantConfig(),
+                           prestack: bool = True
                            ) -> dict[str, QuantizedWeights]:
     """The L2R weight cache: every matmul/conv weight -> int8 + per-
-    out-channel scale, built exactly once at model load."""
-    return {name: quantize_weights(p["w"], cfg)
+    out-channel scale, built exactly once at model load.
+
+    ``prestack=True`` (default) also caches each layer's reversed RHS
+    digit-plane stack (core/quant.py:PlaneOperands — contraction axis
+    -2 for conv weights, 0 for the FC head) so the conv taps and the
+    streamed fc8 head consume pre-extracted planes: weight planes are
+    extracted exactly once per process instead of once per call.  Costs
+    D x the int8 weight bytes; pass False to keep extract-per-call.
+    """
+    return {name: quantize_weights(
+                p["w"], cfg, prestack=prestack,
+                plane_axis=-2 if len(p["w"].shape) == 4 else 0,
+                window_pad=prestack and name == "fc8")
             for name, p in params.items()}
 
 
@@ -158,7 +170,13 @@ def vgg16_classify_progressive(
     # quantize the head activations exactly as l2r_matmul_f does, so the
     # streamed accumulator is bit-identical to the one-shot fc8 matmul
     xq, xs = quantize(x, l2r, axis=0 if l2r.per_channel else None)
+    # the load-time plane-stack cache feeds the stream directly (the
+    # stream is bit-identical either way — the inline path extracts the
+    # very same stack per call)
+    p = w_q.planes
+    wq_in = p if (p is not None and p.matches(l2r.n_bits, l2r.log2_radix,
+                                              ndim=2, side="rhs")) else w_q.q
     logits, pred, exit_level = streaming_argmax(
-        xq, w_q.q, xs, w_q.scale, l2r.n_bits, l2r.log2_radix,
+        xq, wq_in, xs, w_q.scale, l2r.n_bits, l2r.log2_radix,
         bias=params["fc8"]["b"], out_dtype=x.dtype, early_exit=early_exit)
     return pred, exit_level, logits

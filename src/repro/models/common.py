@@ -133,7 +133,16 @@ def dense(
         wq = w.q.reshape(w.q.shape[0], -1) if w.q.ndim > 2 else w.q
         ws = jnp.broadcast_to(w.scale, (1, *trail)).reshape(1, -1)
         if l2r is not None:
-            out = l2r_matmul_f(x, None, l2r, l2r_levels, w_q=(wq, ws))
+            planes = w.planes
+            if planes is not None and planes.stack.ndim > 2:
+                # flatten trailing output dims of the cached RHS stack the
+                # same way as q (the contraction axis is leading, so the
+                # plane layout is untouched)
+                planes = dataclasses.replace(
+                    planes, stack=planes.stack.reshape(
+                        planes.stack.shape[0], -1), axis=-2)
+            out = l2r_matmul_f(x, None, l2r, l2r_levels,
+                               w_q=QuantizedWeights(wq, ws, planes))
             return out.reshape(*x.shape[:-1], *trail)
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
@@ -225,20 +234,29 @@ def quantize_params(desc_tree, params):
     return jax.tree.map(f, desc_tree, params, is_leaf=_is_param)
 
 
-def quantize_tree(desc_tree, params, cfg: QuantConfig = QuantConfig()):
+def quantize_tree(desc_tree, params, cfg: QuantConfig = QuantConfig(),
+                  prestack: bool = False):
     """Materialized f32 params -> :class:`QuantizedWeights` leaves.
 
     The load-time L2R weight cache for full model trees: every eligible
     matmul weight (same eligibility as quantize_desc) is quantized ONCE,
     per out-channel (and per stacked layer), so serving traces carry no
     weight quantization ops.  dense() consumes the records directly.
+
+    ``prestack=True`` additionally caches each weight's reversed RHS
+    digit-plane stack (core/quant.py:PlaneOperands, contraction axis 0 —
+    axis 1 for stacked-layer weights, whose leading layer axis the
+    forward scan strips) so the serving traces carry no weight plane
+    extraction either: D x the int8 weight bytes buys
+    extract-once-per-process operands.
     """
     def f(p: Param, w):
         if not _quantizable(p):
             return w
         stacked = p.axes and p.axes[0] == "layers"
         axes = (0, -1) if stacked else (-1,)
-        return quantize_weights(w, cfg, channel_axes=axes)
+        return quantize_weights(w, cfg, channel_axes=axes, prestack=prestack,
+                                plane_axis=1 if stacked else 0)
     return jax.tree.map(f, desc_tree, params, is_leaf=_is_param)
 
 

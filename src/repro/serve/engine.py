@@ -33,7 +33,7 @@ __all__ = ["prepare_params", "make_prefill_step", "make_decode_step",
 
 
 # ------------------------------------------------------- weight preparation
-def prepare_params(cfg: ModelConfig, params, desc=None):
+def prepare_params(cfg: ModelConfig, params, desc=None, prestack: bool = True):
     """Load-time serving weights: build the L2R weight cache ONCE.
 
     When ``cfg.l2r`` is set, every eligible matmul weight is converted to
@@ -42,6 +42,16 @@ def prepare_params(cfg: ModelConfig, params, desc=None):
     then stream activations through the dispatched level-stacked
     digit-plane kernel with NO per-step weight quantization.  Without an
     L2R config this is the identity (bf16/f32 serving).
+
+    ``prestack=True`` (default) also caches every record's reversed RHS
+    digit-plane stack (core/quant.py:PlaneOperands), so the decode/
+    prefill traces carry no weight plane extraction either — planes are
+    extracted exactly once per process.  The head cache is additionally
+    built with the streaming window padding: the progressive head stream
+    (``progressive_logits_from_hidden``, every decode step) consumes the
+    cached stack with zero per-step operand preparation.  Costs D x (the
+    head 2D-1 x) the int8 weight bytes; pass False for the
+    extract-per-call layout.
 
     ``desc`` is the Param descriptor tree (for eligibility); defaults to
     rebuilding it from ``cfg`` for LM families.
@@ -56,7 +66,7 @@ def prepare_params(cfg: ModelConfig, params, desc=None):
         from repro.models.transformer import lm_build
 
         desc = lm_build(cfg)
-    out = quantize_tree(desc, params, cfg.l2r)
+    out = quantize_tree(desc, params, cfg.l2r, prestack=prestack)
     # the LM head (vocab-axis, excluded from quantize_tree so embedding
     # lookups keep the f32 table) is the LARGEST matmul of every decode
     # step — cache its int8 form too so logits_from_hidden and the
@@ -64,7 +74,9 @@ def prepare_params(cfg: ModelConfig, params, desc=None):
     head = (out["embed"].T if cfg.tie_embeddings else out.get("head")) \
         if isinstance(out, dict) else None
     if head is not None and not isinstance(head, QuantizedWeights):
-        out = {**out, "head_q": quantize_weights(head, cfg.l2r)}
+        out = {**out, "head_q": quantize_weights(head, cfg.l2r,
+                                                 prestack=prestack,
+                                                 window_pad=prestack)}
     return out
 
 
@@ -232,6 +244,10 @@ def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden,
     qcfg = cfg.l2r or QuantConfig()
     if "head_q" in params:  # the prepare_params load-time head cache
         wq, ws = params["head_q"].q, params["head_q"].scale
+        p = params["head_q"].planes
+        if p is not None and p.matches(qcfg.n_bits, qcfg.log2_radix,
+                                       ndim=2, side="rhs"):
+            wq = p  # cached plane stack: zero per-step operand prep
     else:
         if cfg.tie_embeddings:
             w = params["embed"].T

@@ -319,3 +319,19 @@ def test_batcher_records_prefill_exit_levels(l2r_lm):
     assert sum(stats["prefill_exit_level_hist"]) == stats["prefills"]
     assert 0.0 <= stats["mean_prefill_exit_level"] <= stats["n_levels"] - 1
     assert stats["tokens"] == sum(len(r.exit_levels) for r in reqs_p)
+
+
+def test_dispatcher_early_exit_rejected_where_unhonorable():
+    """early_exit=True is rejected loudly by schedules/backends that have
+    no level loop to stop (it used to be silently dropped): pairs and
+    stacked schedules raise, and the Pallas backends point to the
+    streaming kernel's dynamic level_count scalar."""
+    rng = np.random.default_rng(9)
+    a = _rand_ints(rng, 8, (16, 16))
+    b = _rand_ints(rng, 8, (16, 16))
+    for schedule in ("pairs", "stacked"):
+        with pytest.raises(ValueError, match="streaming"):
+            l2r_gemm(a, b, schedule=schedule, early_exit=True)
+    with pytest.raises(ValueError, match="level_count"):
+        l2r_gemm(a, b, schedule="streaming", backend="pallas-interpret",
+                 early_exit=True)

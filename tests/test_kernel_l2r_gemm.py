@@ -201,3 +201,38 @@ def test_float_wrapper_close_to_matmul():
     ref = x @ w
     rel = np.abs(out - ref).max() / np.abs(ref).max()
     assert rel < 0.02, rel  # int8 W8A8 quantization error
+
+
+def test_resolve_backend_pallas_tpu_off_platform(monkeypatch):
+    """An explicit pallas-tpu on a non-TPU host fails AT RESOLVE TIME
+    with an actionable message (previously: an opaque Mosaic lowering
+    error deep inside the first pallas_call)."""
+    from repro.kernels.l2r_gemm import BACKEND_ENV_VAR, resolve_backend
+
+    # this container has no TPU — both the explicit arg and the env var
+    # must be rejected before any kernel work happens
+    with pytest.raises(RuntimeError, match="pallas-interpret"):
+        resolve_backend("pallas-tpu")
+    monkeypatch.setenv(BACKEND_ENV_VAR, "pallas-tpu")
+    with pytest.raises(RuntimeError, match="pallas-interpret"):
+        resolve_backend()
+    with pytest.raises(RuntimeError, match="TPU"):
+        l2r_gemm(jnp.zeros((8, 8), jnp.int8), jnp.zeros((8, 8), jnp.int8),
+                 backend="pallas-tpu")
+
+
+def test_pad_to_rank_mismatch_raises():
+    """pad_to used to zip-truncate when len(mults) != ndim, silently
+    leaving dims unpadded — now a ValueError both ways."""
+    from repro.kernels.l2r_gemm import pad_to
+
+    x = jnp.zeros((5, 7))
+    out = np.asarray(pad_to(x, (4, 4)))
+    assert out.shape == (8, 8)
+    with pytest.raises(ValueError, match="rank"):
+        pad_to(x, (4,))          # too few: trailing dim would go unpadded
+    with pytest.raises(ValueError, match="rank"):
+        pad_to(x, (4, 4, 4))     # too many: silent zip truncation before
+    # rank-3 works when every dim is named (1 = keep)
+    out = np.asarray(pad_to(jnp.zeros((2, 5, 7)), (1, 4, 4)))
+    assert out.shape == (2, 8, 8)
