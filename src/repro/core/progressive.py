@@ -59,6 +59,7 @@ __all__ = [
     "streaming_matmul_while",
     "l2r_matmul_int_streaming",
     "streaming_argmax",
+    "sharded_walk_axes",
     "decision_state",
     "earliest_decision_level",
 ]
@@ -430,6 +431,7 @@ def streaming_argmax(
     out_dtype=jnp.float32,
     safety: float = 1e-5,
     early_exit: bool = False,
+    mesh=None,
 ):
     """Stream a quantized classifier/LM-head matmul, committing the argmax
     of the *dequantized* scores at the earliest sound level.
@@ -466,7 +468,26 @@ def streaming_argmax(
     stream).  With ``early_exit=False`` the ``logits`` reproduce
     kernels/l2r_gemm ``l2r_matmul_f`` dequantization bit-for-bit (same op
     order), so downstream argmaxes agree with the non-streaming path.
+
+    **Sharded walk.**  When a mesh is installed (``sharding.ctx``, or the
+    explicit ``mesh=`` override) whose ``model`` axis divides N and/or
+    whose data axes divide M, the walk runs as the ``shard_map``ped
+    consensus emitter (:func:`_streaming_argmax_sharded`): the RHS plane
+    stack is vocab-sharded, the LHS stack batch-sharded, every level's
+    decision is reached from per-shard (max, first-index, runner-up)
+    triples reduced across ``model``, and the early-exit ``done_fn``
+    reaches global consensus via a ``psum`` of per-row decided flags —
+    the loop stops at the fleet-wide slowest row.  Prefixes, committed
+    decisions, and exit levels are bit-identical to this single-device
+    path (the sharded accumulator is integer-exact per vocab shard, the
+    decision floats are elementwise, and every cross-shard reduction is
+    an exact max/min/sum of the same values).
     """
+    axes = sharded_walk_axes(_lhs_lead(xq), _rhs_n(wq), mesh)
+    if axes is not None:
+        return _streaming_argmax_sharded(
+            xq, wq, xs, ws, n_bits, log2_radix, levels, bias, out_dtype,
+            safety, early_exit, *axes)
     d = plane_count(n_bits, log2_radix)
     bounds = level_bounds(d, log2_radix, _contract_k(xq), levels)
     n_levels = int(bounds.f32.shape[0])
@@ -512,6 +533,172 @@ def streaming_argmax(
         full = full + bias.astype(jnp.float32)
     tok = jnp.where(done, tok, jnp.argmax(full, axis=-1).astype(jnp.int32))
     return logits, tok, lv
+
+
+# ------------------------------------------------- sharded streaming walk
+def sharded_walk_axes(lead: tuple[int, ...], n: int, mesh=None):
+    """Mesh routing of the streaming walk: ``(mesh, dp_axes, model_axis)``
+    when the sharded consensus emitter applies, ``None`` otherwise.
+
+    ``mesh`` defaults to the installed context mesh (sharding/ctx.py).
+    The walk shards the batch (M) over the data-parallel axes and the
+    vocab (N) over ``model``; an axis that does not divide its dim is
+    dropped (that side replicates — still correct, the other side still
+    shards), and when neither axis is usable (or the mesh is trivial)
+    the caller takes the plain single-device path.  Only 2-D tiles
+    stream sharded (the serving consumers all reshape to (M, K)).
+    """
+    from repro.sharding import ctx
+
+    mesh = mesh if mesh is not None else ctx.get_mesh()
+    if mesh is None or len(lead) != 1:
+        return None
+    m = lead[0]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = ctx.mesh_axis_size(mesh, dp) if dp else 1
+    if dp_size <= 1 or m % dp_size:
+        dp = ()
+    model = "model" if "model" in mesh.axis_names else None
+    if model is not None and (mesh.shape["model"] <= 1
+                              or n % mesh.shape["model"]):
+        model = None
+    if not dp and model is None:
+        return None
+    return mesh, dp, model
+
+
+def _streaming_argmax_sharded(xq, wq, xs, ws, n_bits, log2_radix, levels,
+                              bias, out_dtype, safety, early_exit,
+                              mesh, dp, model_ax):
+    """The ``shard_map``ped consensus level walk behind
+    :func:`streaming_argmax` (see its docstring for routing).
+
+    Layout: the LHS activation stack is batch-sharded over the ``dp``
+    axes, the RHS weight stack (raw or the ``QuantizedWeights.planes``
+    cache) vocab-sharded over ``model``; K — the contraction — is never
+    sharded, so each device's accumulator tile is the integer-exact
+    column/row slice of the single-device accumulator at every level
+    (the f32 fast path is guarded exact, the int32 path is exact
+    arithmetic — neither depends on reduction order).
+
+    Per-level global decision, from per-shard triples reduced over
+    ``model`` (every reduction an exact max/min of identical floats, so
+    decided/argmax/exit-level are bit-identical to the oracle):
+
+      * global top = ``pmax`` of local maxima; first-occurrence index =
+        ``pmin`` over shards of (local first-achiever index, or N);
+      * the top's lower confidence bound comes from the one shard that
+        owns the winning column (``pmax`` of the owner's value, -inf
+        elsewhere); the runner-up upper bound is the ``pmax`` of each
+        shard's max-excluding-the-winner;
+      * decided rows then update tok/lv exactly as the local fold does.
+
+    Early-exit consensus: the fold ``psum``s the per-row decided flags
+    over the data axes (rows are replicated across ``model``; the
+    decision scalars already agree there) and the while loop's
+    ``done_fn`` reads that scalar — every device stops at the SAME
+    level, the fleet-wide slowest row's, which is exactly where the
+    single-device while loop stops for the full batch.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    d = plane_count(n_bits, log2_radix)
+    bounds = level_bounds(d, log2_radix, _contract_k(xq), levels)
+    n_levels = int(bounds.f32.shape[0])
+    m = _lhs_lead(xq)[-1]
+    n_total = _rhs_n(wq)
+    wsr = ws.reshape(1, -1).astype(jnp.float32)
+    xsf = xs.astype(jnp.float32)
+    eps = 8.0 * jnp.finfo(jnp.float32).eps
+    has_bias = bias is not None
+    b_arr = bias.reshape(-1) if has_bias else jnp.zeros((n_total,), jnp.float32)
+    dp_spec = dp if dp else None
+
+    def walk(bf32, xq_s, wq_s, xsf_s, wsr_s, bias_s):
+        m_l = _lhs_lead(xq_s)[-1]
+        n_l = _rhs_n(wq_s)
+        off = (jax.lax.axis_index(model_ax) * n_l if model_ax
+               else jnp.int32(0))
+        col = off + jnp.arange(n_l, dtype=jnp.int32)
+
+        def vmax_all(v):  # exact: max commutes/associates exactly
+            return jax.lax.pmax(v, model_ax) if model_ax else v
+
+        def vmin_all(v):
+            return jax.lax.pmin(v, model_ax) if model_ax else v
+
+        def gmax_first(vals):
+            """(global max, FIRST global index achieving it) — exactly
+            ``jnp.argmax``'s value and tie-break on the unsharded row."""
+            vmax_l = jnp.max(vals, axis=-1)
+            amax_l = jnp.argmax(vals, axis=-1).astype(jnp.int32) + off
+            vmax = vmax_all(vmax_l)
+            cand = jnp.where(vmax_l == vmax, amax_l, jnp.int32(n_total))
+            return vmax, vmin_all(cand)
+
+        def fold(carry, partial, idx):
+            tok, lv, done, _ = carry
+            values = partial.astype(jnp.float32) * xsf_s * wsr_s
+            if has_bias:
+                values = values + bias_s.astype(jnp.float32)[None, :]
+            vmax_abs = vmax_all(jnp.max(jnp.abs(values), axis=-1,
+                                        keepdims=True))
+            bvec = bf32[idx] * xsf_s * wsr_s * (1.0 + safety) + eps * vmax_abs
+            _, gtop = gmax_first(values)
+            own = col[None, :] == gtop[:, None]
+            # decision_state on the sharded row: lb of the owned winner,
+            # ub of everything else — the same single masked entry
+            lb_top = vmax_all(jnp.max(
+                jnp.where(own, values - bvec, -jnp.inf), axis=-1))
+            ub_others = vmax_all(jnp.max(
+                jnp.where(own, -jnp.inf, values + bvec), axis=-1))
+            decided = lb_top > ub_others
+            newly = decided & ~done
+            tok = jnp.where(newly, gtop, tok)
+            lv = jnp.where(newly, idx, lv)
+            done = done | decided
+            # the consensus scalar is only read by the while loop's
+            # done_fn; the fixed scan must not pay a per-level psum for
+            # a flag nobody reads (loop-carried values are not DCE'd)
+            if early_exit:
+                n_done = jnp.sum(done.astype(jnp.int32))
+                if dp:
+                    n_done = jax.lax.psum(n_done, dp)
+                all_done = n_done == m
+            else:
+                all_done = jnp.bool_(False)
+            return tok, lv, done, all_done
+
+        init = (jnp.zeros((m_l,), jnp.int32),
+                jnp.full((m_l,), max(n_levels - 1, 0), jnp.int32),
+                jnp.zeros((m_l,), bool),
+                jnp.bool_(False))
+        if early_exit:
+            acc, (tok, lv, done, _), _ = streaming_matmul_while(
+                xq_s, wq_s, fold, init, lambda c: c[3],
+                n_bits, log2_radix, levels)
+        else:
+            acc, (tok, lv, done, _), _ = streaming_matmul_scan(
+                xq_s, wq_s, fold, init, n_bits, log2_radix, levels)
+        # dequantize + fallback exactly as the single-device path: the
+        # out_dtype round-trip must match bit for bit
+        logits = (acc.astype(jnp.float32) * xsf_s * wsr_s).astype(out_dtype)
+        full = logits.astype(jnp.float32)
+        if has_bias:
+            logits = logits + bias_s.astype(logits.dtype)[None, :]
+            full = full + bias_s.astype(jnp.float32)[None, :]
+        _, fallback = gmax_first(full)
+        tok = jnp.where(done, tok, fallback)
+        return logits, tok, lv
+
+    fn = shard_map(
+        walk, mesh,
+        in_specs=(P(None), P(dp_spec, None), P(None, model_ax),
+                  P(dp_spec, None), P(None, model_ax), P(model_ax)),
+        out_specs=(P(dp_spec, model_ax), P(dp_spec), P(dp_spec)),
+        check_rep=False)
+    return fn(bounds.f32, xq, wq, xsf, wsr, b_arr)
 
 
 def earliest_decision_level(result: ProgressiveResult) -> jax.Array:

@@ -388,7 +388,7 @@ class QuantizedWeights:
 
 @partial(jax.jit, static_argnames=("cfg", "channel_axes", "prestack",
                                    "plane_axis", "window_pad",
-                                   "plane_shifted"))
+                                   "plane_shifted", "shard", "mesh"))
 def quantize_weights(
     w: jax.Array,
     cfg: QuantConfig = QuantConfig(),
@@ -397,6 +397,8 @@ def quantize_weights(
     plane_axis: int | None = None,
     window_pad: bool = False,
     plane_shifted: bool = False,
+    shard: tuple | None = None,
+    mesh=None,
 ) -> QuantizedWeights:
     """Symmetric per-channel weight quantization -> :class:`QuantizedWeights`.
 
@@ -417,18 +419,38 @@ def quantize_weights(
     stores the pre-shifted Pallas/MXU layout, moving that conversion to
     load time — the right choice when the deployment backend is
     ``pallas-tpu`` (jnp consumers then convert instead, equally exact).
+
+    ``shard`` + ``mesh`` pin the cache's sharding at build time: a
+    PartitionSpec-style tuple over the RAW weight's dims (e.g. ``(None,
+    "model")`` for an LM head (K, V) — the vocab shard of the sharded
+    serving path), applied to ``q``, ``scale``, and the plane stack.
+    Stacking happens along the contraction axis, so the raw-weight spec
+    carries over to the stack unchanged (the stacked axis keeps its
+    entry; non-divisible dims replicate via the hint guard).  Both are
+    STATIC jit args — the trace cache keys on the mesh, so building the
+    same weight under a different (or no) mesh never reuses a stale
+    sharded trace.  Sharding never changes values: every consumer is
+    bit-identical to the replicated cache.
     """
+    from repro.sharding.ctx import constrain
+
     wf = w.astype(jnp.float32)
     keep = {a % w.ndim for a in channel_axes}
     reduce_axes = tuple(a for a in range(w.ndim) if a not in keep)
     amax = jnp.max(jnp.abs(wf), axis=reduce_axes, keepdims=True)
     q, scale = _symmetric_quant(wf, amax, cfg)
+    if shard is not None and mesh is not None:
+        q = constrain(q, mesh, *shard)
+        scale = constrain(scale, mesh, *shard)
     planes = None
     if prestack:
         planes = PlaneOperands.prepare_rhs(
             q, cfg.n_bits, cfg.log2_radix,
             axis=0 if plane_axis is None else plane_axis,
             shifted=plane_shifted, window_pad=window_pad)
+        if shard is not None and mesh is not None:
+            planes = dataclasses.replace(
+                planes, stack=constrain(planes.stack, mesh, *shard))
     return QuantizedWeights(q, scale, planes)
 
 

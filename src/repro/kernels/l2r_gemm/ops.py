@@ -92,14 +92,25 @@ def resolve_backend(backend: str | None = None) -> str:
     An explicit ``pallas-tpu`` on a host whose jax platform is not TPU is
     rejected HERE, with a clear message — previously the mismatch
     surfaced as an opaque Mosaic lowering error deep inside the first
-    ``pallas_call``.
+    ``pallas_call``.  A typo'd ``$REPRO_L2R_BACKEND`` is rejected here
+    too, naming the env var and the valid backends — resolve time is the
+    ONE place a bad env value can fail early instead of surfacing as an
+    arbitrary downstream error.
     """
-    chosen = backend or os.environ.get(BACKEND_ENV_VAR, "").strip() or "auto"
+    source = "backend argument"
+    chosen = backend
+    if not chosen:
+        env = os.environ.get(BACKEND_ENV_VAR, "").strip()
+        if env:
+            chosen, source = env, f"${BACKEND_ENV_VAR} env var"
+    chosen = chosen or "auto"
     if chosen == "auto":
         return "pallas-tpu" if jax.default_backend() == "tpu" else "jnp"
     if chosen not in BACKENDS:
         raise ValueError(
-            f"unknown L2R backend {chosen!r}; expected one of {BACKENDS} or 'auto'")
+            f"unknown L2R backend {chosen!r} (from the {source}); valid "
+            f"backends: {', '.join(BACKENDS)}, or 'auto' for the platform "
+            f"default")
     if chosen == "pallas-tpu" and jax.default_backend() != "tpu":
         raise RuntimeError(
             f"backend='pallas-tpu' requires a TPU host, but jax is running "

@@ -4,7 +4,13 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "install_local_mesh",
+           "VIRTUAL_DEVICES_FLAG", "virtual_device_env"]
+
+# Host-platform virtual devices: the ONE way to get a multi-device CPU
+# process (must be set before jax initializes — subprocess tests, the
+# sharded bench rows, and the virtual-8-device CI job all use it).
+VIRTUAL_DEVICES_FLAG = "--xla_force_host_platform_device_count={n}"
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,3 +24,32 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU smoke)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def install_local_mesh(data: int = 1, model: int = 1):
+    """Build a local (data, model) mesh AND install it as the module
+    mesh context (sharding/ctx.py) so the whole serving stack — the
+    sharded consensus head walk, the weight-cache plane-stack sharding,
+    the batcher's slot-state placement — routes through it.  Returns the
+    mesh; ``sharding.ctx.set_mesh(None)`` uninstalls."""
+    from repro.sharding import ctx
+
+    mesh = make_local_mesh(data, model)
+    ctx.set_mesh(mesh)
+    return mesh
+
+
+def virtual_device_env(n: int, env: dict | None = None) -> dict:
+    """A copy of ``env`` (default os.environ) whose XLA_FLAGS force ``n``
+    host-platform virtual devices — for SUBPROCESSES that need a
+    multi-device CPU (the flag is read once at jax init, so the current
+    process cannot apply it to itself).  Existing XLA_FLAGS are
+    preserved; an existing device-count flag is overridden."""
+    import os
+
+    out = dict(os.environ if env is None else env)
+    flags = [f for f in out.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(VIRTUAL_DEVICES_FLAG.format(n=n))
+    out["XLA_FLAGS"] = " ".join(flags)
+    return out

@@ -51,7 +51,7 @@ def vgg16_build(n_classes: int = 1000, in_channels: int = 3) -> dict:
 
 
 def vgg16_quantize_weights(params: dict, cfg: QuantConfig = QuantConfig(),
-                           prestack: bool = True
+                           prestack: bool = True, mesh=None
                            ) -> dict[str, QuantizedWeights]:
     """The L2R weight cache: every matmul/conv weight -> int8 + per-
     out-channel scale, built exactly once at model load.
@@ -62,11 +62,26 @@ def vgg16_quantize_weights(params: dict, cfg: QuantConfig = QuantConfig(),
     streamed fc8 head consume pre-extracted planes: weight planes are
     extracted exactly once per process instead of once per call.  Costs
     D x the int8 weight bytes; pass False to keep extract-per-call.
+
+    ``mesh`` (default: the installed ``sharding.ctx`` mesh) shards the
+    fc8 head cache — int8 weight, scales, window-padded plane stack —
+    over the ``model`` axis on the class dim, the layout the
+    ``shard_map``ped consensus stream of
+    :func:`vgg16_classify_progressive` consumes directly.  The trunk
+    caches stay replicated (the trunk runs exactly; only the streamed
+    head is vocab-sharded).  Values are unchanged either way.
     """
+    if mesh is None:
+        from repro.sharding import ctx
+
+        mesh = ctx.get_mesh()
     return {name: quantize_weights(
                 p["w"], cfg, prestack=prestack,
                 plane_axis=-2 if len(p["w"].shape) == 4 else 0,
-                window_pad=prestack and name == "fc8")
+                window_pad=prestack and name == "fc8",
+                shard=(None, "model") if name == "fc8" and mesh is not None
+                else None,
+                mesh=mesh if name == "fc8" else None)
             for name, p in params.items()}
 
 
@@ -145,6 +160,7 @@ def vgg16_classify_progressive(
     weights_q: dict[str, QuantizedWeights] | None = None,
     backend: str | None = None,
     early_exit: bool = False,
+    mesh=None,
 ):
     """Classification with online early exit on the fc8 logit stream.
 
@@ -164,6 +180,13 @@ def vgg16_classify_progressive(
 
     Returns ``(pred (B,) int32, exit_level (B,) int32, logits (B, C))``;
     exit_level counts MSDF levels consumed (2D-2 = needed everything).
+
+    When a mesh is installed (sharding/ctx.py, or the explicit ``mesh=``
+    override), the head stream runs as the ``shard_map``ped consensus
+    walk — images batch-sharded over the data axes, fc8 classes over
+    ``model``, early exit at the fleet-wide slowest image — with
+    predictions, exit levels, and logits bit-identical to the
+    single-device stream.
     """
     x, weights_q = _vgg16_trunk(params, images, l2r, None, weights_q, backend)
     w_q = weights_q["fc8"]
@@ -178,5 +201,6 @@ def vgg16_classify_progressive(
                                               ndim=2, side="rhs")) else w_q.q
     logits, pred, exit_level = streaming_argmax(
         xq, wq_in, xs, w_q.scale, l2r.n_bits, l2r.log2_radix,
-        bias=params["fc8"]["b"], out_dtype=x.dtype, early_exit=early_exit)
+        bias=params["fc8"]["b"], out_dtype=x.dtype, early_exit=early_exit,
+        mesh=mesh)
     return pred, exit_level, logits

@@ -23,10 +23,11 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_lm_state
-from .engine import make_decode_step, make_prefill_step
+from .engine import _bspec, make_decode_step, make_prefill_step, state_specs
 
 __all__ = ["Request", "ContinuousBatcher", "infer_batch_axes",
            "state_batch_axes"]
@@ -125,24 +126,93 @@ def _pad_value(b):
 class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  max_len: int = 128, cache_dtype=jnp.float32,
-                 progressive: bool = False, early_exit: bool = False):
+                 progressive: bool = False, early_exit: bool = False,
+                 mesh=None, state_sharding: str = "replicated"):
+        """``mesh`` (default: the installed ``sharding.ctx`` mesh) makes
+        the engine mesh-aware: the progressive head stream runs the
+        shard_mapped consensus walk (vocab over "model", slot rows over
+        the data axes, early exit at the fleet-wide slowest slot) and
+        the slot state is placed on the mesh per ``state_sharding``:
+
+          * ``"replicated"`` (default) — the backbone state replicates;
+            only the head walk is sharded (it batch-shards its rows
+            internally, and integer arithmetic is immune to the
+            partitioning).  Decode is bit-identical to the unmeshed
+            engine end to end: tokens, exit levels, stats all match
+            exactly.
+          * ``"batch"`` — every state leaf shards its BATCH axis (the
+            slot axis, over the data axes).  Scales slot memory across
+            data; numerically equivalent but NOT bit-pinned: under
+            combined data x model shardings GSPMD may repartition
+            interior float contractions of the backbone (observed: the
+            attention o-projection over the hint-sharded flattened
+            heads axis), which reassociates float sums — hidden states,
+            and hence MARGINAL early-exit levels, can move by a bit.
+          * ``"specs"`` — the full ``engine.state_specs`` policy (kv
+            heads / head_dim / SSM channels over "model"): the
+            memory-scaling layout for caches that do not fit one
+            device.  Partitioning attention's head_dim reassociates its
+            float contraction directly — same numerics caveat as
+            ``"batch"``, strictly more sharding.
+
+        In every mode the streaming walk itself stays bit-exact for
+        whatever hidden states it is fed (committed tokens always pass
+        the same decision machinery).
+        """
+        from repro.sharding import ctx
+
+        assert state_sharding in ("replicated", "batch", "specs"), \
+            state_sharding
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.progressive = progressive
+        self.mesh = mesh if mesh is not None else ctx.get_mesh()
         self.state = init_lm_state(cfg, n_slots, max_len, cache_dtype)
         # explicit per-leaf batch axes for slot splicing (derived from the
         # state pytree structure, never from shape coincidences)
         self._axes = state_batch_axes(cfg, max_len, cache_dtype)
+        if self.mesh is not None:
+            if state_sharding == "specs":
+                spec_tree = state_specs(cfg, self.mesh, n_slots, max_len)
+                self._state_sh = jax.tree.map(
+                    lambda s: NamedSharding(self.mesh, s), spec_tree,
+                    is_leaf=lambda x: isinstance(x, P))
+            elif state_sharding == "batch":
+                b = _bspec(self.mesh, n_slots)
+                self._state_sh = jax.tree.map(
+                    lambda leaf, ax: NamedSharding(self.mesh, P(*(
+                        b if i == ax else None for i in range(leaf.ndim)))),
+                    self.state, self._axes)
+            else:  # replicated: committed to the mesh, every leaf whole
+                self._state_sh = jax.tree.map(
+                    lambda leaf: NamedSharding(self.mesh, P()), self.state)
+            self.state = jax.device_put(self.state, self._state_sh)
         self.slot_req: list[Request | None] = [None] * n_slots
         self.cur_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        if self.mesh is not None:
+            # replicated mode keeps the tokens whole too: a data-sharded
+            # token input would batch-shard every backbone activation
+            # behind it, re-opening the data x model repartitioning the
+            # mode exists to avoid (the head walk row-shards internally)
+            tok_spec = (P(None, None) if state_sharding == "replicated"
+                        else P(_bspec(self.mesh, n_slots), None))
+            self.cur_tok = jax.device_put(
+                self.cur_tok, NamedSharding(self.mesh, tok_spec))
         self.queue: list[Request] = []
+        # replicated backbone -> trace the steps with the interior
+        # sharding hints scoped off (they would pin interior tensors of
+        # a replicated computation onto model axes and float-reassociate
+        # backbone contractions; see ctx.hints_disabled)
+        hints = state_sharding != "replicated"
         self._decode = jax.jit(make_decode_step(cfg, progressive=progressive,
-                                                early_exit=early_exit))
+                                                early_exit=early_exit,
+                                                backbone_hints=hints,
+                                                mesh=self.mesh))
         self._prefill1 = jax.jit(make_prefill_step(
             cfg, max_len, cache_dtype, progressive=progressive,
-            early_exit=early_exit))
+            early_exit=early_exit, backbone_hints=hints, mesh=self.mesh))
         self.steps = 0
         # saved-levels accounting (progressive mode): histograms over the
         # MSDF exit level of every decoded token across all requests AND
@@ -177,6 +247,10 @@ class ContinuousBatcher:
                 first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
             # splice the single-sequence state into the live batch state
             self.state = _splice(self.state, st1, slot, self._axes)
+            if self.mesh is not None:
+                # the eager splice lets the output sharding drift toward
+                # the (replicated) donor; re-pin the slot state layout
+                self.state = jax.device_put(self.state, self._state_sh)
             self.cur_tok = self.cur_tok.at[slot, 0].set(first)
             req.output.append(int(first))
             self.slot_req[slot] = req
@@ -231,27 +305,33 @@ class ContinuousBatcher:
         remaining n_levels-1-l levels of head compute for those tokens),
         and prefill_exit_level_hist[l] streamed PREFILL heads (one per
         admitted request — the first generated token, committed from the
-        last prompt position's stream)."""
+        last prompt position's stream).
+
+        The progressive-mode schema is STABLE: ``n_levels``, the counts,
+        both (zero-filled) histograms, and the means are present from
+        construction on — they used to appear only once the first
+        token/prefill landed, so monitoring consumers scraping stats()
+        saw the dict change shape mid-run.  Means over zero events are
+        reported as 0.0.
+        """
         out = {"steps": self.steps, "progressive": self.progressive}
-        if self.progressive and self.exit_hist.sum():
-            total = int(self.exit_hist.sum())
+        if self.progressive:
             levels = np.arange(self.n_levels)
-            mean_exit = float((self.exit_hist * levels).sum() / total)
+            total = int(self.exit_hist.sum())
+            mean_exit = (float((self.exit_hist * levels).sum() / total)
+                         if total else 0.0)
+            total_p = int(self.prefill_exit_hist.sum())
             out.update(
                 n_levels=self.n_levels,
                 tokens=total,
                 exit_level_hist=self.exit_hist.tolist(),
                 mean_exit_level=mean_exit,
-                mean_levels_saved=float(self.n_levels - 1 - mean_exit),
-            )
-        if self.progressive and self.prefill_exit_hist.sum():
-            total_p = int(self.prefill_exit_hist.sum())
-            levels = np.arange(self.n_levels)
-            out.update(
-                n_levels=self.n_levels,
+                mean_levels_saved=(float(self.n_levels - 1 - mean_exit)
+                                   if total else 0.0),
                 prefills=total_p,
                 prefill_exit_level_hist=self.prefill_exit_hist.tolist(),
-                mean_prefill_exit_level=float(
-                    (self.prefill_exit_hist * levels).sum() / total_p),
+                mean_prefill_exit_level=(
+                    float((self.prefill_exit_hist * levels).sum() / total_p)
+                    if total_p else 0.0),
             )
         return out

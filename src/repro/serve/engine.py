@@ -33,7 +33,8 @@ __all__ = ["prepare_params", "make_prefill_step", "make_decode_step",
 
 
 # ------------------------------------------------------- weight preparation
-def prepare_params(cfg: ModelConfig, params, desc=None, prestack: bool = True):
+def prepare_params(cfg: ModelConfig, params, desc=None, prestack: bool = True,
+                   mesh: Mesh | None = None):
     """Load-time serving weights: build the L2R weight cache ONCE.
 
     When ``cfg.l2r`` is set, every eligible matmul weight is converted to
@@ -53,6 +54,15 @@ def prepare_params(cfg: ModelConfig, params, desc=None, prestack: bool = True):
     head 2D-1 x) the int8 weight bytes; pass False for the
     extract-per-call layout.
 
+    ``mesh`` (default: the installed ``sharding.ctx`` mesh) pins the
+    head cache's sharding at build time: the (K, V) int8 head, its
+    scales, and the window-padded plane stack are partitioned over the
+    ``model`` axis on the vocab dim — the layout the ``shard_map``ped
+    consensus head stream (core/progressive.py) consumes without any
+    per-step resharding.  Backbone weights stay replicated (activations
+    are batch-sharded instead; the head is the one vocab-axis matmul of
+    every decode step).  Sharding never changes values.
+
     ``desc`` is the Param descriptor tree (for eligibility); defaults to
     rebuilding it from ``cfg`` for LM families.
     """
@@ -60,7 +70,10 @@ def prepare_params(cfg: ModelConfig, params, desc=None, prestack: bool = True):
         return params
     from repro.core.quant import quantize_weights
     from repro.models.common import quantize_tree
+    from repro.sharding import ctx
 
+    if mesh is None:
+        mesh = ctx.get_mesh()
     if desc is None:
         assert cfg.family != "encdec", "pass the encdec desc tree explicitly"
         from repro.models.transformer import lm_build
@@ -74,9 +87,9 @@ def prepare_params(cfg: ModelConfig, params, desc=None, prestack: bool = True):
     head = (out["embed"].T if cfg.tie_embeddings else out.get("head")) \
         if isinstance(out, dict) else None
     if head is not None and not isinstance(head, QuantizedWeights):
-        out = {**out, "head_q": quantize_weights(head, cfg.l2r,
-                                                 prestack=prestack,
-                                                 window_pad=prestack)}
+        out = {**out, "head_q": quantize_weights(
+            head, cfg.l2r, prestack=prestack, window_pad=prestack,
+            shard=(None, "model") if mesh is not None else None, mesh=mesh)}
     return out
 
 
@@ -177,7 +190,9 @@ def abstract_state(cfg: ModelConfig, batch: int, max_len: int,
 def make_prefill_step(cfg: ModelConfig, max_len: int,
                       cache_dtype=jnp.bfloat16,
                       progressive: bool = False,
-                      early_exit: bool = False) -> Callable:
+                      early_exit: bool = False,
+                      backbone_hints: bool = True,
+                      mesh: Mesh | None = None) -> Callable:
     """(params, batch) -> (state, last_token_logits).
 
     ``progressive=True`` (LM families, requires ``cfg.l2r``) is
@@ -191,6 +206,17 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
     ``argmax(logits_from_hidden(...))`` of the one-shot prefill.
     ``early_exit`` stops the head's level loop once every sequence in the
     prefill batch has decided (see make_decode_step).
+
+    ``backbone_hints=False`` traces the step with the interior sharding
+    hints scoped off (sharding/ctx.py:hints_disabled): the right setting
+    whenever the backbone state is REPLICATED on the mesh — the hints
+    would pin interior tensors of a replicated computation onto model
+    axes, making GSPMD repartition (and float-reassociate) backbone
+    contractions.  The streamed head still routes through the sharded
+    consensus walk; with the hints off the whole step is bit-identical
+    to the unmeshed trace.  ``mesh`` overrides the installed context
+    mesh for the head stream (callers holding an explicit mesh — the
+    batcher — must not depend on the module global being set).
     """
     assert progressive or not early_exit, \
         "early_exit stops the streamed head: requires progressive=True"
@@ -200,6 +226,16 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
             "progressive prefill streams the quantized head: set cfg.l2r"
 
     def prefill(params, batch):
+        from contextlib import ExitStack
+
+        from repro.sharding import ctx
+
+        with ExitStack() as stack:
+            if not backbone_hints:
+                stack.enter_context(ctx.hints_disabled())
+            return _prefill_body(params, batch)
+
+    def _prefill_body(params, batch):
         if cfg.family == "encdec":
             state = init_encdec_state(cfg, batch["tokens"].shape[0], max_len,
                                       cache_dtype)
@@ -217,7 +253,8 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
                 mode="prefill", state=state)
         if progressive:
             logits, tok, lv = progressive_logits_from_hidden(
-                cfg, params, hidden[:, -1:], early_exit=early_exit)
+                cfg, params, hidden[:, -1:], early_exit=early_exit,
+                mesh=mesh)
             return state, logits, tok.astype(jnp.int32), lv
         logits = logits_from_hidden(cfg, params, hidden[:, -1:])
         return state, logits
@@ -226,7 +263,8 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
 
 
 def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden,
-                                   early_exit: bool = False):
+                                   early_exit: bool = False,
+                                   mesh: Mesh | None = None):
     """Stream the LM head level-by-level, committing each row's token at
     its earliest sound MSDF level.
 
@@ -240,6 +278,12 @@ def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden,
     returned logits are then the dequantized prefix at the exit level
     (core/progressive.py:streaming_argmax).  Returns
     ``(logits (..., V), tok (...,) int32, exit_level (...,) int32)``.
+
+    When a mesh is installed (sharding/ctx.py), the stream runs as the
+    ``shard_map``ped consensus walk — batch rows over the data axes,
+    vocab shards over ``model``, early exit at the fleet-wide slowest
+    row — with bit-identical logits, tokens, and exit levels
+    (core/progressive.py:streaming_argmax, sharded walk).
     """
     qcfg = cfg.l2r or QuantConfig()
     if "head_q" in params:  # the prepare_params load-time head cache
@@ -261,12 +305,14 @@ def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden,
                                        qcfg.log2_radix,
                                        levels=cfg.l2r_levels,
                                        out_dtype=hidden.dtype,
-                                       early_exit=early_exit)
+                                       early_exit=early_exit, mesh=mesh)
     return (logits.reshape(*lead, -1), tok.reshape(lead), lv.reshape(lead))
 
 
 def make_decode_step(cfg: ModelConfig, progressive: bool = False,
-                     early_exit: bool = False) -> Callable:
+                     early_exit: bool = False,
+                     backbone_hints: bool = True,
+                     mesh: Mesh | None = None) -> Callable:
     """(params, state, tokens (B,1)) -> (state, next_tokens (B,1), logits).
 
     ``progressive=True`` (LM families, requires ``cfg.l2r``) streams the
@@ -280,6 +326,10 @@ def make_decode_step(cfg: ModelConfig, progressive: bool = False,
     skipped levels become skipped wall-clock on this host, not just an
     accounting entry, at the price of exit-level logit values for the
     non-argmax entries (tokens and exit levels are unchanged).
+    ``backbone_hints=False`` scopes the interior sharding hints off
+    during tracing — the replicated-backbone mesh setting — and ``mesh``
+    overrides the context mesh for the head stream; see
+    :func:`make_prefill_step`.
     """
     assert progressive or not early_exit, \
         "early_exit stops the streamed head: requires progressive=True"
@@ -289,6 +339,16 @@ def make_decode_step(cfg: ModelConfig, progressive: bool = False,
             "progressive decode streams the quantized head: set cfg.l2r"
 
     def decode(params, state, tokens, rope_positions=None):
+        from contextlib import ExitStack
+
+        from repro.sharding import ctx
+
+        with ExitStack() as stack:
+            if not backbone_hints:
+                stack.enter_context(ctx.hints_disabled())
+            return _decode_body(params, state, tokens, rope_positions)
+
+    def _decode_body(params, state, tokens, rope_positions=None):
         if cfg.family == "encdec":
             hidden, state, _ = encdec_forward(
                 cfg, params, tokens=tokens, mode="decode", state=state)
@@ -298,7 +358,7 @@ def make_decode_step(cfg: ModelConfig, progressive: bool = False,
                 mode="decode", state=state)
         if progressive:
             logits, tok, lv = progressive_logits_from_hidden(
-                cfg, params, hidden, early_exit=early_exit)
+                cfg, params, hidden, early_exit=early_exit, mesh=mesh)
             return state, tok.astype(jnp.int32), logits, lv
         logits = logits_from_hidden(cfg, params, hidden)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -6,10 +6,19 @@ few interior tensors (MoE dispatch buffers, router state) propagate badly
 When a mesh is installed here, `hint(x, *spec)` pins those tensors;
 without one it is an identity, so single-device tests and the baseline
 dry-run sweeps are unaffected.
+
+The installed mesh is also what routes the L2R serving stack onto its
+sharded paths: `core/progressive.py:streaming_argmax` switches to the
+``shard_map``ped consensus level walk, `quantize_weights(..., shard=)`
+pins the cached weight plane stacks, and `ContinuousBatcher` places its
+slot state with `serve.engine.state_specs`.  A mesh leaked from one test
+silently changes all of that in later tests, so the test suite restores
+``set_mesh(None)`` after every test (tests/conftest.py autouse fixture).
 """
 
 from __future__ import annotations
 
+import contextlib
 import math
 from typing import Any
 
@@ -17,8 +26,10 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _MESH: Mesh | None = None
+_HINTS_ENABLED: bool = True
 
-__all__ = ["set_mesh", "get_mesh", "hint", "hint_dp"]
+__all__ = ["set_mesh", "get_mesh", "hint", "hint_dp", "hint_uneven",
+           "hints_disabled", "mesh_axis_size", "safe_axes", "constrain"]
 
 
 def set_mesh(mesh: Mesh | None):
@@ -30,33 +41,98 @@ def get_mesh() -> Mesh | None:
     return _MESH
 
 
-def _axis_size(axis) -> int:
+@contextlib.contextmanager
+def hints_disabled():
+    """Trace-scoped off-switch for the interior hints: inside this
+    context `hint` / `hint_dp` / `hint_uneven` are identities even with
+    a mesh installed, while `get_mesh()` (and everything routed off it —
+    the sharded consensus head walk, the weight-cache sharding) still
+    sees the mesh.
+
+    Why it exists: the interior hints were built for the GSPMD
+    training/MoE paths, where activations are genuinely distributed.  A
+    REPLICATED backbone (the progressive serving default) gains nothing
+    from them — worse, pinning interior tensors of a replicated
+    computation onto model axes makes GSPMD repartition float
+    contractions (observed: the attention o-projection over the
+    hint-sharded flattened-heads axis), which reassociates sums and
+    breaks bit-parity with the unmeshed trace.  The serving step
+    factories trace the backbone under this context when the state is
+    replicated (engine.make_prefill_step / make_decode_step
+    ``backbone_hints=False``)."""
+    global _HINTS_ENABLED
+    prev = _HINTS_ENABLED
+    _HINTS_ENABLED = False
+    try:
+        yield
+    finally:
+        _HINTS_ENABLED = prev
+
+
+def mesh_axis_size(mesh: Mesh, axis) -> int:
+    """Total size of a mesh axis entry (name, tuple of names, or None)."""
     if axis is None:
         return 1
     if isinstance(axis, (tuple, list)):
-        return math.prod(_MESH.shape[a] for a in axis)
-    return _MESH.shape[axis]
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def _check_spec_rank(x: jax.Array, spec: tuple, fn: str) -> None:
+    """A spec longer than the operand rank used to be silently
+    zip-truncated (the trailing entries were dropped with no error — the
+    same bug class as the `pad_to` rank fix): raise with the shapes."""
+    if len(spec) > x.ndim:
+        raise ValueError(
+            f"{fn}: spec {spec!r} has {len(spec)} entries but x has rank "
+            f"{x.ndim} (shape {x.shape}); a spec must not name more dims "
+            f"than the operand has — extra entries used to be silently "
+            f"dropped")
+
+
+def safe_axes(mesh: Mesh, shape: tuple[int, ...], spec: tuple) -> tuple:
+    """Per-dim mesh axes of ``spec`` with unknown axis names dropped and
+    non-divisible dims replicated — the pure (explicit-mesh) core of
+    :func:`hint`, shared by the weight-cache sharding in core/quant.py
+    (which must not read the module global: its jit cache keys on the
+    mesh argument instead)."""
+    fixed = []
+    for dim, ax in zip(shape, spec + (None,) * (len(shape) - len(spec))):
+        if ax is not None and isinstance(ax, (tuple, list)):
+            ax = tuple(a for a in ax if a in mesh.axis_names) or None
+        if ax is not None and not isinstance(ax, (tuple, list)) \
+                and ax not in mesh.axis_names:
+            ax = None
+        fixed.append(ax if ax is None or dim % mesh_axis_size(mesh, ax) == 0
+                     else None)
+    return tuple(fixed)
+
+
+def constrain(x: jax.Array, mesh: Mesh | None, *spec) -> jax.Array:
+    """with_sharding_constraint against an EXPLICIT mesh (identity when
+    ``mesh`` is None), with the divisibility/unknown-axis guards of
+    :func:`hint`.  Callers whose jit caches must key on the mesh (the
+    load-time weight caches) use this instead of the module context."""
+    if mesh is None:
+        return x
+    _check_spec_rank(x, spec, "constrain")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*safe_axes(mesh, x.shape, spec))))
 
 
 def hint(x: jax.Array, *spec) -> jax.Array:
-    """with_sharding_constraint(x, P(*spec)) when a mesh is installed;
-    non-divisible dims are silently replicated."""
-    if _MESH is None:
+    """with_sharding_constraint(x, P(*spec)) when a mesh is installed
+    (and hints are not scoped off — see :func:`hints_disabled`);
+    non-divisible dims are silently replicated.  A spec longer than the
+    operand rank raises (it used to be silently zip-truncated)."""
+    if _MESH is None or not _HINTS_ENABLED:
         return x
-    fixed = []
-    for dim, ax in zip(x.shape, spec + (None,) * (len(x.shape) - len(spec))):
-        if ax is not None and isinstance(ax, (tuple, list)):
-            ax = tuple(a for a in ax if a in _MESH.axis_names) or None
-        if ax is not None and not isinstance(ax, (tuple, list)) \
-                and ax not in _MESH.axis_names:
-            ax = None
-        fixed.append(ax if ax is None or dim % _axis_size(ax) == 0 else None)
-    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*fixed)))
+    return constrain(x, _MESH, *spec)
 
 
 def hint_dp(x: jax.Array) -> jax.Array:
     """Shard dim 0 over the data-parallel axes."""
-    if _MESH is None:
+    if _MESH is None or not _HINTS_ENABLED:
         return x
     dp = tuple(a for a in ("pod", "data") if a in _MESH.axis_names)
     return hint(x, dp)
@@ -65,7 +141,9 @@ def hint_dp(x: jax.Array) -> jax.Array:
 def hint_uneven(x: jax.Array, *spec) -> jax.Array:
     """with_sharding_constraint WITHOUT the divisibility guard: GSPMD
     pads uneven tiles (e.g. 10 KV heads over a 16-way axis).  Used to
-    head-shard attention where head counts do not divide the mesh."""
-    if _MESH is None:
+    head-shard attention where head counts do not divide the mesh.  The
+    rank check still applies — an overlong spec is a bug, not padding."""
+    if _MESH is None or not _HINTS_ENABLED:
         return x
+    _check_spec_rank(x, spec, "hint_uneven")
     return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*spec)))

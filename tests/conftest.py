@@ -16,3 +16,17 @@ def pytest_collection_modifyitems(items):
     for item in items:
         if item.get_closest_marker("slow") is None:
             item.add_marker(pytest.mark.tier1)
+
+
+@pytest.fixture(autouse=True)
+def _mesh_context_hygiene():
+    """Restore sharding.ctx.set_mesh(None) after EVERY test: an installed
+    mesh silently changes hint() from identity to a sharding constraint
+    AND routes the whole progressive serving stack (streaming_argmax,
+    prepare_params, ContinuousBatcher) onto the sharded paths — a mesh
+    leaked from one test would change the behavior of every test after
+    it."""
+    yield
+    from repro.sharding import ctx
+
+    ctx.set_mesh(None)
