@@ -38,6 +38,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                   before timing; on one shared CPU the "scaling" number
                   measures partitioning overhead, not parallel speedup —
                   the real-accelerator row is a deployment follow-up.
+  * serving_*   — the gateway under synthetic Poisson traffic (bucketed
+                  AOT prefill, donated decode state, async emit):
+                  tokens/s + p50/p99 TTFT and per-token latency, early
+                  exit on vs off, output asserted bit-identical to the
+                  plain batcher; rows land in BENCH_serving.json.
 
     PYTHONPATH=src python -m benchmarks.run
 """
@@ -739,6 +744,124 @@ def progressive_sharded_bench(rows: list):
     rows.extend(new_rows)
 
 
+def serving_bench(json_path: str | None = None):
+    """Gateway serving under synthetic Poisson traffic -> serving_* rows
+    + BENCH_serving.json.
+
+    The smoke LM serves a mixed-prompt-length request trace through
+    `ServingGateway` (bucketed AOT prefill, donated decode state, async
+    emit) with the Poisson arrival process replayed in REAL time
+    (`run(realtime=True)` honors the pre-stamped `t_arrival` instants),
+    so TTFT includes genuine queueing delay.  Measured per mode:
+    tokens/s and p50/p99 time-to-first-token / per-output-token
+    latency, with MSDF early exit ON vs OFF — the paper's saved
+    significance levels showing up as saved fleet latency.  Before any
+    timing, the gateway's output streams are asserted bit-identical to
+    the plain `ContinuousBatcher` serving the same request set (both
+    early-exit modes commit identical tokens by construction).
+    CHECK_MODE trims requests, slots, and generation lengths.
+    """
+    import dataclasses as _dc
+    import json
+    import time
+
+    from repro.configs import get_smoke
+    from repro.core.quant import QuantConfig
+    from repro.models.common import materialize
+    from repro.models.transformer import lm_build
+    from repro.serve import ContinuousBatcher, Request, ServingGateway
+    from repro.serve.engine import prepare_params
+
+    cfg = _dc.replace(get_smoke("smollm-135m"), l2r=QuantConfig())
+    params = prepare_params(cfg, materialize(lm_build(cfg),
+                                             jax.random.PRNGKey(0)))
+    if CHECK_MODE:
+        n_req, n_slots, max_len, max_new, group = 6, 2, 32, 4, 2
+        mean_gap = 0.005
+    else:
+        n_req, n_slots, max_len, max_new, group = 48, 8, 64, 16, 4
+        mean_gap = 0.02
+    rng = np.random.default_rng(7)
+    lens = rng.integers(3, max_len - max_new, n_req)  # spans the buckets
+    prompts = [rng.integers(0, cfg.vocab, (int(L),)).astype(np.int32)
+               for L in lens]
+    gaps = rng.exponential(mean_gap, n_req)  # one trace, replayed per mode
+    offsets = np.cumsum(gaps)
+
+    def make_reqs():
+        return [Request(uid=i, prompt=p, max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+
+    # bit-parity reference: the plain batcher, same request set
+    ref = make_reqs()
+    eng = ContinuousBatcher(cfg, params, n_slots=n_slots, max_len=max_len,
+                            progressive=True, early_exit=True)
+    for r in ref:
+        eng.submit(r)
+    eng.run(max_steps=100_000)
+
+    rows = []
+    for ee in (True, False):
+        reqs = make_reqs()
+        gw = ServingGateway(cfg, params, n_slots=n_slots, max_len=max_len,
+                            progressive=True, early_exit=ee,
+                            prefill_group=group)
+        # stamp arrivals AFTER construction: AOT warmup is startup cost,
+        # not queueing delay
+        t0 = time.perf_counter() + 0.01
+        for r, dt in zip(reqs, offsets):
+            r.t_arrival = t0 + float(dt)
+            gw.submit(r)
+        gw.run(realtime=True)
+        gw.close()
+        st = gw.stats()
+        for a, b in zip(ref, reqs):
+            assert a.output == b.output, \
+                ("gateway/batcher token divergence", ee, a.uid)
+        mode = "on" if ee else "off"
+        emit(f"serving_gateway_early_exit_{mode}",
+             st["tpot_p50_s"] * 1e6,
+             f"tok_s={st['tokens_per_s']:.1f} "
+             f"ttft_p50_ms={st['ttft_p50_s'] * 1e3:.1f} "
+             f"ttft_p99_ms={st['ttft_p99_s'] * 1e3:.1f} "
+             f"tpot_p99_ms={st['tpot_p99_s'] * 1e3:.1f} "
+             f"reqs={n_req} slots={n_slots} "
+             f"mean_exit={st['mean_exit_level']:.2f}/{st['n_levels'] - 1}")
+        rows.append({
+            "name": f"poisson_early_exit_{mode}",
+            "early_exit": ee,
+            "requests": n_req, "n_slots": n_slots, "max_len": max_len,
+            "max_new_tokens": max_new, "prefill_group": group,
+            "buckets": st["buckets"],
+            "prompt_len_min": int(lens.min()),
+            "prompt_len_max": int(lens.max()),
+            "mean_interarrival_s": mean_gap,
+            "tokens": st["tokens"], "completed": st["completed"],
+            "decode_steps": st["steps"], "prefill_dispatches": st["prefills"],
+            "tokens_per_s": st["tokens_per_s"],
+            "ttft_p50_s": st["ttft_p50_s"], "ttft_p99_s": st["ttft_p99_s"],
+            "tpot_p50_s": st["tpot_p50_s"], "tpot_p99_s": st["tpot_p99_s"],
+            "n_levels": st["n_levels"],
+            "mean_exit_level": st["mean_exit_level"],
+            "mean_levels_saved": st["mean_levels_saved"],
+            "bit_identical_to_batcher": True,
+        })
+    if json_path:
+        payload = {
+            "bench": "serving_gateway",
+            "host_backend": jax.default_backend(),
+            "model": "smollm-135m (smoke)",
+            "note": "Poisson arrivals replayed in real time; TTFT "
+                    "includes queueing delay.  Gateway output asserted "
+                    "bit-identical to the plain ContinuousBatcher for "
+                    "the same request set before timing.",
+            "rows": rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        emit("serving_json", 0.0, f"wrote={json_path}")
+
+
 def main(argv=None) -> None:
     import argparse
 
@@ -773,6 +896,7 @@ def main(argv=None) -> None:
     ipu_bench()
     online_stats()
     progressive_bench(os.path.join(json_dir, "BENCH_progressive.json"))
+    serving_bench(os.path.join(json_dir, "BENCH_serving.json"))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,95 @@
+"""The serving gateway: bucketed AOT prefill, donated decode, async emit.
+
+    PYTHONPATH=src python examples/serve_gateway.py
+
+A mixed-length request trace is served twice — through the plain
+`ContinuousBatcher` (one prefill trace per unique prompt length, full
+KV-cache copy per decode step, a host sync per slot per step) and
+through `ServingGateway` (one AOT-compiled prefill executable per
+power-of-2 length bucket, packed multi-prompt prefill, donated decode
+state, tokens drained by an async emit thread).  Output streams are
+bit-identical; the gateway additionally reports throughput and p50/p99
+TTFT / per-token latency, and a second pass replays a Poisson arrival
+trace in real time.
+"""
+
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.quant import QuantConfig
+from repro.models.common import materialize
+from repro.models.transformer import lm_build
+from repro.serve import ContinuousBatcher, Request, ServingGateway
+from repro.serve.engine import prepare_params
+
+cfg = dataclasses.replace(get_smoke("smollm-135m"), l2r=QuantConfig())
+params = prepare_params(cfg, materialize(lm_build(cfg), jax.random.PRNGKey(0)))
+
+rng = np.random.default_rng(0)
+lengths = [3, 5, 8, 11, 17, 23, 9, 14]  # spans the 8/16/32 buckets
+prompts = [rng.integers(0, cfg.vocab, (L,)).astype(np.int32)
+           for L in lengths]
+
+
+def make_requests():
+    return [Request(uid=i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(prompts)]
+
+
+print("--- plain ContinuousBatcher (reference) ---")
+ref = make_requests()
+eng = ContinuousBatcher(cfg, params, n_slots=4, max_len=32,
+                        progressive=True, early_exit=True)
+for r in ref:
+    eng.submit(r)
+t0 = time.perf_counter()
+eng.run(max_steps=1000)
+print(f"batcher: {eng.steps} decode steps, "
+      f"{time.perf_counter() - t0:.2f}s wall")
+
+print("--- ServingGateway (offline drain) ---")
+served = make_requests()
+gw = ServingGateway(cfg, params, n_slots=4, max_len=32, prefill_group=4,
+                    progressive=True, early_exit=True)
+gw.run(served)
+gw.close()
+st = gw.stats()
+for a, b in zip(ref, served):
+    assert a.output == b.output, (a.uid, a.output, b.output)
+    assert a.exit_levels == b.exit_levels
+print(f"gateway: {st['tokens']} tokens in {st['steps']} decode dispatches "
+      f"+ {st['prefills']} packed prefills (buckets {st['buckets']})")
+print(f"  {st['tokens_per_s']:.1f} tok/s | ttft p50/p99 "
+      f"{st['ttft_p50_s'] * 1e3:.1f}/{st['ttft_p99_s'] * 1e3:.1f} ms | "
+      f"tpot p50/p99 {st['tpot_p50_s'] * 1e3:.1f}/"
+      f"{st['tpot_p99_s'] * 1e3:.1f} ms")
+print(f"  mean exit level {st['mean_exit_level']:.2f}/{st['n_levels'] - 1} "
+      f"(saved {st['mean_levels_saved']:.2f} levels/token)")
+print("  output streams bit-identical to the plain batcher")
+
+print("--- ServingGateway (real-time Poisson arrivals) ---")
+online = make_requests()
+gw2 = ServingGateway(cfg, params, n_slots=4, max_len=32, prefill_group=4,
+                     progressive=True, early_exit=True)
+t0 = time.perf_counter() + 0.01
+arrival = t0
+for r in online:
+    arrival += float(rng.exponential(0.03))
+    r.t_arrival = arrival
+    gw2.submit(r)
+gw2.run(realtime=True)
+gw2.close()
+st2 = gw2.stats()
+for a, b in zip(ref, online):
+    assert a.output == b.output
+print(f"online: {st2['tokens_per_s']:.1f} tok/s | ttft p50 "
+      f"{st2['ttft_p50_s'] * 1e3:.1f} ms (includes queueing) | "
+      f"tokens still bit-identical")

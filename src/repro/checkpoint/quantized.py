@@ -25,7 +25,8 @@ from repro.models.common import Param, _is_param, _quantizable, quantize_params
 
 from .manager import load_pytree, save_pytree
 
-__all__ = ["save_quantized", "load_quantized", "quantized_nbytes"]
+__all__ = ["save_quantized", "load_quantized", "quantized_nbytes",
+           "save_prepared", "prepared_template", "load_prepared"]
 
 
 def save_quantized(desc_tree, params, path: str):
@@ -62,3 +63,44 @@ def load_quantized(desc_tree, params_template, path: str,
 
 def quantized_nbytes(tree) -> int:
     return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
+
+
+# ------------------------------------------------- prepared serving trees
+# `serve.engine.prepare_params` output: QuantizedWeights records whose
+# `planes` field carries the pre-stacked digit-plane operands
+# (core/quant.py:PlaneOperands) plus the padded streaming head cache
+# ("head_q").  The {"q","scale"} codec above predates that cache, so a
+# gateway restoring from it re-extracted every weight's plane stack on
+# each cold start; these entry points persist the PREPARED tree whole —
+# plane stacks included — so serving resumes with zero re-extraction.
+# Both record types are registered pytree dataclasses (data leaves +
+# static meta), so the manager.py path-keyed .npz codec round-trips
+# them bit-exactly with no extra format.
+
+def save_prepared(prepared, path: str):
+    """Save a `prepare_params` output tree (plane stacks and streaming
+    head cache included) as one .npz."""
+    save_pytree(prepared, path)
+    return prepared
+
+
+def prepared_template(cfg, params_template, desc=None, prestack: bool = True):
+    """Abstract (ShapeDtypeStruct) prepared-tree template, evaluated at
+    zero device cost — the restore target for :func:`load_prepared`.
+    ``params_template`` only contributes shapes/dtypes; pass the same
+    ``prestack`` the checkpoint was saved with."""
+    from repro.serve.engine import prepare_params
+
+    return jax.eval_shape(
+        lambda p: prepare_params(cfg, p, desc=desc, prestack=prestack),
+        params_template)
+
+
+def load_prepared(cfg, params_template, path: str, desc=None,
+                  prestack: bool = True):
+    """Restore a prepared serving tree saved by :func:`save_prepared`:
+    int8 payloads, scales, plane stacks, and the padded head cache all
+    land bit-exact — a gateway cold start goes straight to AOT warmup
+    with no weight preparation pass."""
+    return load_pytree(
+        prepared_template(cfg, params_template, desc, prestack), path)

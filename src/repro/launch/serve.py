@@ -1,11 +1,18 @@
 """Serving launcher: batched greedy decoding with optional W8A8 (L2R) weights.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
-        --batch 4 --prompt-len 16 --steps 12 [--wq] [--l2r-levels 5]
+        --batch 4 --prompt-len 16 --steps 12 [--wq] [--l2r-levels 5] \
+        [--gateway]
 
 --wq stores matmul weights in int8 (the L2R serving format; on TPU the
 digit-plane Pallas kernel consumes them MSDF); --l2r-levels enables the
 progressive-precision mode through the jnp digit-plane path.
+
+--gateway serves the same prompts through the request-queue gateway
+(serve/gateway.py: bucketed AOT prefill, donated decode state, async
+emit) instead of the static-batch loop — the ``--batch`` prompts become
+queued requests, ``--batch`` also sizes the slot array, and the summary
+reports gateway throughput/latency stats.
 """
 
 from __future__ import annotations
@@ -36,6 +43,10 @@ def main(argv=None):
     ap.add_argument("--wq", action="store_true", help="int8 weight storage")
     ap.add_argument("--l2r-levels", type=int, default=None,
                     help="progressive-precision MSDF levels (digit planes)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve through the request-queue gateway "
+                         "(bucketed AOT prefill, donated decode, async "
+                         "emit) instead of the static-batch loop")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -56,6 +67,30 @@ def main(argv=None):
     max_len = args.prompt_len + args.steps
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
                          jnp.int32)
+
+    if args.gateway:
+        from repro.serve import Request, ServingGateway
+
+        progressive = cfg.l2r is not None
+        gw = ServingGateway(cfg, params, n_slots=args.batch,
+                            max_len=max_len, progressive=progressive,
+                            early_exit=progressive,
+                            prefill_group=min(args.batch, 4))
+        reqs = [Request(uid=i, prompt=np.asarray(prompt[i]),
+                        max_new_tokens=args.steps)
+                for i in range(args.batch)]
+        gw.run(reqs)
+        gw.close()
+        st = gw.stats()
+        print(f"gateway: {st['tokens']} tokens in {st['steps']} decode "
+              f"dispatches + {st['prefills']} prefill dispatches "
+              f"(buckets {st['buckets']}); {st['tokens_per_s']:.1f} tok/s, "
+              f"ttft_p50 {st['ttft_p50_s'] * 1e3:.1f} ms, "
+              f"tpot_p50 {st['tpot_p50_s'] * 1e3:.1f} ms")
+        seqs = np.asarray([r.output for r in reqs])
+        for i, row in enumerate(seqs):
+            print(f"seq{i}: {row.tolist()}")
+        return seqs
     prefill = jax.jit(make_prefill_step(cfg, max_len, cache_dtype=jnp.float32))
     decode = jax.jit(make_decode_step(cfg))
 

@@ -1,3 +1,6 @@
-from .engine import (make_prefill_step, make_decode_step, state_specs,
+from .engine import (make_prefill_step, make_decode_step,
+                     make_bucket_prefill_step, prefill_buckets, bucket_for,
+                     supports_bucketed_prefill, state_specs,
                      abstract_state, greedy_generate)
-from .batching import ContinuousBatcher, Request
+from .batching import ContinuousBatcher, Request, latency_percentiles
+from .gateway import ServingGateway

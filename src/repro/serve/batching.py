@@ -18,6 +18,7 @@ axis), exactly what a TPU serving binary does.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable
 
 import jax
@@ -27,10 +28,22 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_lm_state
-from .engine import _bspec, make_decode_step, make_prefill_step, state_specs
+from .engine import (_bspec, bucket_for, make_bucket_prefill_step,
+                     make_decode_step, make_prefill_step, prefill_buckets,
+                     state_specs, supports_bucketed_prefill)
 
 __all__ = ["Request", "ContinuousBatcher", "infer_batch_axes",
-           "state_batch_axes"]
+           "state_batch_axes", "latency_percentiles"]
+
+
+def latency_percentiles(ttft: list, tpot: list) -> dict:
+    """p50/p99 over per-request latency samples (seconds); 0.0 when no
+    samples — the stats() schema stays fixed from construction on."""
+    def p(xs, q):
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    return {"ttft_p50_s": p(ttft, 50), "ttft_p99_s": p(ttft, 99),
+            "tpot_p50_s": p(tpot, 50), "tpot_p99_s": p(tpot, 99)}
 
 
 @dataclasses.dataclass
@@ -49,6 +62,15 @@ class Request:
     # position's logit stream)
     prefill_exit_level: int | None = None
     done: bool = False
+    # latency timestamps (time.perf_counter seconds).  ``t_arrival`` is
+    # stamped at submit() unless the caller pre-stamped it (traffic
+    # replay: a Poisson generator stamps the synthetic arrival instant);
+    # ``t_first_token`` when the first token is committed,
+    # ``t_complete`` at retirement.  TTFT = t_first_token - t_arrival,
+    # mean TPOT = (t_complete - t_first_token) / (len(output) - 1).
+    t_arrival: float | None = None
+    t_first_token: float | None = None
+    t_complete: float | None = None
 
 
 def infer_batch_axes(abstract_a, abstract_b):
@@ -127,7 +149,8 @@ class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  max_len: int = 128, cache_dtype=jnp.float32,
                  progressive: bool = False, early_exit: bool = False,
-                 mesh=None, state_sharding: str = "replicated"):
+                 mesh=None, state_sharding: str = "replicated",
+                 donate_state: bool = True, bucketed: bool | None = None):
         """``mesh`` (default: the installed ``sharding.ctx`` mesh) makes
         the engine mesh-aware: the progressive head stream runs the
         shard_mapped consensus walk (vocab over "model", slot rows over
@@ -158,6 +181,23 @@ class ContinuousBatcher:
         In every mode the streaming walk itself stays bit-exact for
         whatever hidden states it is fed (committed tokens always pass
         the same decision machinery).
+
+        ``donate_state`` (default True) donates the slot state to the
+        jitted decode step (``donate_argnums``): XLA writes the updated
+        KV caches in place instead of copying the full cache pytree
+        every token — the dominant decode-side memory traffic at real
+        cache sizes.  The old reference is rebound to the output each
+        step, so the donation is invisible to callers; pass False only
+        to debug aliasing.
+
+        ``bucketed`` routes admits through power-of-2 prompt-length
+        buckets (engine.make_bucket_prefill_step): prompts right-pad to
+        the smallest covering bucket so prefill traces once per BUCKET,
+        not once per unique prompt length — the classic serving retrace
+        leak.  Bit-exact (pad positions are masked out of the cache).
+        Default None = auto: on for attention-mixer families (and, with
+        local windows, when the cache bound fits the window), off
+        otherwise.
         """
         from repro.sharding import ctx
 
@@ -209,10 +249,21 @@ class ContinuousBatcher:
         self._decode = jax.jit(make_decode_step(cfg, progressive=progressive,
                                                 early_exit=early_exit,
                                                 backbone_hints=hints,
-                                                mesh=self.mesh))
+                                                mesh=self.mesh),
+                               donate_argnums=(1,) if donate_state else ())
         self._prefill1 = jax.jit(make_prefill_step(
             cfg, max_len, cache_dtype, progressive=progressive,
             early_exit=early_exit, backbone_hints=hints, mesh=self.mesh))
+        if bucketed is None:
+            local = any(k == "local" for k, _ in cfg.layer_kinds())
+            bucketed = supports_bucketed_prefill(cfg) and \
+                (not local or max_len <= cfg.window)
+        self.bucketed = bucketed
+        if bucketed:
+            self._buckets = prefill_buckets(max_len)
+            self._bucket_prefill = jax.jit(make_bucket_prefill_step(
+                cfg, max_len, cache_dtype, progressive=progressive,
+                early_exit=early_exit, backbone_hints=hints, mesh=self.mesh))
         self.steps = 0
         # saved-levels accounting (progressive mode): histograms over the
         # MSDF exit level of every decoded token across all requests AND
@@ -221,29 +272,52 @@ class ContinuousBatcher:
                          if progressive and cfg.l2r is not None else 0)
         self.exit_hist = np.zeros(max(self.n_levels, 1), np.int64)
         self.prefill_exit_hist = np.zeros(max(self.n_levels, 1), np.int64)
+        # per-request latency samples, recorded at retirement (seconds)
+        self._ttft: list[float] = []
+        self._tpot: list[float] = []
 
     # ------------------------------------------------------------- api
     def submit(self, req: Request):
+        if req.t_arrival is None:
+            req.t_arrival = time.perf_counter()
         self.queue.append(req)
+
+    def _prefill_request(self, req: Request):
+        """One-sequence prefill, through the bucket pad when enabled.
+
+        Bucketed: the prompt right-pads to its power-of-2 bucket and
+        runs the bucket step with the true length — one trace per
+        BUCKET shape instead of one per unique prompt length, and the
+        returned state is bit-identical to the unpadded prefill (pad
+        cache entries are masked empty, ``pos`` is the true length).
+        """
+        prompt = np.asarray(req.prompt, np.int32)
+        if self.bucketed:
+            lb = bucket_for(len(prompt), self._buckets)
+            padded = np.zeros((1, lb), np.int32)
+            padded[0, :len(prompt)] = prompt
+            return self._bucket_prefill(
+                self.params, jnp.asarray(padded),
+                jnp.asarray([len(prompt)], jnp.int32))
+        return self._prefill1(self.params,
+                              {"tokens": jnp.asarray(prompt[None, :])})
 
     def _admit(self):
         for slot in range(self.n_slots):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
-            prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
             if self.progressive:
                 # batch-progressive prefill: the head streams the LAST
                 # prompt position only, committing the first token at its
                 # earliest sound level
-                st1, _, tok, lv = self._prefill1(self.params,
-                                                 {"tokens": prompt})
+                st1, _, tok, lv = self._prefill_request(req)
                 first = tok[0, 0]
                 level = int(lv[0, 0])
                 req.prefill_exit_level = level
                 self.prefill_exit_hist[level] += 1
             else:
-                st1, logits = self._prefill1(self.params, {"tokens": prompt})
+                st1, logits = self._prefill_request(req)
                 first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
             # splice the single-sequence state into the live batch state
             self.state = _splice(self.state, st1, slot, self._axes)
@@ -253,6 +327,7 @@ class ContinuousBatcher:
                 self.state = jax.device_put(self.state, self._state_sh)
             self.cur_tok = self.cur_tok.at[slot, 0].set(first)
             req.output.append(int(first))
+            req.t_first_token = time.perf_counter()
             self.slot_req[slot] = req
 
     def _retire(self):
@@ -265,6 +340,13 @@ class ContinuousBatcher:
             of_cache = int(self.state.pos[slot]) >= self.max_len - 1
             if eos or full or of_cache:
                 req.done = True
+                req.t_complete = time.perf_counter()
+                if req.t_arrival is not None and req.t_first_token is not None:
+                    self._ttft.append(req.t_first_token - req.t_arrival)
+                    if len(req.output) > 1:
+                        self._tpot.append(
+                            (req.t_complete - req.t_first_token)
+                            / (len(req.output) - 1))
                 self.slot_req[slot] = None
 
     def step(self):
@@ -298,7 +380,7 @@ class ContinuousBatcher:
                 continue
         return self.steps
 
-    def stats(self) -> dict:
+    def stats(self, latency: bool = False) -> dict:
         """Engine counters; in progressive mode also the saved-levels
         histograms: exit_level_hist[l] tokens committed after l+1 MSDF
         levels during DECODE (a digit-serial deployment skips the
@@ -313,8 +395,18 @@ class ContinuousBatcher:
         token/prefill landed, so monitoring consumers scraping stats()
         saw the dict change shape mid-run.  Means over zero events are
         reported as 0.0.
+
+        ``latency=True`` additionally reports per-request wall-clock
+        percentiles over RETIRED requests (completed count, p50/p99
+        time-to-first-token and per-output-token seconds).  Opt-in
+        because the default schema is deterministic for a fixed request
+        set — tests and replica-consistency checks compare stats()
+        dicts exactly, which wall-clock samples would break.
         """
         out = {"steps": self.steps, "progressive": self.progressive}
+        if latency:
+            out.update(completed=len(self._ttft),
+                       **latency_percentiles(self._ttft, self._tpot))
         if self.progressive:
             levels = np.arange(self.n_levels)
             total = int(self.exit_hist.sum())

@@ -28,6 +28,8 @@ from repro.models.transformer import (LMState, init_lm_state, lm_forward,
 from repro.sharding.axes import dp_axes
 
 __all__ = ["prepare_params", "make_prefill_step", "make_decode_step",
+           "make_bucket_prefill_step", "prefill_buckets", "bucket_for",
+           "supports_bucketed_prefill",
            "progressive_logits_from_hidden", "state_specs", "abstract_state",
            "greedy_generate"]
 
@@ -258,6 +260,135 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
             return state, logits, tok.astype(jnp.int32), lv
         logits = logits_from_hidden(cfg, params, hidden[:, -1:])
         return state, logits
+
+    return prefill
+
+
+# ------------------------------------------------------- bucketed prefill
+def prefill_buckets(max_len: int, min_bucket: int = 8) -> tuple[int, ...]:
+    """Power-of-2 prompt-length buckets, capped at ``max_len``.
+
+    Prompts pad to the smallest covering bucket, so prefill traces (and
+    AOT executables) exist per BUCKET instead of per unique prompt
+    length.  The last bucket is ``max_len`` itself (the cache bound),
+    whether or not it is a power of two.
+    """
+    assert max_len >= 1
+    out: list[int] = []
+    b = min(min_bucket, max_len)
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
+def bucket_for(length: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket covering ``length`` (buckets ascending)."""
+    for b in buckets:
+        if length <= b:
+            return b
+    raise ValueError(f"prompt length {length} exceeds largest bucket "
+                     f"{buckets[-1]} (the cache bound)")
+
+
+def supports_bucketed_prefill(cfg: ModelConfig) -> bool:
+    """Bucketed (right-padded) prefill is exact only for attention
+    mixers: causal masking makes pad positions invisible to every real
+    position, and the pad cache entries can be marked empty afterwards.
+    Recurrent mixers (ssd / rec) carry the state at the LAST position —
+    pad tokens would contaminate it — so those families keep the
+    exact-length prefill path."""
+    return cfg.family != "encdec" and all(
+        k in ("global", "local") for k, _ in cfg.layer_kinds())
+
+
+def _mask_bucket_state(state: LMState, true_len: jax.Array) -> LMState:
+    """Post-prefill fixup for a right-padded prompt: per-row ``pos``
+    becomes the TRUE length and every KV-cache entry written by a pad
+    position is marked empty (-1), so decode attention never sees pad
+    keys and the first decoded token lands at position ``true_len`` —
+    overwriting the stale pad k/v slot by slot as decoding proceeds.
+    Bit-exact: masked entries contribute exact zeros to the softmax, and
+    cache contents at slots < true_len are untouched."""
+    tl = true_len.astype(jnp.int32).reshape(-1, 1)  # (B, 1): broadcasts
+    #   against (B, L) and stacked (layers, B, L) position leaves alike
+
+    def fix(c):
+        if not isinstance(c, KVCache):
+            return c
+        return c._replace(
+            positions=jnp.where(c.positions < tl, c.positions, -1))
+
+    is_kv = lambda x: isinstance(x, KVCache)
+    return LMState(
+        prefix=jax.tree.map(fix, state.prefix, is_leaf=is_kv),
+        stack=jax.tree.map(fix, state.stack, is_leaf=is_kv),
+        suffix=jax.tree.map(fix, state.suffix, is_leaf=is_kv),
+        pos=true_len.astype(jnp.int32),
+    )
+
+
+def make_bucket_prefill_step(cfg: ModelConfig, max_len: int,
+                             cache_dtype=jnp.bfloat16,
+                             progressive: bool = False,
+                             early_exit: bool = False,
+                             backbone_hints: bool = True,
+                             mesh: Mesh | None = None) -> Callable:
+    """(params, tokens (B, Lb), true_len (B,)) -> make_prefill_step returns.
+
+    The bucketed form of :func:`make_prefill_step`: ``tokens`` is a
+    whole BUCKET of right-padded prompts (one traced/compiled program
+    per (B, bucket) shape, not per unique prompt length) and ``true_len``
+    carries each row's real prompt length.  The head consumes the hidden
+    state at ``true_len - 1`` per row (not the pad tail), the returned
+    state's ``pos`` is the true length, and pad-written cache entries
+    are marked empty — decode from this state is bit-identical to an
+    unpadded prefill of the same prompt (tests/test_gateway.py).
+
+    Rows are independent, so multiple queued prompts PACK into one
+    dispatch: pad the batch with dummy rows (``true_len = 1``) and
+    ignore their outputs.  Attention families only (see
+    :func:`supports_bucketed_prefill`); local (ring) windows require
+    the bucket to fit the window, asserted at trace time.
+    """
+    assert progressive or not early_exit, \
+        "early_exit stops the streamed head: requires progressive=True"
+    assert supports_bucketed_prefill(cfg), \
+        "bucketed prefill: attention-mixer LM families only"
+    if progressive:
+        assert cfg.l2r is not None, \
+            "progressive prefill streams the quantized head: set cfg.l2r"
+    local = any(k == "local" for k, _ in cfg.layer_kinds())
+
+    def prefill(params, tokens, true_len):
+        from contextlib import ExitStack
+
+        from repro.sharding import ctx
+
+        with ExitStack() as stack:
+            if not backbone_hints:
+                stack.enter_context(ctx.hints_disabled())
+            return _body(params, tokens, true_len)
+
+    def _body(params, tokens, true_len):
+        bsz, lb = tokens.shape
+        if local:
+            assert lb <= cfg.window, (
+                f"bucket {lb} exceeds the local attention window "
+                f"{cfg.window}: the ring cache would wrap over real "
+                f"prompt entries")
+        state = init_lm_state(cfg, bsz, max_len, cache_dtype)
+        hidden, state, _ = lm_forward(cfg, params, tokens=tokens,
+                                      mode="prefill", state=state)
+        idx = (true_len.astype(jnp.int32) - 1)[:, None, None]
+        h_last = jnp.take_along_axis(hidden, idx, axis=1)  # (B, 1, d)
+        state = _mask_bucket_state(state, true_len)
+        if progressive:
+            logits, tok, lv = progressive_logits_from_hidden(
+                cfg, params, h_last, early_exit=early_exit, mesh=mesh)
+            return state, logits, tok.astype(jnp.int32), lv
+        return state, logits_from_hidden(cfg, params, h_last)
 
     return prefill
 

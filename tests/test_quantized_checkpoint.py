@@ -63,6 +63,79 @@ def test_serve_directly_from_quantized(tmp_path, model):
     assert rel < 0.35, rel  # W8A8 noise through 6 layers
 
 
+# ------------------------------------------------ prepared serving trees
+@pytest.fixture(scope="module")
+def prepared_model():
+    import dataclasses
+
+    from repro.core.quant import QuantConfig
+
+    cfg = dataclasses.replace(get_smoke("smollm-135m"), l2r=QuantConfig())
+    desc = lm_build(cfg)
+    params = materialize(desc, jax.random.PRNGKey(0))
+    return cfg, desc, params
+
+
+def test_prepared_roundtrip_bit_exact(tmp_path, prepared_model):
+    """save_prepared/load_prepared round-trips the FULL serving tree —
+    int8 payloads, scales, pre-stacked PlaneOperands, and the padded
+    streaming head cache — bit-exactly, leaf for leaf."""
+    from repro.checkpoint.quantized import load_prepared, save_prepared
+    from repro.core.quant import QuantizedWeights
+    from repro.serve.engine import prepare_params
+
+    cfg, desc, params = prepared_model
+    prepared = prepare_params(cfg, params, desc)
+    path = str(tmp_path / "prep.npz")
+    save_prepared(prepared, path)
+    restored = load_prepared(cfg, params, path, desc=desc)
+
+    la = jax.tree_util.tree_flatten_with_path(prepared)[0]
+    lb = jax.tree_util.tree_flatten_with_path(restored)[0]
+    assert len(la) == len(lb)
+    for (ka, a), (kb, b) in zip(la, lb):
+        assert jax.tree_util.keystr(ka) == jax.tree_util.keystr(kb)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the planes caches survived: the head record restores with its
+    # window-padded stack present (gateway cold start re-extracts nothing)
+    assert isinstance(restored["head_q"], QuantizedWeights)
+    assert restored["head_q"].planes is not None
+    np.testing.assert_array_equal(
+        np.asarray(prepared["head_q"].planes.stack),
+        np.asarray(restored["head_q"].planes.stack))
+
+
+def test_prepared_checkpoint_serves_identically(tmp_path, prepared_model):
+    """Serving from the restored prepared tree is bit-identical to
+    serving from the freshly prepared one — the checkpoint IS the
+    cold-start path."""
+    from repro.checkpoint.quantized import load_prepared, save_prepared
+    from repro.serve import ContinuousBatcher, Request
+    from repro.serve.engine import prepare_params
+
+    cfg, desc, params = prepared_model
+    prepared = prepare_params(cfg, params, desc)
+    path = str(tmp_path / "prep.npz")
+    save_prepared(prepared, path)
+    restored = load_prepared(cfg, params, path, desc=desc)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (L,)).astype(np.int32)
+               for L in (5, 9)]
+
+    def serve(tree):
+        eng = ContinuousBatcher(cfg, tree, n_slots=2, max_len=24,
+                                progressive=True, early_exit=True)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_steps=200)
+        return [(r.output, r.exit_levels) for r in reqs]
+
+    assert serve(prepared) == serve(restored)
+
+
 def test_quantize_params_matches_quantize_desc_structure(model):
     cfg, desc, params = model
     from repro.models.common import quantize_desc

@@ -151,6 +151,114 @@ def test_splice_pad_value_all_integer_dtypes():
     np.testing.assert_array_equal(np.asarray(out["positions"][2, 5:]), -1)
 
 
+# ------------------------------------------- donation / buckets / latency
+def test_batcher_decode_donates_state_buffers(model):
+    """donate_argnums on the jitted decode step: the per-step KV-cache
+    copy disappears — XLA writes the updated cache into the donated
+    input buffer (pointer-identical output) and the donated reference
+    is invalidated."""
+    cfg, params = model
+    rng = np.random.default_rng(5)
+    eng = ContinuousBatcher(cfg, params, n_slots=2, max_len=32)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, (6,))
+                       .astype(np.int32), max_new_tokens=8))
+    eng.step()  # admit + first decode (splice allocates fresh buffers)
+    before = eng.state
+    k0 = before.stack[0].k  # a large cache leaf
+    ptr = k0.unsafe_buffer_pointer()
+    eng.step()
+    assert eng.state.stack[0].k.unsafe_buffer_pointer() == ptr, \
+        "decode step copied the KV cache instead of updating in place"
+    with pytest.raises(RuntimeError):
+        np.asarray(k0)  # the donated buffer is dead
+
+
+def test_batcher_decode_no_donation_opt_out(model):
+    cfg, params = model
+    rng = np.random.default_rng(5)
+    eng = ContinuousBatcher(cfg, params, n_slots=2, max_len=32,
+                            donate_state=False)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, (6,))
+                       .astype(np.int32), max_new_tokens=8))
+    eng.step()
+    k0 = eng.state.stack[0].k
+    eng.step()
+    np.asarray(k0)  # still alive: no donation
+
+
+def test_batcher_prefill_compiles_once_per_bucket(model):
+    """Regression for the per-unique-prompt-length retrace: admits
+    route through the bucket pad, so three different prompt lengths in
+    one bucket share ONE prefill trace, and a fourth length in the next
+    bucket adds exactly one more."""
+    cfg, params = model
+    rng = np.random.default_rng(6)
+    eng = ContinuousBatcher(cfg, params, n_slots=2, max_len=32)
+    assert eng.bucketed
+
+    def serve(length):
+        eng.submit(Request(uid=length,
+                           prompt=rng.integers(0, cfg.vocab, (length,))
+                           .astype(np.int32), max_new_tokens=2))
+        eng.run(max_steps=1000)
+
+    for L in (5, 6, 7):  # all bucket 8
+        serve(L)
+    assert eng._bucket_prefill._cache_size() == 1, \
+        "prefill retraced within one length bucket"
+    serve(9)  # bucket 16
+    assert eng._bucket_prefill._cache_size() == 2
+    serve(12)  # bucket 16 again: no new trace
+    assert eng._bucket_prefill._cache_size() == 2
+    # the unbucketed single-prompt prefill path was never touched
+    assert eng._prefill1._cache_size() == 0
+
+
+def test_batcher_bucketed_matches_unbucketed(model):
+    """The bucket pad is bit-invisible: same tokens with bucketing
+    forced off (the recurrent-family fallback path)."""
+    cfg, params = model
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, (L,)).astype(np.int32)
+               for L in (5, 11, 3)]
+
+    def run(bucketed):
+        eng = ContinuousBatcher(cfg, params, n_slots=2, max_len=32,
+                                bucketed=bucketed)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_steps=1000)
+        return [r.output for r in reqs]
+
+    assert run(True) == run(False)
+
+
+def test_batcher_latency_stats_opt_in(model):
+    """Per-request latency percentiles surface under stats(latency=True)
+    and ONLY there — the default schema stays deterministic for a fixed
+    request set (replica-consistency tests compare it exactly)."""
+    cfg, params = model
+    rng = np.random.default_rng(8)
+    eng = ContinuousBatcher(cfg, params, n_slots=2, max_len=32)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, (5,))
+                    .astype(np.int32), max_new_tokens=3) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=1000)
+    plain = eng.stats()
+    for k in ("completed", "ttft_p50_s", "ttft_p99_s",
+              "tpot_p50_s", "tpot_p99_s"):
+        assert k not in plain
+    lat = eng.stats(latency=True)
+    assert lat["completed"] == 3
+    assert lat["ttft_p99_s"] >= lat["ttft_p50_s"] > 0
+    assert lat["tpot_p99_s"] >= lat["tpot_p50_s"] > 0
+    for r in reqs:
+        assert r.t_arrival <= r.t_first_token <= r.t_complete
+
+
 def test_batcher_single_layer_model_matches_greedy(model):
     """End-to-end regression for the n_layers == 1 splice: the stacked
     cache has a leading axis of size 1, which the old heuristic spliced
