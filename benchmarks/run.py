@@ -38,6 +38,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
                   before timing; on one shared CPU the "scaling" number
                   measures partitioning overhead, not parallel speedup —
                   the real-accelerator row is a deployment follow-up.
+  * attention_* — digit-serial attention decode modes on one KV cache:
+                  float oracle vs quantized QK^T re-extracting K planes
+                  per step vs the incrementally plane-stacked cache vs
+                  margin-bounded early exit, parity asserted bit-exact
+                  before timing (plane cache == re-extraction; early
+                  exit == full depth at tight tolerance); plus the
+                  chunked quantized prefill and an interpret-mode
+                  correctness row for the flash-fused level-walk
+                  kernel; rows land in BENCH_attention.json;
   * serving_*   — the gateway under synthetic Poisson traffic (bucketed
                   AOT prefill, donated decode state, async emit):
                   tokens/s + p50/p99 TTFT and per-token latency, early
@@ -862,6 +871,171 @@ def serving_bench(json_path: str | None = None):
         emit("serving_json", 0.0, f"wrote={json_path}")
 
 
+def attention_bench(json_path: str | None = None):
+    """Digit-serial attention decode/prefill -> attention_* rows +
+    BENCH_attention.json.
+
+    One KV cache, four decode modes: the float oracle; quantized QK^T
+    that re-quantizes + re-extracts K planes from the float cache every
+    step (what decode costs WITHOUT the incremental stack); the
+    incrementally plane-stacked cache (extraction already paid at append
+    time); and margin-bounded early exit on top of the plane cache.
+    Parity is asserted before any timing: plane-cache scores are
+    bit-identical to re-extraction, early exit at tight tolerance is
+    bit-identical to full depth, and the quantized output tracks the
+    float oracle to W8A8 noise.  The flash-fused level-walk kernel runs
+    as an interpret-mode correctness row (never timed off-TPU).
+    CHECK_MODE trims shapes.
+    """
+    import json
+
+    from repro.core.quant import QuantConfig
+    from repro.models.attention import (chunked_attention, decode_attention,
+                                        init_kv_cache, update_kv_cache)
+
+    cfg = QuantConfig()
+    if CHECK_MODE:
+        b, length, kvh, g, dh, sq = 2, 64, 2, 2, 32, 32
+    else:
+        b, length, kvh, g, dh, sq = 4, 512, 4, 2, 64, 256
+    h = kvh * g
+    rng = np.random.default_rng(11)
+    cache = init_kv_cache(b, length, kvh, dh, jnp.float32, quant=cfg)
+    ks = jnp.asarray(rng.standard_normal((b, length, kvh, dh)), jnp.float32)
+    vs = jnp.asarray(rng.standard_normal((b, length, kvh, dh)), jnp.float32)
+    pos = jnp.asarray(np.tile(np.arange(length), (b, 1)), jnp.int32)
+    cache = update_kv_cache(cache, ks, vs, pos, quant=cfg)
+    q = jnp.asarray(rng.standard_normal((b, 1, h, dh)), jnp.float32)
+    qpos = jnp.full((b,), length - 1, jnp.int32)
+
+    fns = {
+        "float": lambda q, c: decode_attention(
+            q, c.k, c.v, c.positions, qpos),
+        "quant_reextract": lambda q, c: decode_attention(
+            q, c.k, c.v, c.positions, qpos, l2r=cfg),
+        "plane_cache": lambda q, c: decode_attention(
+            q, c.k, c.v, c.positions, qpos, l2r=cfg,
+            k_planes=c.k_planes, k_scale=c.k_scale),
+        "early_exit": lambda q, c: decode_attention(
+            q, c.k, c.v, c.positions, qpos, l2r=cfg,
+            k_planes=c.k_planes, k_scale=c.k_scale,
+            early_exit=True, exit_tol=1e-4),
+    }
+    # parity gates the timing.  Bit-exactness is asserted on eager
+    # (op-by-op) execution — identical int scores and scales make every
+    # downstream float op identical; the jitted closures are different
+    # XLA graphs, whose fusion may reassociate the f32 epilogue by an
+    # ulp, so they get an ulp-level tolerance instead.
+    eag = {name: np.asarray(fn(q, cache)) for name, fn in fns.items()}
+    np.testing.assert_array_equal(eag["quant_reextract"],
+                                  eag["plane_cache"])
+    np.testing.assert_array_equal(eag["plane_cache"], eag["early_exit"])
+    np.testing.assert_allclose(eag["plane_cache"], eag["float"], atol=0.1)
+    modes = {name: jax.jit(fn) for name, fn in fns.items()}
+    out = {name: jax.block_until_ready(fn(q, cache))
+           for name, fn in modes.items()}
+    for name in ("quant_reextract", "early_exit"):
+        np.testing.assert_allclose(out[name], out["plane_cache"], atol=2e-6)
+    np.testing.assert_allclose(np.asarray(out["plane_cache"]),
+                               np.asarray(out["float"]), atol=0.1)
+
+    n_it = 1 if CHECK_MODE else 20
+    rounds = 1 if CHECK_MODE else 3
+    best = {name: float("inf") for name in modes}
+    for _ in range(rounds):  # interleaved min-of-rounds (shared host)
+        for name, fn in modes.items():
+            best[name] = min(best[name], _timeit(
+                lambda fn=fn: jax.block_until_ready(fn(q, cache)), n=n_it,
+                warmup=0))
+    rows = []
+    for name, us in best.items():
+        emit(f"attention_decode_{name}", us,
+             f"b={b} len={length} kv={kvh} g={g} dh={dh} "
+             f"vs_float={best['float'] / us:.2f}x")
+        rows.append({"name": f"decode_{name}", "us_per_step": us,
+                     "batch": b, "cache_len": length, "kv_heads": kvh,
+                     "group": g, "head_dim": dh,
+                     "speedup_vs_float": best["float"] / us})
+
+    # chunked prefill: float vs quantized (plane extraction once per call)
+    qp = jnp.asarray(rng.standard_normal((b, sq, h, dh)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((b, sq, kvh, dh)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((b, sq, kvh, dh)), jnp.float32)
+    qc_ = min(96, sq)
+    kc_ = min(64, sq)
+    pf_f = jax.jit(lambda a, b_, c: chunked_attention(
+        a, b_, c, q_chunk=qc_, kv_chunk=kc_))
+    pf_q = jax.jit(lambda a, b_, c: chunked_attention(
+        a, b_, c, q_chunk=qc_, kv_chunk=kc_, l2r=cfg))
+    o_f = jax.block_until_ready(pf_f(qp, kp, vp))
+    o_q = jax.block_until_ready(pf_q(qp, kp, vp))
+    np.testing.assert_allclose(np.asarray(o_q), np.asarray(o_f), atol=0.15)
+    us_f, us_q = _best_pair(
+        lambda: jax.block_until_ready(pf_f(qp, kp, vp)),
+        lambda: jax.block_until_ready(pf_q(qp, kp, vp)), n=max(1, n_it // 4))
+    emit("attention_prefill_float", us_f, f"b={b} sq={sq} h={h} dh={dh}")
+    emit("attention_prefill_quant", us_q,
+         f"b={b} sq={sq} h={h} dh={dh} vs_float={us_f / us_q:.2f}x")
+    rows.append({"name": "prefill_float", "us_per_call": us_f,
+                 "batch": b, "seq": sq, "heads": h, "head_dim": dh})
+    rows.append({"name": "prefill_quant", "us_per_call": us_q,
+                 "batch": b, "seq": sq, "heads": h, "head_dim": dh,
+                 "speedup_vs_float": us_f / us_q})
+
+    # flash-fused level walk: interpret-mode correctness (tiny — the
+    # interpreter is orders of magnitude off any timing signal)
+    from repro.kernels.flash_attention import flash_attention_l2r_pallas
+    from repro.kernels.flash_attention.ref import attention_ref
+    sb = 16
+    qs_ = qp[:1, :sb]
+    ks_ = kp[:1, :sb]
+    vs_ = vp[:1, :sb]
+    o_ker = flash_attention_l2r_pallas(qs_, ks_, vs_, bq=8, bkv=8,
+                                       interpret=True)
+    o_ref = attention_ref(qs_, ks_, vs_, True, None, None)
+    err = float(jnp.max(jnp.abs(o_ker - o_ref)))
+    assert err < 0.1, err  # W8A8 score noise only
+    emit("attention_flash_l2r_interpret", "n/a",
+         f"sq={sb} max_err_vs_float={err:.3e} validated=True")
+    rows.append({"name": "flash_l2r_interpret", "seq": sb,
+                 "max_err_vs_float_ref": err, "validated": True})
+
+    # roofline accounting: bytes a decode step must move, per mode —
+    # the model the measured decode rows should be judged against
+    from repro.launch.roofline import attn_decode_step_bytes
+    acct = attn_decode_step_bytes(b, length, kvh, dh,
+                                  n_bits=cfg.n_bits,
+                                  log2_radix=cfg.log2_radix,
+                                  kv_dtype_bytes=4,  # f32 cache above
+                                  levels=2)  # early-decided walk depth
+    emit("attention_roofline_bytes", "n/a",
+         f"plane_cache_vs_float={acct['plane_cache_vs_float']:.2f}x "
+         f"truncated_vs_plane_cache="
+         f"{acct['truncated_vs_plane_cache']:.2f}x")
+    rows.append({"name": "roofline_decode_bytes", **acct})
+
+    if json_path:
+        payload = {
+            "bench": "l2r_attention",
+            "host_backend": jax.default_backend(),
+            "note": "Decode modes share one KV cache; plane-cache scores "
+                    "asserted bit-identical to per-step re-extraction and "
+                    "early exit bit-identical to full depth before "
+                    "timing.  On a CPU host the digit-serial walk is ~D "
+                    "integer GEMVs vs one fused float GEMV, so quantized "
+                    "rows trail the float oracle in wall-clock; the "
+                    "apples-to-apples number is plane_cache vs "
+                    "quant_reextract (the per-step extraction the "
+                    "incremental stack removes) plus the roofline bytes "
+                    "row.  Flash-fused kernel is interpret-validated, "
+                    "not timed, off-TPU.",
+            "rows": rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        emit("attention_json", 0.0, f"wrote={json_path}")
+
+
 def main(argv=None) -> None:
     import argparse
 
@@ -896,6 +1070,7 @@ def main(argv=None) -> None:
     ipu_bench()
     online_stats()
     progressive_bench(os.path.join(json_dir, "BENCH_progressive.json"))
+    attention_bench(os.path.join(json_dir, "BENCH_attention.json"))
     serving_bench(os.path.join(json_dir, "BENCH_serving.json"))
 
 

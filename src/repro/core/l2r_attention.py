@@ -1,0 +1,276 @@
+"""Digit-serial (L2R) attention score walks over plane-stacked operands.
+
+Attention's QK^T is a batch of inner products — exactly the contraction
+the paper's composite unit streams most-significant-digit first.  This
+module maps the GEMM schedules of core/l2r_gemm.py onto the attention
+score layout: queries are the LHS (ascending plane stack on the head
+dim), cached keys the RHS (descending stack on the head dim, the
+``PlaneOperands.prepare_rhs(axis=-1)`` layout the incrementally stacked
+KV cache of models/attention.py maintains), and every significance level
+is one GQA einsum ``"bqkgd,bskd->bkgqs"`` over a contiguous slice pair.
+
+Three entry points, one arithmetic:
+
+* :func:`attn_scores_stacked` — 2D-1 fused level passes (the oracle and
+  the default schedule), bit-identical at every ``levels`` truncation to
+  the plane-pair decomposition.
+* :func:`attn_scores_streaming_scan` — per-level prefix emitter with the
+  same fold API as core/progressive.py: every prefix bit-identical to
+  the truncated stacked schedule (same fixed-window trick — both stacks
+  zero-padded by D-1 blocks, out-of-range pairs hit zeros).
+* :func:`attn_scores_streaming_while` — the early-exit ``lax.while_loop``
+  form: stops once the consumer's decision fold says every score row is
+  decided (models/attention.py uses it for margin-bounded progressive
+  decode attention).
+
+Quantization is per *vector*: each query row and each cached key slot
+carries its own scale (:func:`quantize_per_vector` — the one formula of
+core/quant.py:_symmetric_quant), so scales commute with the score
+contraction and incremental cache updates are chunking-independent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .l2r_gemm import _f32_dot_exact
+from .online import msdf_level_slices
+from .progressive import _level_walk, _while_emitter
+from .quant import (PlaneOperands, QuantConfig, _symmetric_quant,
+                    plane_count, stack_planes_lhs, stack_planes_rhs)
+
+__all__ = [
+    "quantize_per_vector",
+    "attn_scores_stacked",
+    "attn_scores_streaming_scan",
+    "attn_scores_streaming_while",
+]
+
+
+def quantize_per_vector(x: jax.Array, cfg: QuantConfig):
+    """Symmetric quantization with one scale per trailing vector.
+
+    x (..., K) -> (q (..., K) int, scale (..., 1) f32).  Used for both
+    sides of the score walk: per-query-row scales (LHS) and per-key-slot
+    scales (RHS) both broadcast against the (..., Q, S) score matrix, so
+    the int accumulator dequantizes exactly regardless of how the S axis
+    is chunked or incrementally appended.  ``quantize``'s axis argument
+    keeps only ONE axis for the scale; attention needs every leading
+    axis kept, hence the direct :func:`_symmetric_quant` call (same
+    formula — bit-identical scales).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    return _symmetric_quant(xf, amax, cfg)
+
+
+# --------------------------------------------------------------- operands
+def _check_attn_operand(op, want_side: str, n_bits: int, log2_radix: int,
+                        other) -> None:
+    if not op.matches(n_bits, log2_radix, side=want_side, contract_axis=None):
+        other_desc = other.describe() if isinstance(other, PlaneOperands) \
+            else f"array(shape={tuple(other.shape)}, dtype={other.dtype})"
+        raise ValueError(
+            f"{op.describe()} cannot feed the {want_side} slot of an "
+            f"attention score walk with n_bits={n_bits}, "
+            f"log2_radix={log2_radix} (other operand: {other_desc}); "
+            f"re-prepare the stack for this config")
+
+
+def _attn_core_stacks(qq, kq, n_bits: int, log2_radix: int):
+    """D-plane raw-digit core stacks for the stacked schedule.
+
+    qq: (B, Q, Kv, G, dh) int or a prepared LHS :class:`PlaneOperands`;
+    kq: (B, S, Kv, dh) int or a prepared RHS stack on axis -1 (the
+    incrementally stacked KV cache).  Returns (q_stack, k_stack, dh).
+    """
+    if isinstance(qq, PlaneOperands):
+        _check_attn_operand(qq, "lhs", n_bits, log2_radix, kq)
+        q_stack, dh = qq.core_stack(shifted=False), qq.k
+    else:
+        dh = qq.shape[-1]
+        q_stack = stack_planes_lhs(qq, n_bits, log2_radix, shifted=False)
+    if isinstance(kq, PlaneOperands):
+        _check_attn_operand(kq, "rhs", n_bits, log2_radix, qq)
+        k_stack = kq.core_stack(shifted=False)
+    else:
+        k_stack = stack_planes_rhs(kq, n_bits, log2_radix, axis=-1,
+                                   shifted=False)
+    return q_stack, k_stack, dh
+
+
+def _attn_window_stacks(qq, kq, n_bits: int, log2_radix: int):
+    """Zero-padded (2D-1)-block stacks for the fixed-width streaming
+    window (the attention analogue of progressive.py:_streaming_operands;
+    a window-padded cache stack is consumed with NO padding copy)."""
+    d = plane_count(n_bits, log2_radix)
+    if isinstance(qq, PlaneOperands):
+        _check_attn_operand(qq, "lhs", n_bits, log2_radix, kq)
+        q_pad, dh = qq.window_stack(), qq.k
+    else:
+        dh = qq.shape[-1]
+        q_stack = stack_planes_lhs(qq, n_bits, log2_radix, shifted=False)
+        q_pad = jnp.pad(q_stack,
+                        [(0, 0)] * (q_stack.ndim - 1) + [(0, (d - 1) * dh)])
+    if isinstance(kq, PlaneOperands):
+        _check_attn_operand(kq, "rhs", n_bits, log2_radix, qq)
+        k_pad = kq.window_stack()
+    else:
+        k_rev = stack_planes_rhs(kq, n_bits, log2_radix, axis=-1,
+                                 shifted=False)
+        k_pad = jnp.pad(k_rev,
+                        [(0, 0)] * (k_rev.ndim - 1) + [(0, (d - 1) * dh)])
+    return q_pad, k_pad, dh
+
+
+def _score_shape(qq, kq) -> tuple[int, ...]:
+    qs = qq.stack.shape if isinstance(qq, PlaneOperands) else qq.shape
+    ks = kq.stack.shape if isinstance(kq, PlaneOperands) else kq.shape
+    b, q, kv, g = qs[:4]
+    return (b, kv, g, q, ks[1])
+
+
+def _level_einsum(a_l, b_l, use_f32: bool):
+    t = jnp.einsum(
+        "bqkgd,bskd->bkgqs", a_l, b_l,
+        preferred_element_type=jnp.float32 if use_f32 else jnp.int32,
+        # HIGHEST pins true-f32 accumulation (exact under the digit-
+        # magnitude guard); DEFAULT could route through TF32/bf16
+        precision=jax.lax.Precision.HIGHEST if use_f32 else None,
+    )
+    return t.astype(jnp.int32)
+
+
+# --------------------------------------------------------- stacked schedule
+def attn_scores_stacked(
+    qq,
+    kq,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+) -> jax.Array:
+    """Level-stacked digit-serial QK^T: int32 scores (B, Kv, G, Q, S).
+
+    qq: (B, Q, Kv, G, dh) signed ints (or a prepared LHS stack); kq:
+    (B, S, Kv, dh) signed ints (or the cache's RHS stack on axis -1).
+    With ``levels=None`` this equals the int32 einsum of the raw
+    operands exactly; fewer levels give the MSDF progressive prefix,
+    pair-set-identical to the pair decomposition (the GEMM schedules'
+    truncation contract, core/online.py:msdf_level_slices).
+    """
+    d = plane_count(n_bits, log2_radix)
+    q_stack, k_stack, dh = _attn_core_stacks(qq, kq, n_bits, log2_radix)
+    slices = msdf_level_slices(d, levels)
+    acc = jnp.zeros(_score_shape(qq, kq), jnp.int32)
+    if not slices:  # levels=0: empty MSDF prefix
+        return acc
+    use_f32 = _f32_dot_exact(
+        dh, max(hi - lo + 1 for _, lo, hi in slices), log2_radix)
+    if use_f32:
+        q_stack = q_stack.astype(jnp.float32)
+        k_stack = k_stack.astype(jnp.float32)
+    for (s, i_lo, i_hi) in slices:
+        a_l = q_stack[..., i_lo * dh:(i_hi + 1) * dh]
+        r0 = (d - 1 - s + i_lo) * dh
+        b_l = k_stack[..., r0:r0 + (i_hi - i_lo + 1) * dh]
+        acc = acc + (_level_einsum(a_l, b_l, use_f32) << (log2_radix * s))
+    return acc
+
+
+# ------------------------------------------------------- streaming emitters
+def _attn_stream_setup(qq, kq, n_bits: int, log2_radix: int):
+    """Per-level ``term(ao, bo)`` of the fixed-width attention window —
+    the same closure contract as progressive.py:_stream_setup, so the
+    scan and while control flows share identical arithmetic."""
+    d = plane_count(n_bits, log2_radix)
+    q_pad, k_pad, dh = _attn_window_stacks(qq, kq, n_bits, log2_radix)
+    use_f32 = _f32_dot_exact(dh, d, log2_radix)
+    if use_f32:
+        q_pad = q_pad.astype(jnp.float32)
+        k_pad = k_pad.astype(jnp.float32)
+    w = d * dh
+
+    def term(ao, bo):
+        a_l = jax.lax.dynamic_slice_in_dim(q_pad, ao * dh, w,
+                                           axis=q_pad.ndim - 1)
+        b_l = jax.lax.dynamic_slice_in_dim(k_pad, bo * dh, w,
+                                           axis=k_pad.ndim - 1)
+        return _level_einsum(a_l, b_l, use_f32)
+
+    return term
+
+
+def attn_scores_streaming_scan(
+    qq,
+    kq,
+    fold=None,
+    init=None,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    emit: bool = False,
+):
+    """Scan the per-level MSDF score prefix stream.
+
+    ``fold(carry, partial, level_index) -> carry`` consumes each int32
+    score prefix (B, Kv, G, Q, S) as it is emitted; every prefix is
+    bit-identical to :func:`attn_scores_stacked` truncated at that
+    depth.  Returns ``(final_partial, final_fold_carry, stack_or_None)``
+    (``emit=True`` also stacks the per-level prefixes — tests only).
+    """
+    d = plane_count(n_bits, log2_radix)
+    a_off, b_off, svals = _level_walk(d, levels)
+    n_steps = int(svals.shape[0])
+    acc0 = jnp.zeros(_score_shape(qq, kq), jnp.int32)
+    if n_steps == 0:
+        empty = jnp.zeros((0, *acc0.shape), jnp.int32) if emit else None
+        return acc0, init, empty
+
+    term = _attn_stream_setup(qq, kq, n_bits, log2_radix)
+
+    def step(carry, xs):
+        acc, fold_c = carry
+        ao, bo, s, idx = xs
+        acc = acc + (term(ao, bo) << (log2_radix * s))
+        if fold is not None:
+            fold_c = fold(fold_c, acc, idx)
+        return (acc, fold_c), (acc if emit else None)
+
+    xs = (jnp.asarray(a_off), jnp.asarray(b_off), jnp.asarray(svals),
+          jnp.arange(n_steps, dtype=jnp.int32))
+    (acc, fold_c), ys = jax.lax.scan(step, (acc0, init), xs)
+    return acc, fold_c, ys
+
+
+def attn_scores_streaming_while(
+    qq,
+    kq,
+    fold=None,
+    init=None,
+    done_fn=None,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+):
+    """Early-exit streaming score walk: the SAME level walk as
+    :func:`attn_scores_streaming_scan`, run as a ``lax.while_loop``
+    that stops as soon as ``done_fn(fold_carry)`` is True (typically
+    "every score row's max and normalizer are decided" — the
+    margin-bounded progressive attention fold of models/attention.py).
+    Identical per-level arithmetic -> the prefix after ``levels_run``
+    iterations is bit-identical to the scan's, and so is the exit level.
+
+    Returns ``(partial, fold_carry, levels_run)``.
+    """
+    d = plane_count(n_bits, log2_radix)
+    a_off, b_off, svals = _level_walk(d, levels)
+    n_steps = int(svals.shape[0])
+    acc0 = jnp.zeros(_score_shape(qq, kq), jnp.int32)
+    if n_steps == 0:
+        return acc0, init, jnp.int32(0)
+
+    term = _attn_stream_setup(qq, kq, n_bits, log2_radix)
+    t, acc, fold_c = _while_emitter(term, a_off, b_off, svals, log2_radix,
+                                    acc0, fold, init, done_fn)
+    return acc, fold_c, t

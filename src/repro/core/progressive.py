@@ -153,15 +153,16 @@ def _streaming_operands(aq, bq, n_bits, log2_radix):
     rather than silently mis-slice.
     """
     d = plane_count(n_bits, log2_radix)
-    for op, want in ((aq, "lhs"), (bq, "rhs")):
+    for op, want, other in ((aq, "lhs", bq), (bq, "rhs", aq)):
         if isinstance(op, PlaneOperands) \
                 and not op.matches(n_bits, log2_radix, side=want):
+            other_desc = other.describe() if isinstance(other, PlaneOperands) \
+                else f"array(shape={tuple(other.shape)}, dtype={other.dtype})"
             raise ValueError(
-                f"PlaneOperands(side={op.side!r}, n_bits={op.n_bits}, "
-                f"log2_radix={op.log2_radix}) cannot feed the {want} slot "
+                f"{op.describe()} cannot feed the {want} slot "
                 f"of a streaming walk with n_bits={n_bits}, "
-                f"log2_radix={log2_radix}; re-prepare the stack for this "
-                f"config")
+                f"log2_radix={log2_radix} (other operand: {other_desc}); "
+                f"re-prepare the stack for this config")
     if isinstance(aq, PlaneOperands):
         a_pad = aq.window_stack()
     else:

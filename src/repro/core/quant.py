@@ -283,6 +283,16 @@ class PlaneOperands:
             st = jnp.pad(st, pads)
         return cls(st, "rhs", n_bits, log2_radix, k, ax, shifted, pad)
 
+    def describe(self) -> str:
+        """One-line layout summary for mismatch errors: the digit config
+        AND the stack shape, so a failed :meth:`matches` can say exactly
+        which side is wrong (see the dispatcher / streaming raise sites)."""
+        return (f"PlaneOperands(side={self.side!r}, n_bits={self.n_bits}, "
+                f"log2_radix={self.log2_radix}, k={self.k}, "
+                f"axis={self.axis}, shifted={self.shifted}, "
+                f"pad_planes={self.pad_planes}, "
+                f"stack.shape={tuple(self.stack.shape)})")
+
     def matches(self, n_bits: int, log2_radix: int, ndim: int | None = None,
                 side: str | None = None,
                 contract_axis: int | None = None) -> bool:

@@ -1,3 +1,3 @@
-from .kernel import flash_attention_pallas
+from .kernel import flash_attention_l2r_pallas, flash_attention_pallas
 from .ops import flash_attention
 from .ref import attention_ref

@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-import jax
+from repro.kernels.l2r_gemm.ops import resolve_backend
 
 from .kernel import flash_attention_pallas
 from .ref import attention_ref
@@ -11,10 +11,22 @@ __all__ = ["flash_attention"]
 
 
 def flash_attention(q, k, v, causal=True, window=None, scale=None,
-                    use_pallas: bool = True, interpret: bool = True):
-    """Drop-in attention. On TPU call with interpret=False (compiled
-    Pallas); this CPU container validates the kernel in interpret mode."""
-    if not use_pallas:
+                    backend=None):
+    """Drop-in attention behind the shared backend dispatch rule.
+
+    Selection is ``resolve_backend`` (explicit arg > $REPRO_L2R_BACKEND >
+    platform default) — the same rule as the L2R GEMM entry points, so
+    one env var steers the whole kernel family: ``jnp`` runs the jitted
+    oracle (the production path off-TPU), ``pallas-interpret`` the kernel
+    body on CPU (validation only), ``pallas-tpu`` the compiled kernel.
+    An explicit ``pallas-tpu`` off-TPU is rejected at resolve time with
+    the hinted error.  This entry used to default to interpret-mode
+    Pallas unconditionally — a validation configuration, orders of
+    magnitude slower than the oracle it was bit-checking — so the
+    platform default silently made every caller pay interpreter speed.
+    """
+    resolved = resolve_backend(backend)
+    if resolved == "jnp":
         return attention_ref(q, k, v, causal, window, scale)
     return flash_attention_pallas(q, k, v, causal, window, scale,
-                                  interpret=interpret)
+                                  interpret=(resolved == "pallas-interpret"))

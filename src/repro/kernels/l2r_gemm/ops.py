@@ -58,6 +58,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.l2r_attention import (attn_scores_stacked,
+                                      attn_scores_streaming_scan,
+                                      attn_scores_streaming_while)
 from repro.core.l2r_gemm import (l2r_matmul_int_stacked, stacked_gemm_planes)
 from repro.core.progressive import (ProgressiveResult, l2r_matmul_int_streaming,
                                     level_bounds, progressive_matmul)
@@ -71,7 +74,8 @@ from .kernel import (l2r_gemm_pallas, l2r_gemm_pallas_stacked,
                      l2r_gemm_pallas_streaming_planes)
 from .ref import l2r_gemm_ref
 
-__all__ = ["l2r_gemm", "l2r_gemm_progressive", "l2r_matmul_f", "l2r_conv2d",
+__all__ = ["l2r_gemm", "l2r_gemm_progressive", "l2r_attn_scores",
+           "l2r_matmul_f", "l2r_conv2d",
            "l2r_conv2d_progressive", "l2r_conv2d_progressive_while",
            "pad_to", "resolve_backend", "PlaneOperands",
            "BACKENDS", "BACKEND_ENV_VAR", "SCHEDULES"]
@@ -245,20 +249,28 @@ def _l2r_gemm_backend(
     return out[:m, :n]
 
 
-def _check_plane_operand(x, side: str, n_bits: int, log2_radix: int) -> None:
+def _describe_operand(x) -> str:
+    if isinstance(x, PlaneOperands):
+        return x.describe()
+    return f"array(shape={tuple(x.shape)}, dtype={x.dtype})"
+
+
+def _check_plane_operand(x, side: str, n_bits: int, log2_radix: int,
+                         other=None) -> None:
     if not isinstance(x, PlaneOperands):
         return
+    paired = "" if other is None \
+        else f" (other operand: {_describe_operand(other)})"
     if x.side != side:
         raise ValueError(
-            f"PlaneOperands prepared as {x.side!r} passed as the {side} "
+            f"{x.describe()} prepared as {x.side!r} passed as the {side} "
             f"operand (LHS stacks ascend, RHS stacks descend — they are "
-            f"not interchangeable)")
+            f"not interchangeable){paired}")
     if (x.n_bits, x.log2_radix) != (n_bits, log2_radix):
         raise ValueError(
-            f"PlaneOperands layout (n_bits={x.n_bits}, "
-            f"log2_radix={x.log2_radix}) does not match the call "
-            f"(n_bits={n_bits}, log2_radix={log2_radix}); re-prepare the "
-            f"stack for this config")
+            f"{x.describe()} does not match the call "
+            f"(n_bits={n_bits}, log2_radix={log2_radix}){paired}; "
+            f"re-prepare the stack for this config")
 
 
 def l2r_gemm(
@@ -313,8 +325,8 @@ def l2r_gemm(
             f"dynamic level_count scalar "
             f"(l2r_gemm_pallas_streaming(level_count=...)) for grid-level "
             f"stop-short on Pallas")
-    _check_plane_operand(aq, "lhs", n_bits, log2_radix)
-    _check_plane_operand(bq, "rhs", n_bits, log2_radix)
+    _check_plane_operand(aq, "lhs", n_bits, log2_radix, other=bq)
+    _check_plane_operand(bq, "rhs", n_bits, log2_radix, other=aq)
     if schedule == "pairs" and (isinstance(aq, PlaneOperands)
                                 or isinstance(bq, PlaneOperands)):
         raise TypeError(
@@ -369,10 +381,132 @@ def l2r_gemm_progressive(
     ``core.progressive.streaming_matmul_scan`` instead — this entry
     materializes the ``(L, M, N)`` stack it returns.
     """
-    _check_plane_operand(aq, "lhs", n_bits, log2_radix)
-    _check_plane_operand(bq, "rhs", n_bits, log2_radix)
+    _check_plane_operand(aq, "lhs", n_bits, log2_radix, other=bq)
+    _check_plane_operand(bq, "rhs", n_bits, log2_radix, other=aq)
     return _l2r_gemm_progressive_backend(aq, bq, n_bits, log2_radix, levels,
                                          bm, bk, bn, resolve_backend(backend))
+
+
+def _attn_pallas_scores(q_po: PlaneOperands, k_po: PlaneOperands,
+                        n_bits: int, log2_radix: int, levels: int | None,
+                        interpret: bool) -> jax.Array:
+    """Attention scores through the pre-stacked Pallas GEMM kernel.
+
+    The score walk is a batch of independent (Q*G, dh) x (dh, S) GEMMs —
+    one per (batch, kv-head) — and each one IS the level-stacked kernel's
+    problem, so the route is an unrolled loop of
+    ``l2r_gemm_pallas_stacked_planes`` calls over pre-shifted slices of
+    the SAME stacks the jnp schedule consumes (the cache's descending
+    head-dim blocks transpose to the kernel's (D*K, N) layout exactly —
+    plane-major descending either way).  Validation-oriented: the batch
+    loop is python-unrolled, so this is for parity runs and small decode
+    shapes, not the production serving path (which is jnp off-TPU).
+    """
+    d = plane_count(n_bits, log2_radix)
+    dh = q_po.k
+    qs = q_po.core_stack(shifted=True)   # (B, Q, Kv, G, D*dh) ascending
+    ks = k_po.core_stack(shifted=True)   # (B, S, Kv, D*dh) descending
+    b_, q_, kv, g = qs.shape[:4]
+    s_ = ks.shape[1]
+    bk = min(256, -(-dh // 128) * 128)
+    dhp = dh + (-dh) % bk
+    m0 = q_ * g
+    rows = []
+    for bi in range(b_):
+        cols = []
+        for kvi in range(kv):
+            a = qs[bi, :, kvi].reshape(m0, d, dh)
+            a = jnp.pad(a, (((0, (-m0) % 128), (0, 0), (0, dhp - dh))))
+            kb = ks[bi, :, kvi].reshape(s_, d, dh).transpose(1, 2, 0)
+            kb = jnp.pad(kb, ((0, 0), (0, dhp - dh), (0, (-s_) % 128)))
+            t = l2r_gemm_pallas_stacked_planes(
+                a.reshape(a.shape[0], -1), kb.reshape(-1, kb.shape[-1]),
+                n_bits, log2_radix, levels, 128, bk, 128,
+                interpret=interpret)
+            cols.append(t[:m0, :s_].reshape(q_, g, s_).transpose(1, 0, 2))
+        rows.append(jnp.stack(cols, axis=0))
+    return jnp.stack(rows, axis=0)  # (B, Kv, G, Q, S)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "log2_radix", "levels", "schedule", "backend",
+                     "early_exit"),
+)
+def _l2r_attn_scores_backend(qq, kq, n_bits, log2_radix, levels, schedule,
+                             backend, early_exit):
+    if backend == "jnp":
+        if schedule == "streaming":
+            if early_exit:
+                acc, _, _ = attn_scores_streaming_while(
+                    qq, kq, n_bits=n_bits, log2_radix=log2_radix,
+                    levels=levels)
+            else:
+                acc, _, _ = attn_scores_streaming_scan(
+                    qq, kq, n_bits=n_bits, log2_radix=log2_radix,
+                    levels=levels)
+            return acc
+        return attn_scores_stacked(qq, kq, n_bits, log2_radix, levels)
+    # schedule="streaming" asks only for the FINAL prefix here, and the
+    # stacked kernel walks the identical (level, k-block) schedule — same
+    # argument as _l2r_gemm_backend's streaming-on-Pallas route.
+    q_po = qq if isinstance(qq, PlaneOperands) \
+        else PlaneOperands.prepare_lhs(qq, n_bits, log2_radix)
+    k_po = kq if isinstance(kq, PlaneOperands) \
+        else PlaneOperands.prepare_rhs(kq, n_bits, log2_radix, axis=-1)
+    return _attn_pallas_scores(q_po, k_po, n_bits, log2_radix, levels,
+                               backend == "pallas-interpret")
+
+
+def l2r_attn_scores(
+    qq,
+    kq,
+    n_bits: int = 8,
+    log2_radix: int = 2,
+    levels: int | None = None,
+    schedule: str = "stacked",
+    backend: str | None = None,
+    early_exit: bool = False,
+) -> jax.Array:
+    """Digit-serial QK^T scores with backend dispatch: int32 (B,Kv,G,Q,S).
+
+    ``qq`` is the grouped query block (B, Q, Kv, G, dh) as signed ints or
+    a prepared LHS :class:`PlaneOperands`; ``kq`` the cached keys
+    (B, S, Kv, dh) as signed ints or the KV cache's incrementally
+    stacked RHS operand (models/attention.py:kv_plane_operands — plane
+    extraction then happened at append time, not per decode step).
+    Bit-identical across backends and schedules at every ``levels``
+    truncation, by the same contract as :func:`l2r_gemm`; softmax and PV
+    stay float outside this entry (core/l2r_attention.py).
+
+    ``schedule="streaming"`` runs the level walk as the per-level prefix
+    emitter (jnp; on Pallas the stacked kernel IS the final prefix);
+    ``early_exit`` additionally swaps in the ``lax.while_loop`` emitter —
+    control-flow-only here (no consumer fold, every level runs), rejected
+    off the jnp streaming path exactly as in :func:`l2r_gemm`.  Consumers
+    that fold the stream (margin-bounded progressive decode) use
+    ``core.l2r_attention.attn_scores_streaming_while`` directly.
+    """
+    if schedule not in ("stacked", "streaming"):
+        raise ValueError(
+            f"l2r_attn_scores schedule must be 'stacked' or 'streaming', "
+            f"got {schedule!r} (the pairs baseline is a GEMM-only "
+            f"regression schedule)")
+    if early_exit and schedule != "streaming":
+        raise ValueError(
+            f"early_exit is a streaming-schedule control flow; "
+            f"schedule={schedule!r} has no level loop to stop short "
+            f"(it would be silently dropped)")
+    resolved = resolve_backend(backend)
+    if early_exit and resolved != "jnp":
+        raise ValueError(
+            f"early_exit=True is the jnp while-loop emitter; the "
+            f"{resolved!r} backend cannot shrink its grid at runtime and "
+            f"would silently drop the flag")
+    _check_plane_operand(qq, "lhs", n_bits, log2_radix, other=kq)
+    _check_plane_operand(kq, "rhs", n_bits, log2_radix, other=qq)
+    return _l2r_attn_scores_backend(qq, kq, n_bits, log2_radix, levels,
+                                    schedule, resolved, early_exit)
 
 
 def l2r_matmul_f(

@@ -135,6 +135,75 @@ def roofline_terms(flops: float, bytes_hbm: float, wire_bytes: float,
     )
 
 
+def attn_decode_step_bytes(batch: int, cache_len: int, kv_heads: int,
+                           head_dim: int, *, n_bits: int = 8,
+                           log2_radix: int = 2, kv_dtype_bytes: int = 2,
+                           levels: int | None = None) -> dict[str, Any]:
+    """HBM bytes one decode step's attention moves per layer, per mode.
+
+    Decode attention is memory-bound — the single-query GEMV does
+    2*L*dh FLOPs per head against an L-slot cache read, far left of the
+    ridge point — so bytes-per-step IS the roofline cost.  Four modes,
+    matching ``models/attention.py:decode_attention``:
+
+      float            read K + V from the float cache;
+      quant_reextract  digit-serial scores WITHOUT the plane cache:
+                       the float K cache is read every step to
+                       re-quantize and re-extract planes (extraction is
+                       on-chip, so HBM traffic equals the float path —
+                       the waste is compute and cache-bandwidth, paid
+                       once per step per layer);
+      plane_cache      the incrementally plane-stacked cache: the score
+                       walk reads the int8 window-padded plane stack
+                       ((2D-1) blocks of head_dim int8 per slot) plus
+                       one f32 scale per slot, and never touches the
+                       float K cache; V is still read for PV;
+      plane_cache_truncated
+                       same, but a ``levels``-deep walk (truncation or
+                       the margin-bounded early exit) touches only the
+                       union of its sliding level windows:
+                       min(D + levels - 1, 2D - 1) of the 2D-1 blocks.
+
+    Returns per-mode ``{k_bytes, v_bytes, scale_bytes, total_bytes,
+    memory_s}`` plus the config echo; ``memory_s`` uses the per-chip
+    HBM bandwidth constant above.
+    """
+    d = n_bits // log2_radix
+    n_blocks = 2 * d - 1
+    slots = batch * cache_len * kv_heads
+    v_bytes = slots * head_dim * kv_dtype_bytes
+    k_float = slots * head_dim * kv_dtype_bytes
+    k_planes_full = slots * n_blocks * head_dim  # int8
+    scale_bytes = slots * 4  # f32 per-slot scale
+    lv = n_blocks if levels is None else max(0, min(levels, n_blocks))
+    touched = 0 if lv == 0 else min(d + lv - 1, n_blocks)
+    k_planes_trunc = slots * touched * head_dim
+
+    def mode(k_bytes: float, sc: float = 0.0) -> dict[str, float]:
+        total = k_bytes + v_bytes + sc
+        return {"k_bytes": k_bytes, "v_bytes": v_bytes, "scale_bytes": sc,
+                "total_bytes": total, "memory_s": total / HBM_BW}
+
+    modes = {
+        "float": mode(k_float),
+        "quant_reextract": mode(k_float),
+        "plane_cache": mode(k_planes_full, scale_bytes),
+        "plane_cache_truncated": mode(k_planes_trunc, scale_bytes),
+    }
+    return {
+        "batch": batch, "cache_len": cache_len, "kv_heads": kv_heads,
+        "head_dim": head_dim, "n_bits": n_bits, "log2_radix": log2_radix,
+        "kv_dtype_bytes": kv_dtype_bytes, "levels": lv,
+        "plane_blocks_touched": touched,
+        "modes": modes,
+        "plane_cache_vs_float":
+            modes["plane_cache"]["total_bytes"] / modes["float"]["total_bytes"],
+        "truncated_vs_plane_cache":
+            (modes["plane_cache_truncated"]["total_bytes"]
+             / modes["plane_cache"]["total_bytes"]),
+    }
+
+
 def model_flops(cfg, desc_tree, n_tokens: int, kind: str) -> float:
     """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params
     (routed experts scaled by k/E), embedding lookup excluded, logit

@@ -10,21 +10,55 @@ attends directly against the cache.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.l2r_attention import (attn_scores_stacked,
+                                      attn_scores_streaming_while,
+                                      quantize_per_vector)
+from repro.core.progressive import decision_state, level_bounds
+from repro.core.quant import PlaneOperands, QuantConfig, _symmetric_quant
 
 __all__ = [
     "apply_rope",
     "chunked_attention",
     "decode_attention",
+    "attn_exit_tap",
     "KVCache",
     "init_kv_cache",
     "update_kv_cache",
+    "kv_plane_operands",
 ]
+
+
+# ------------------------------------------------- progressive exit-level tap
+_EXIT_TAP: list | None = None
+
+
+@contextlib.contextmanager
+def attn_exit_tap():
+    """Collect per-call decode-attention exit levels (EAGER calls only).
+
+    Yields a list; every eager ``decode_attention(..., early_exit=True)``
+    call inside the context appends its levels-run scalar (int).  Calls
+    under ``jit`` see tracers and record nothing — the tap is a
+    demo/diagnostic hook (examples/progressive_attention.py), not an aux
+    output channel.  Call order is evaluation order, i.e. layer order
+    for a single decode step.
+    """
+    global _EXIT_TAP
+    prev, records = _EXIT_TAP, []
+    _EXIT_TAP = records
+    try:
+        yield records
+    finally:
+        _EXIT_TAP = prev
 
 
 # ----------------------------------------------------------------- RoPE
@@ -106,6 +140,8 @@ def chunked_attention(
     q_offset: int = 0,
     score_dtype=jnp.float32,
     head_shard: bool = False,
+    l2r: QuantConfig | None = None,
+    levels: int | None = None,
 ) -> jax.Array:
     """GQA flash-style attention.
 
@@ -114,6 +150,15 @@ def chunked_attention(
     FLOPs beyond boundary chunks); inner lax.scan with online softmax.
     ``q_offset``: absolute position of q[0] relative to k[0] (prefill
     continuation); causal masks compare absolute positions.
+
+    ``l2r`` routes the QK^T contraction through the digit-serial score
+    walk (core/l2r_attention.py): q rows and k slots quantize with
+    per-vector scales (chunking-independent — prefill scores agree with
+    any decode-step recomputation of the same tokens), planes are
+    extracted ONCE per call, and ``levels`` truncates the MSDF stream
+    (None = exact W8A8 scores).  Softmax and PV stay float (the exact
+    first cut); quantized scores accumulate in f32 regardless of
+    ``score_dtype``.
     """
     b, sq, h, dh = q.shape
     _, skv, kv_heads, _ = k.shape
@@ -142,11 +187,28 @@ def chunked_attention(
         v = hint_uneven(v, None, None, "model", None)
     neg = jnp.float32(-1e30)  # finite sentinel: -inf breeds NaNs in
     #                           fully-masked boundary blocks
+    q_po = k_po = qs = ks_t = None
+    if l2r is not None:
+        # per-vector quantization + ONE plane extraction per call; the
+        # seq axes slice through both stacks (plane blocks live on the
+        # head dim), so chunk slicing below never re-extracts
+        qq, qs = quantize_per_vector(q, l2r)
+        kq, ks = quantize_per_vector(k, l2r)
+        q_po = PlaneOperands.prepare_lhs(qq, l2r.n_bits, l2r.log2_radix)
+        k_po = PlaneOperands.prepare_rhs(kq, l2r.n_bits, l2r.log2_radix,
+                                         axis=-1)
+        ks_t = ks[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
     outs = []
     for qi in range(n_q):
         q_start = qi * q_chunk
         qc = min(q_chunk, sq - q_start)
         q_blk = jax.lax.slice_in_dim(q, q_start, q_start + qc, axis=1)
+        if l2r is not None:
+            q_blk_po = dataclasses.replace(
+                q_po, stack=jax.lax.slice_in_dim(
+                    q_po.stack, q_start, q_start + qc, axis=1))
+            qs_t = jax.lax.slice_in_dim(
+                qs, q_start, q_start + qc, axis=1).transpose(0, 2, 3, 1, 4)
         q_abs_end = q_offset + q_start + qc - 1  # last query position
         # static KV range for this query chunk
         hi = min(skv, q_abs_end + 1) if causal else skv
@@ -162,7 +224,20 @@ def chunked_attention(
             acc, m, l = carry
             k_blk = jax.lax.dynamic_slice_in_dim(k, kc_i * kv_chunk, kv_chunk, axis=1)
             v_blk = jax.lax.dynamic_slice_in_dim(v, kc_i * kv_chunk, kv_chunk, axis=1)
-            s = _block_scores(q_blk, k_blk, scale, softcap, score_dtype)
+            if l2r is None:
+                s = _block_scores(q_blk, k_blk, scale, softcap, score_dtype)
+            else:
+                k_blk_po = dataclasses.replace(
+                    k_po, stack=jax.lax.dynamic_slice_in_dim(
+                        k_po.stack, kc_i * kv_chunk, kv_chunk, axis=1))
+                ks_blk = jax.lax.dynamic_slice_in_dim(
+                    ks_t, kc_i * kv_chunk, kv_chunk, axis=ks_t.ndim - 1)
+                s_int = attn_scores_stacked(q_blk_po, k_blk_po, l2r.n_bits,
+                                            l2r.log2_radix, levels)
+                s = s_int.astype(jnp.float32) * qs_t * ks_blk \
+                    * jnp.float32(scale)
+                if softcap is not None:
+                    s = jnp.tanh(s / softcap) * softcap
             kv_pos = kc_i * kv_chunk + jnp.arange(kv_chunk)
             mask = jnp.ones((qc, kv_chunk), bool)
             if causal:
@@ -208,25 +283,126 @@ def decode_attention(
     window: int | None = None,
     scale: float | None = None,
     softcap: float | None = None,
+    l2r: QuantConfig | None = None,
+    levels: int | None = None,
+    early_exit: bool = False,
+    exit_tol: float = 1e-4,
+    k_planes: jax.Array | PlaneOperands | None = None,
+    k_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Single-token attention against a (possibly ring) cache.
 
     q: (B, 1, H, dh); caches: (B, L, Kv, dh); kv_positions: (B, L) int32
     absolute positions (-1 = empty slot); q_position: (B,) int32.
+
+    ``l2r`` routes QK^T through the digit-serial score walk
+    (core/l2r_attention.py) with exact softmax + float PV; ``levels``
+    truncates the MSDF stream.  ``k_planes``/``k_scale`` feed the
+    incrementally plane-stacked KV cache (:func:`update_kv_cache` with a
+    quant config): the per-slot key planes/scales are then consumed
+    directly — NO per-step plane re-extraction over the history —
+    bit-identical to quantizing ``k_cache`` here (both quantize the
+    stored cache values with the same per-vector formula).
+
+    ``early_exit=True`` runs the margin-bounded progressive walk: a
+    ``lax.while_loop`` over significance levels that stops once every
+    (batch, kv-head, group) score row has BOTH its running max decided
+    (the argmax margin beats the scaled tail bound —
+    core/progressive.py:decision_state) and its normalizer pinned (every
+    unmasked score known to within ``exit_tol``, so softmax weights are
+    stable at the tolerance).  Rows that never decide consume the whole
+    stream, making the output exactly the full-depth quantized result;
+    decided rows return softmax over the exit-level prefix.  Incompatible
+    with ``softcap``.
     """
     b, _, h, dh = q.shape
     kv_heads = k_cache.shape[2]
     g = h // kv_heads
     scale = scale if scale is not None else 1.0 / math.sqrt(dh)
     qg = q.reshape(b, 1, kv_heads, g, dh)
-    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
-                   preferred_element_type=jnp.float32) * scale
-    if softcap is not None:
-        s = jnp.tanh(s / softcap) * softcap
     valid = (kv_positions >= 0) & (kv_positions <= q_position[:, None])
     if window is not None:
         valid &= kv_positions > (q_position[:, None] - window)
-    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    valid_b = valid[:, None, None, None, :]  # (B, 1, 1, 1, L)
+
+    if l2r is None:
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(valid_b, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_cache.dtype), v_cache,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(b, 1, h, dh).astype(v_cache.dtype)
+
+    # ---- digit-serial QK^T -------------------------------------------
+    qq, qs = quantize_per_vector(qg, l2r)
+    qs_t = qs.transpose(0, 2, 3, 1, 4)  # (B, Kv, G, 1, 1)
+    if k_planes is not None:
+        assert k_scale is not None, \
+            "plane-stacked cache: k_planes and k_scale travel together"
+        k_op = k_planes if isinstance(k_planes, PlaneOperands) else \
+            PlaneOperands(k_planes, "rhs", l2r.n_bits, l2r.log2_radix,
+                          dh, -1, False, l2r.planes - 1)
+        ks = k_scale
+    else:
+        kq, ks3 = quantize_per_vector(k_cache, l2r)
+        k_op, ks = kq, ks3[..., 0]
+    ks_t = ks.transpose(0, 2, 1)[:, :, None, None, :]  # (B, Kv, 1, 1, L)
+    sf = jnp.float32(scale)
+
+    def dequant(acc):
+        return acc.astype(jnp.float32) * qs_t * ks_t * sf
+
+    if not early_exit:
+        s_int = attn_scores_stacked(qq, k_op, l2r.n_bits, l2r.log2_radix,
+                                    levels)
+        s = dequant(s_int)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(valid_b, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_cache.dtype), v_cache,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(b, 1, h, dh).astype(v_cache.dtype)
+
+    # ---- margin-bounded progressive walk -----------------------------
+    if softcap is not None:
+        raise ValueError("early_exit attention does not compose with "
+                         "softcap: tanh re-scales the score margins the "
+                         "tail bounds are stated in")
+    bounds = level_bounds(l2r.planes, l2r.log2_radix, dh, levels)
+    n_levels = int(bounds.f32.shape[0])
+    safety = 1e-5
+    eps = 8.0 * jnp.finfo(jnp.float32).eps
+    neg = jnp.float32(-1e30)
+
+    def fold(carry, partial, idx):
+        done, lv = carry
+        values = jnp.where(valid_b, dequant(partial), neg)[:, :, :, 0, :]
+        vmax = jnp.max(jnp.abs(jnp.where(valid_b[:, :, :, 0, :], values,
+                                         0.0)), axis=-1, keepdims=True)
+        # per-entry bound on the unseen tail, in the scaled score domain;
+        # masked slots are EXACT (-1e30 by fiat) -> bound 0
+        bvec = bounds.f32[idx] * qs_t[:, :, :, 0, :] * ks_t[:, :, :, 0, :] \
+            * sf * (1.0 + safety) + eps * vmax
+        bvec = jnp.where(valid_b[:, :, :, 0, :], bvec, 0.0)
+        max_decided, _ = decision_state(values, bvec)
+        norm_decided = jnp.max(bvec, axis=-1) <= exit_tol
+        newly = (max_decided & norm_decided) & ~done
+        lv = jnp.where(newly, idx, lv)
+        return done | newly, lv
+
+    init = (jnp.zeros((b, kv_heads, g), bool),
+            jnp.full((b, kv_heads, g), max(n_levels - 1, 0), jnp.int32))
+    acc, (done, lv), levels_run = attn_scores_streaming_while(
+        qq, k_op, fold, init, lambda c: jnp.all(c[0]),
+        l2r.n_bits, l2r.log2_radix, levels)
+    if _EXIT_TAP is not None and not isinstance(levels_run, jax.core.Tracer):
+        _EXIT_TAP.append({"levels_run": int(levels_run),
+                          "exit_levels": np.asarray(lv)})
+    s = jnp.where(valid_b, dequant(acc), -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
@@ -236,37 +412,99 @@ def decode_attention(
 # ------------------------------------------------------------- KV caches
 class KVCache(NamedTuple):
     """Full or ring KV cache. ``length`` is the allocated size (the
-    window for ring caches); positions tracks absolute token positions."""
+    window for ring caches); positions tracks absolute token positions.
+
+    ``k_planes``/``k_scale`` (present iff the cache was built with a
+    quant config) are the **incrementally plane-stacked** key cache:
+    every update also quantizes the new keys per slot and writes their
+    raw-digit descending plane stack — window-padded to 2D-1 blocks, the
+    ``PlaneOperands.prepare_rhs(axis=-1, window_pad=True)`` layout — so
+    decode-step digit-serial QK^T consumes a ready operand instead of
+    re-extracting planes over the whole history each step (the attention
+    analogue of the window-padded LM-head weight cache).  ``None``
+    fields are empty pytree nodes: existing cache trees are unchanged.
+    """
 
     k: jax.Array  # (B, L, Kv, dh)
     v: jax.Array  # (B, L, Kv, dh)
     positions: jax.Array  # (B, L) int32, -1 = empty
+    k_planes: jax.Array | None = None  # (B, L, Kv, (2D-1)*dh) int8
+    k_scale: jax.Array | None = None   # (B, L, Kv) f32 per-slot scales
 
 
 def init_kv_cache(batch: int, length: int, kv_heads: int, head_dim: int,
-                  dtype=jnp.bfloat16) -> KVCache:
+                  dtype=jnp.bfloat16,
+                  quant: QuantConfig | None = None) -> KVCache:
+    k_planes = k_scale = None
+    if quant is not None:
+        d = quant.planes
+        k_planes = jnp.zeros(
+            (batch, length, kv_heads, (2 * d - 1) * head_dim), jnp.int8)
+        # empty slots carry the scale a zero key vector quantizes to, so
+        # the whole stacked cache — used slots or not — is bit-identical
+        # to re-extracting planes from the (zero-initialized) float cache
+        _, s0 = _symmetric_quant(jnp.zeros((), jnp.float32),
+                                 jnp.zeros((), jnp.float32), quant)
+        k_scale = jnp.full((batch, length, kv_heads), s0, jnp.float32)
     return KVCache(
         k=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
         v=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
         positions=jnp.full((batch, length), -1, jnp.int32),
+        k_planes=k_planes,
+        k_scale=k_scale,
     )
 
 
 def update_kv_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
-                    positions: jax.Array) -> KVCache:
+                    positions: jax.Array,
+                    quant: QuantConfig | None = None) -> KVCache:
     """Insert S new entries at slots positions % L (ring semantics; for a
     full-length cache L >= max position this is plain indexed write).
 
     k_new/v_new: (B, S, Kv, dh); positions: (B, S) absolute.
+
+    A plane-stacked cache (``init_kv_cache(..., quant=...)``) must pass
+    the same ``quant`` here: the new keys' digit planes append into the
+    pre-allocated stack incrementally.  The quantized value is the key
+    AS STORED in the float cache (after the cache-dtype cast), so the
+    incremental stack is bit-identical to re-extracting planes from the
+    full float cache at any later step.
     """
     length = cache.k.shape[1]
     slots = positions % length  # (B, S)
     def write(buf, new):
         return jax.vmap(lambda b, s, n: b.at[s].set(n))(buf, slots, new)
+    k_planes, k_scale = cache.k_planes, cache.k_scale
+    if k_planes is not None:
+        assert quant is not None, \
+            "plane-stacked KV cache: pass the QuantConfig that built it"
+        from repro.core.quant import stack_planes_rhs
+        d = quant.planes
+        dh = cache.k.shape[-1]
+        kq, ks = quantize_per_vector(k_new.astype(cache.k.dtype), quant)
+        new_stack = stack_planes_rhs(kq, quant.n_bits, quant.log2_radix,
+                                     axis=-1, shifted=False)
+        new_stack = jnp.pad(
+            new_stack, [(0, 0)] * (new_stack.ndim - 1) + [(0, (d - 1) * dh)])
+        k_planes = write(k_planes, new_stack)
+        k_scale = write(k_scale, ks[..., 0])
     return KVCache(
         k=write(cache.k, k_new.astype(cache.k.dtype)),
         v=write(cache.v, v_new.astype(cache.v.dtype)),
         positions=jax.vmap(lambda p, s, n: p.at[s].set(n))(
             cache.positions, slots, positions
         ),
+        k_planes=k_planes,
+        k_scale=k_scale,
     )
+
+
+def kv_plane_operands(cache: KVCache, quant: QuantConfig) -> PlaneOperands:
+    """View the cache's incremental plane stack as the RHS operand the
+    score walks consume (raw digits, descending on the head dim,
+    window-padded — zero per-step operand prep)."""
+    assert cache.k_planes is not None, \
+        "cache has no plane stack: init_kv_cache(..., quant=...)"
+    return PlaneOperands(cache.k_planes, "rhs", quant.n_bits,
+                         quant.log2_radix, cache.k.shape[-1], -1, False,
+                         quant.planes - 1)

@@ -82,6 +82,16 @@ class ModelConfig:
     l2r: QuantConfig | None = None
     l2r_levels: int | None = None
 
+    # --- digit-serial attention (models/attention.py) ---
+    attn_l2r: QuantConfig | None = None  # quantized QK^T through the L2R
+    # score walk, on an incrementally plane-stacked KV cache; softmax/PV
+    # stay float
+    attn_levels: int | None = None  # MSDF truncation of the score stream
+    attn_early_exit: bool = False  # margin-bounded progressive decode
+    # attention: the per-row score walk stops once max+normalizer are
+    # decided within attn_exit_tol
+    attn_exit_tol: float = 1e-4
+
     # --- precision policy ---
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"

@@ -106,19 +106,26 @@ def attn_apply(
     k = apply_rope(k, rope_positions, cfg.rope_theta, cfg.rope_mode, cfg.mrope_sections)
 
     if mode == "decode":
-        cache = update_kv_cache(cache, k, v, positions)
+        cache = update_kv_cache(cache, k, v, positions, quant=cfg.attn_l2r)
         out = decode_attention(
             q, cache.k, cache.v, cache.positions, positions[:, 0],
             window=window, scale=cfg.attn_scale, softcap=cfg.logit_softcap,
+            l2r=cfg.attn_l2r, levels=cfg.attn_levels,
+            early_exit=cfg.attn_early_exit, exit_tol=cfg.attn_exit_tol,
+            k_planes=cache.k_planes, k_scale=cache.k_scale,
         )
     else:
         if mode == "prefill":
-            cache = update_kv_cache(cache, k, v, positions)
+            # a plane-stacked cache fills incrementally here too: decode
+            # steps after this prefill consume a ready operand
+            cache = update_kv_cache(cache, k, v, positions,
+                                    quant=cfg.attn_l2r)
         out = chunked_attention(
             q, k, v, causal=True, window=window, scale=cfg.attn_scale,
             softcap=cfg.logit_softcap,
             score_dtype=jnp.dtype(cfg.attn_score_dtype),
             head_shard=cfg.attn_head_shard,
+            l2r=cfg.attn_l2r, levels=cfg.attn_levels,
         )
     out = hint(out.reshape(b, s, h * dh), None, None, "model")
     return dense(out, p["wo"], cfg.l2r, cfg.l2r_levels), cache
@@ -158,9 +165,11 @@ def layer_build(cfg: ModelConfig, kinds: tuple[str, str], layer_idx: int) -> dic
 
 def _mixer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
     if kind == "global":
-        return init_kv_cache(batch, max_len, cfg.n_kv, cfg.head_dim, dtype)
+        return init_kv_cache(batch, max_len, cfg.n_kv, cfg.head_dim, dtype,
+                             quant=cfg.attn_l2r)
     if kind == "local":
-        return init_kv_cache(batch, min(cfg.window, max_len), cfg.n_kv, cfg.head_dim, dtype)
+        return init_kv_cache(batch, min(cfg.window, max_len), cfg.n_kv,
+                             cfg.head_dim, dtype, quant=cfg.attn_l2r)
     if kind == "ssd":
         return init_ssm_state(cfg, batch)
     if kind == "rec":

@@ -132,13 +132,25 @@ def state_specs(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
     m = mesh.shape.get("model", 1)
 
     def kv_spec():
+        # the incrementally plane-stacked key cache (cfg.attn_l2r) adds
+        # k_planes/k_scale leaves; their specs mirror the float cache
+        # (None fields stay empty pytree nodes when the knob is off).
+        # The plane axis is (2D-1)*dh — never sharded (head_dim shards
+        # would split plane blocks); the scale has no head_dim axis.
+        planes = cfg.attn_l2r is not None
         if kv_shard == "seq":
             seq_ax = "model"
-            return KVCache(k=P(b, seq_ax, None, None),
-                           v=P(b, seq_ax, None, None),
-                           positions=P(b, seq_ax))
-        return KVCache(k=P(b, None, kvh, hd), v=P(b, None, kvh, hd),
-                       positions=P(b, None))
+            return KVCache(
+                k=P(b, seq_ax, None, None),
+                v=P(b, seq_ax, None, None),
+                positions=P(b, seq_ax),
+                k_planes=P(b, seq_ax, None, None) if planes else None,
+                k_scale=P(b, seq_ax, None) if planes else None)
+        return KVCache(
+            k=P(b, None, kvh, hd), v=P(b, None, kvh, hd),
+            positions=P(b, None),
+            k_planes=P(b, None, kvh, None) if planes else None,
+            k_scale=P(b, None, kvh) if planes else None)
 
     def mixer_spec(kind: str):
         if kind in ("global", "local"):

@@ -1,0 +1,377 @@
+"""Digit-serial attention: score-walk bit-exactness, the incrementally
+plane-stacked KV cache, margin-bounded progressive decode, the dispatcher
+entry, and the flash-fused level-walk kernel."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.l2r_attention import (attn_scores_stacked,
+                                      attn_scores_streaming_scan,
+                                      attn_scores_streaming_while,
+                                      quantize_per_vector)
+from repro.core.quant import PlaneOperands, QuantConfig, stack_planes_rhs
+from repro.models.attention import (attn_exit_tap, decode_attention,
+                                    chunked_attention, init_kv_cache,
+                                    kv_plane_operands, update_kv_cache)
+from repro.models.common import materialize
+from repro.models.transformer import lm_build
+from repro.serve.engine import greedy_generate
+
+CONFIGS = [(8, 2), (8, 4), (4, 2), (4, 1)]
+
+
+def _rand_qk(rng, b=2, q=3, kv=2, g=2, s=7, dh=16, cfg=QuantConfig()):
+    qf = jnp.asarray(rng.standard_normal((b, q, kv, g, dh)), jnp.float32)
+    kf = jnp.asarray(rng.standard_normal((b, s, kv, dh)), jnp.float32)
+    qq, _ = quantize_per_vector(qf, cfg)
+    kq, _ = quantize_per_vector(kf, cfg)
+    return qq, kq
+
+
+# ------------------------------------------------------------- score walks
+@pytest.mark.parametrize("n_bits,log2_radix", CONFIGS)
+def test_stacked_scores_equal_int_einsum(n_bits, log2_radix):
+    """Full-depth stacked scores == the exact int32 GQA einsum, for every
+    digit config (the plane decomposition is exact)."""
+    cfg = QuantConfig(n_bits=n_bits, log2_radix=log2_radix)
+    qq, kq = _rand_qk(np.random.default_rng(0), cfg=cfg)
+    ref = jnp.einsum("bqkgd,bskd->bkgqs", qq.astype(jnp.int32),
+                     kq.astype(jnp.int32))
+    out = attn_scores_stacked(qq, kq, n_bits, log2_radix)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("n_bits,log2_radix", CONFIGS)
+def test_streaming_prefixes_bit_identical_to_truncated_stacked(
+        n_bits, log2_radix):
+    """Every streaming score prefix == the stacked schedule truncated at
+    that level — the acceptance contract of the score walk."""
+    cfg = QuantConfig(n_bits=n_bits, log2_radix=log2_radix)
+    qq, kq = _rand_qk(np.random.default_rng(1), cfg=cfg)
+    _, _, stack = attn_scores_streaming_scan(
+        qq, kq, n_bits=n_bits, log2_radix=log2_radix, emit=True)
+    for lvl in range(stack.shape[0]):
+        tr = attn_scores_stacked(qq, kq, n_bits, log2_radix, levels=lvl + 1)
+        np.testing.assert_array_equal(np.asarray(stack[lvl]), np.asarray(tr),
+                                      err_msg=f"level {lvl}")
+
+
+def test_while_walk_matches_scan_and_counts_levels():
+    qq, kq = _rand_qk(np.random.default_rng(2))
+    acc_s, _, _ = attn_scores_streaming_scan(qq, kq)
+    acc_w, _, t = attn_scores_streaming_while(qq, kq)
+    np.testing.assert_array_equal(np.asarray(acc_s), np.asarray(acc_w))
+    assert int(t) == 2 * QuantConfig().planes - 1
+
+
+def test_prestacked_operands_bit_identical():
+    """Prepared PlaneOperands (incl. the cache's window-padded RHS) feed
+    the walks bit-identically to inline extraction."""
+    qq, kq = _rand_qk(np.random.default_rng(3))
+    ref = attn_scores_stacked(qq, kq)
+    q_po = PlaneOperands.prepare_lhs(qq, 8, 2)
+    k_po = PlaneOperands.prepare_rhs(kq, 8, 2, axis=-1, window_pad=True)
+    np.testing.assert_array_equal(np.asarray(attn_scores_stacked(q_po, k_po)),
+                                  np.asarray(ref))
+    acc, _, _ = attn_scores_streaming_scan(q_po, k_po)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(ref))
+
+
+def test_levels_zero_is_empty_prefix():
+    qq, kq = _rand_qk(np.random.default_rng(4))
+    assert not np.any(np.asarray(attn_scores_stacked(qq, kq, levels=0)))
+
+
+def test_mismatched_operand_raises_with_both_layouts():
+    """A stack prepared for another digit config fails with BOTH operands'
+    layouts in the message (satellite: actionable mismatch errors)."""
+    qq, kq = _rand_qk(np.random.default_rng(5))
+    q_po = PlaneOperands.prepare_lhs(qq, 8, 4)  # wrong radix for the call
+    with pytest.raises(ValueError) as ei:
+        attn_scores_stacked(q_po, kq, 8, 2)
+    msg = str(ei.value)
+    assert "PlaneOperands(side='lhs'" in msg and "log2_radix=4" in msg
+    assert "other operand" in msg and "array(shape=" in msg
+
+
+# -------------------------------------------- incrementally stacked KV cache
+def test_incremental_plane_cache_bit_identical_to_reextraction():
+    """Appending per-token digit planes reproduces, bit for bit, the stack
+    (and scales) of re-extracting planes from the full float cache — the
+    invariant that lets decode skip per-step K extraction."""
+    rng = np.random.default_rng(6)
+    cfg = QuantConfig()
+    b, length, kvh, dh = 2, 12, 2, 16
+    cache = init_kv_cache(b, length, kvh, dh, jnp.float32, quant=cfg)
+    for t in range(9):
+        kn = jnp.asarray(rng.standard_normal((b, 1, kvh, dh)), jnp.float32)
+        vn = jnp.asarray(rng.standard_normal((b, 1, kvh, dh)), jnp.float32)
+        pos = jnp.full((b, 1), t, jnp.int32)
+        cache = update_kv_cache(cache, kn, vn, pos, quant=cfg)
+    kq, ks = quantize_per_vector(cache.k, cfg)
+    restack = stack_planes_rhs(kq, cfg.n_bits, cfg.log2_radix, axis=-1,
+                               shifted=False)
+    restack = jnp.pad(restack, ((0, 0), (0, 0), (0, 0),
+                                (0, (cfg.planes - 1) * dh)))
+    np.testing.assert_array_equal(np.asarray(cache.k_planes),
+                                  np.asarray(restack))
+    np.testing.assert_array_equal(np.asarray(cache.k_scale),
+                                  np.asarray(ks[..., 0]))
+    po = kv_plane_operands(cache, cfg)
+    assert po.matches(cfg.n_bits, cfg.log2_radix, side="rhs")
+
+
+def test_incremental_cache_chunk_independent():
+    """One 9-token prefill append == nine 1-token decode appends."""
+    rng = np.random.default_rng(7)
+    cfg = QuantConfig()
+    b, length, kvh, dh = 1, 12, 2, 8
+    ks = jnp.asarray(rng.standard_normal((b, 9, kvh, dh)), jnp.float32)
+    vs = jnp.asarray(rng.standard_normal((b, 9, kvh, dh)), jnp.float32)
+    pos = jnp.asarray(np.arange(9)[None], jnp.int32)
+    c_all = update_kv_cache(init_kv_cache(b, length, kvh, dh, jnp.float32,
+                                          quant=cfg), ks, vs, pos, quant=cfg)
+    c_one = init_kv_cache(b, length, kvh, dh, jnp.float32, quant=cfg)
+    for t in range(9):
+        c_one = update_kv_cache(c_one, ks[:, t:t + 1], vs[:, t:t + 1],
+                                pos[:, t:t + 1], quant=cfg)
+    np.testing.assert_array_equal(np.asarray(c_all.k_planes),
+                                  np.asarray(c_one.k_planes))
+    np.testing.assert_array_equal(np.asarray(c_all.k_scale),
+                                  np.asarray(c_one.k_scale))
+
+
+@pytest.mark.parametrize("window,g", [(None, 2), (4, 2), (None, 1)])
+def test_decode_plane_cache_bit_identical_to_inline_quant(window, g):
+    """decode_attention consuming the incremental plane cache == the same
+    call re-quantizing the float cache, bit for bit, across GQA/window."""
+    rng = np.random.default_rng(8)
+    cfg = QuantConfig()
+    b, length, kvh, dh = 2, 12, 2, 16
+    h = kvh * g
+    cache = init_kv_cache(b, length, kvh, dh, jnp.float32, quant=cfg)
+    for t in range(9):
+        kn = jnp.asarray(rng.standard_normal((b, 1, kvh, dh)), jnp.float32)
+        vn = jnp.asarray(rng.standard_normal((b, 1, kvh, dh)), jnp.float32)
+        cache = update_kv_cache(cache, kn, vn,
+                                jnp.full((b, 1), t, jnp.int32), quant=cfg)
+    q = jnp.asarray(rng.standard_normal((b, 1, h, dh)), jnp.float32)
+    qpos = jnp.full((b,), 8, jnp.int32)
+    out_inline = decode_attention(q, cache.k, cache.v, cache.positions, qpos,
+                                  window=window, l2r=cfg)
+    out_planes = decode_attention(q, cache.k, cache.v, cache.positions, qpos,
+                                  window=window, l2r=cfg,
+                                  k_planes=cache.k_planes,
+                                  k_scale=cache.k_scale)
+    np.testing.assert_array_equal(np.asarray(out_inline),
+                                  np.asarray(out_planes))
+    # and the quantized path tracks the float path to W8A8 noise
+    out_f = decode_attention(q, cache.k, cache.v, cache.positions, qpos,
+                             window=window)
+    assert float(jnp.max(jnp.abs(out_planes - out_f))) < 0.1
+
+
+# ------------------------------------------------ progressive decode (exit)
+def test_early_exit_decode_bit_identical_at_tight_tol():
+    rng = np.random.default_rng(9)
+    cfg = QuantConfig()
+    b, length, kvh, dh, g = 2, 12, 2, 16, 3
+    cache = init_kv_cache(b, length, kvh, dh, jnp.float32, quant=cfg)
+    for t in range(9):
+        kn = jnp.asarray(rng.standard_normal((b, 1, kvh, dh)), jnp.float32)
+        vn = jnp.asarray(rng.standard_normal((b, 1, kvh, dh)), jnp.float32)
+        cache = update_kv_cache(cache, kn, vn,
+                                jnp.full((b, 1), t, jnp.int32), quant=cfg)
+    q = jnp.asarray(rng.standard_normal((b, 1, kvh * g, dh)), jnp.float32)
+    qpos = jnp.full((b,), 8, jnp.int32)
+    full = decode_attention(q, cache.k, cache.v, cache.positions, qpos,
+                            l2r=cfg, k_planes=cache.k_planes,
+                            k_scale=cache.k_scale)
+    with attn_exit_tap() as rec:
+        exited = decode_attention(q, cache.k, cache.v, cache.positions, qpos,
+                                  l2r=cfg, k_planes=cache.k_planes,
+                                  k_scale=cache.k_scale, early_exit=True,
+                                  exit_tol=1e-4)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(exited))
+    assert rec and rec[0]["exit_levels"].shape == (b, kvh, g)
+    # a loose tolerance decides rows earlier, never later
+    with attn_exit_tap() as rec2:
+        decode_attention(q, cache.k, cache.v, cache.positions, qpos,
+                         l2r=cfg, k_planes=cache.k_planes,
+                         k_scale=cache.k_scale, early_exit=True,
+                         exit_tol=10.0)
+    assert (rec2[0]["exit_levels"] <= rec[0]["exit_levels"]).all()
+
+
+def test_early_exit_rejects_softcap():
+    rng = np.random.default_rng(10)
+    cfg = QuantConfig()
+    cache = init_kv_cache(1, 4, 1, 8, jnp.float32, quant=cfg)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 8)), jnp.float32)
+    with pytest.raises(ValueError, match="softcap"):
+        decode_attention(q, cache.k, cache.v, cache.positions,
+                         jnp.zeros((1,), jnp.int32), softcap=30.0, l2r=cfg,
+                         early_exit=True)
+
+
+def test_early_exit_serving_tokens_match_full_depth():
+    """Greedy decode with margin-bounded progressive attention commits the
+    SAME tokens as the full-depth quantized path (acceptance criterion)."""
+    cfg = get_smoke("smollm-135m")
+    qc = QuantConfig()
+    cfg_q = dataclasses.replace(cfg, attn_l2r=qc)
+    cfg_e = dataclasses.replace(cfg_q, attn_early_exit=True,
+                                attn_exit_tol=1e-4)
+    params = materialize(lm_build(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    out_q = np.asarray(greedy_generate(cfg_q, params, prompt, steps=5))
+    out_e = np.asarray(greedy_generate(cfg_e, params, prompt, steps=5))
+    np.testing.assert_array_equal(out_q, out_e)
+
+
+# --------------------------------------------------------------- dispatcher
+def test_dispatcher_backends_and_schedules_bit_identical():
+    from repro.kernels.l2r_gemm.ops import l2r_attn_scores
+    qq, kq = _rand_qk(np.random.default_rng(12))
+    ref = np.asarray(attn_scores_stacked(qq, kq))
+    for kwargs in (dict(backend="jnp"),
+                   dict(backend="jnp", schedule="streaming"),
+                   dict(backend="jnp", schedule="streaming", early_exit=True),
+                   dict(backend="pallas-interpret"),
+                   dict(backend="pallas-interpret", schedule="streaming")):
+        np.testing.assert_array_equal(
+            np.asarray(l2r_attn_scores(qq, kq, **kwargs)), ref,
+            err_msg=str(kwargs))
+    np.testing.assert_array_equal(
+        np.asarray(l2r_attn_scores(qq, kq, levels=3,
+                                   backend="pallas-interpret")),
+        np.asarray(attn_scores_stacked(qq, kq, levels=3)))
+
+
+def test_dispatcher_rejections():
+    from repro.kernels.l2r_gemm.ops import l2r_attn_scores
+    qq, kq = _rand_qk(np.random.default_rng(13))
+    with pytest.raises(ValueError, match="streaming"):
+        l2r_attn_scores(qq, kq, early_exit=True, backend="jnp")
+    with pytest.raises(ValueError, match="schedule"):
+        l2r_attn_scores(qq, kq, schedule="pairs", backend="jnp")
+    with pytest.raises(ValueError, match="while-loop emitter"):
+        l2r_attn_scores(qq, kq, schedule="streaming", early_exit=True,
+                        backend="pallas-interpret")
+
+
+def test_gemm_mismatch_error_names_both_operands():
+    """The enriched PlaneOperands mismatch raise (GEMM dispatcher site)."""
+    from repro.kernels.l2r_gemm.ops import l2r_gemm
+    rng = np.random.default_rng(14)
+    a = jnp.asarray(rng.integers(-8, 8, (4, 8)), jnp.int8)
+    b = jnp.asarray(rng.integers(-8, 8, (8, 4)), jnp.int8)
+    a_po = PlaneOperands.prepare_lhs(a, 8, 4)
+    with pytest.raises(ValueError) as ei:
+        l2r_gemm(a_po, b, 8, 2)
+    msg = str(ei.value)
+    assert "log2_radix=4" in msg and "other operand" in msg
+
+
+# -------------------------------------------------------- flash-fused kernel
+def test_flash_attention_dispatch_default_is_oracle():
+    """Satellite: the entry no longer defaults to interpret-mode Pallas —
+    off-TPU it resolves to the jitted oracle, and an explicit pallas-tpu
+    is rejected with the hinted error."""
+    from repro.kernels.flash_attention import attention_ref, flash_attention
+    rng = np.random.default_rng(15)
+    q = jnp.asarray(rng.standard_normal((1, 16, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 16, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 16, 2, 8)), jnp.float32)
+    if jax.default_backend() != "tpu":
+        np.testing.assert_array_equal(
+            np.asarray(flash_attention(q, k, v)),
+            np.asarray(attention_ref(q, k, v, True, None, None)))
+        with pytest.raises(RuntimeError, match="pallas-interpret"):
+            flash_attention(q, k, v, backend="pallas-tpu")
+
+
+def test_flash_l2r_kernel_matches_quantized_softmax_oracle():
+    """ONE small interpret-mode run of the fused level-walk kernel vs the
+    jnp quantized-score softmax (interpret mode is slow — keep it tiny)."""
+    from repro.kernels.flash_attention import flash_attention_l2r_pallas
+    rng = np.random.default_rng(16)
+    b, s, h, kvh, dh = 1, 16, 2, 1, 8
+    cfg = QuantConfig()
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, dh)), jnp.float32)
+    qq, qs = quantize_per_vector(q, cfg)
+    kq, ks = quantize_per_vector(k, cfg)
+    g = h // kvh
+    s_int = attn_scores_stacked(qq.reshape(b, s, kvh, g, dh), kq)
+    sc = (s_int.astype(jnp.float32)
+          * qs.reshape(b, s, kvh, g, 1).transpose(0, 2, 3, 1, 4)
+          * ks[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+          / np.sqrt(dh))
+    pos = np.arange(s)
+    mask = pos[None] <= pos[:, None]
+    sc = jnp.where(jnp.asarray(mask)[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    ref = jnp.einsum("bkgqs,bskd->bqkgd", p, v).reshape(b, s, h, dh)
+    out = flash_attention_l2r_pallas(q, k, v, bq=8, bkv=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+# ------------------------------------------------------- batching integration
+def test_batcher_serves_quantized_attention_config():
+    """ContinuousBatcher threads the plane-stacked cache through slot
+    splicing unchanged (the new KVCache leaves ride the same tree paths)."""
+    from repro.serve.batching import ContinuousBatcher, Request
+    cfg = dataclasses.replace(get_smoke("smollm-135m"),
+                              attn_l2r=QuantConfig())
+    params = materialize(lm_build(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, cfg.vocab, (6,)).astype(np.int32)
+    ref = np.asarray(greedy_generate(cfg, params, jnp.asarray(prompt[None]),
+                                     steps=4, max_len=32))[0].tolist()
+    eng = ContinuousBatcher(cfg, params, n_slots=2, max_len=32)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=4)
+    eng.submit(req)
+    eng.run(max_steps=100)
+    assert req.done and req.output[:4] == ref
+
+
+# ------------------------------------------------------ roofline accounting
+def test_attn_decode_bytes_accounting():
+    """The analytical bytes-per-decode-step model: re-extraction moves
+    the same HBM bytes as the float path (the waste is per-step
+    compute), the int8 plane cache trades a widened K read for dropping
+    the float K read, and a truncated walk touches only the union of
+    its sliding level windows."""
+    from repro.launch.roofline import HBM_BW, attn_decode_step_bytes
+    b, length, kvh, dh = 4, 512, 4, 64
+    acct = attn_decode_step_bytes(b, length, kvh, dh, n_bits=8,
+                                  log2_radix=2, kv_dtype_bytes=2)
+    m = acct["modes"]
+    slots = b * length * kvh
+    assert m["float"]["total_bytes"] == 2 * slots * dh * 2
+    assert m["quant_reextract"]["total_bytes"] == m["float"]["total_bytes"]
+    # 8-bit radix-4 -> D=4 planes, 2D-1=7 int8 blocks + f32 scale
+    assert m["plane_cache"]["k_bytes"] == slots * 7 * dh
+    assert m["plane_cache"]["scale_bytes"] == slots * 4
+    # full-depth walk touches every block
+    assert acct["plane_blocks_touched"] == 7
+    assert (m["plane_cache_truncated"]["total_bytes"]
+            == m["plane_cache"]["total_bytes"])
+    # touched blocks = min(D + levels - 1, 2D - 1): levels=2, D=4 -> 5
+    trunc = attn_decode_step_bytes(b, length, kvh, dh, n_bits=8,
+                                   log2_radix=2, kv_dtype_bytes=2, levels=2)
+    assert trunc["plane_blocks_touched"] == 5
+    assert (trunc["modes"]["plane_cache_truncated"]["k_bytes"]
+            == slots * 5 * dh)
+    assert trunc["truncated_vs_plane_cache"] < 1.0
+    # memory_s is bytes over the chip HBM constant
+    assert m["float"]["memory_s"] == pytest.approx(
+        m["float"]["total_bytes"] / HBM_BW)
