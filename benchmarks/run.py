@@ -390,6 +390,93 @@ def online_stats():
          f"(argmax decided after {100*(lv.mean()+1)/res.partial.shape[0]:.0f}% of stream)")
 
 
+def _load_calibrate_levels():
+    """Import tools/calibrate_levels.py by path (tools/ is not a
+    package: the calibration controller is an offline CLI that the
+    bench reuses for fitting and the frontier-row schema)."""
+    import importlib.util
+
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "..", "tools", "calibrate_levels.py")
+    spec = importlib.util.spec_from_file_location("calibrate_levels", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def precision_policy_bench(rows: list):
+    """Per-request precision classes on the decisive prototype head:
+    the accuracy-vs-levels-vs-latency frontier of the LevelPolicy
+    operating points — ``exact`` (full-depth scan), every ``budget(L)``
+    clamp, the ``bounded`` margin walk, and the budget CALIBRATED from
+    the bounded walk's observed exit histogram
+    (tools/calibrate_levels.py, coverage 0.99).  Appends one
+    ``precision_policy_frontier`` record (one frontier row per
+    operating point) to ``rows`` for BENCH_progressive.json.
+    """
+    from repro.core.policy import LevelPolicy
+    from repro.core.progressive import streaming_argmax
+    from repro.core.quant import QuantConfig
+    from repro.models.protohead import prototype_head
+
+    cal = _load_calibrate_levels()
+    cfg = QuantConfig()
+    n_levels = 2 * cfg.planes - 1
+    k, classes, m = (512, 32, 64) if CHECK_MODE else (2048, 64, 256)
+    xq, xs, w_q, _ = prototype_head(np.random.default_rng(44), k, classes,
+                                    m, cfg=cfg)
+
+    def run(policy, early_exit=True):
+        f = jax.jit(lambda a, s: streaming_argmax(
+            a, w_q.q, s, w_q.scale, cfg.n_bits, cfg.log2_radix,
+            early_exit=early_exit, policy=policy)[1:])
+        tok, lv = jax.tree.map(np.asarray, f(xq, xs))
+        return f, tok, lv
+
+    # exact class = the full-depth scan: the accuracy reference AND the
+    # latency baseline every other operating point is timed against
+    f_exact, tok_exact, lv_exact = run(LevelPolicy.exact(m),
+                                       early_exit=False)
+    frontier = [cal.frontier_row("exact", n_levels, n_levels, 1.0,
+                                 float(lv_exact.mean()))]
+
+    def point(label, policy, levels):
+        f, tok, lv = run(policy)
+        us_e, us_p = _best_pair(
+            lambda: jax.block_until_ready(f_exact(xq, xs)),
+            lambda: jax.block_until_ready(f(xq, xs)), n=5)
+        frontier.append(cal.frontier_row(
+            label, levels, n_levels, float((tok == tok_exact).mean()),
+            float(lv.mean()), us=us_p, full_us=us_e))
+        return lv
+
+    for lvl in range(1, n_levels + 1):
+        point(f"budget({lvl})", LevelPolicy.budget(lvl, m), lvl)
+    lv_b = point("bounded(0)", LevelPolicy.bounded(m),
+                 int(lv_exact.max()) + 1)
+    # the bounded walk is sound (agreement 1.0 by construction); its
+    # exit histogram is what serving stats() observe — fit the smallest
+    # clamp covering 99% of those exits and measure the fitted point
+    coverage = 0.99
+    fitted = cal.fit_budget(np.bincount(lv_b, minlength=n_levels),
+                            coverage=coverage)
+    point(f"calibrated:budget({fitted})", LevelPolicy.budget(fitted, m),
+          fitted)
+    frontier[-1].update(calibrated=True, coverage=coverage,
+                        fitted_from="bounded(0)")
+    agree = frontier[-1]["agreement_vs_exact"]
+    emit("precision_policy_frontier", frontier[-1].get("us_per_call", 0.0),
+         f"points={len(frontier)} calibrated_budget={fitted}/{n_levels} "
+         f"calibrated_agreement={agree:.3f} "
+         f"bounded_mean_exit={float(lv_b.mean()):.2f}")
+    rows.append({
+        "name": "precision_policy_frontier", "n_levels": n_levels,
+        "k": k, "classes": classes, "rows": m,
+        "coverage": coverage, "calibrated_budget_levels": fitted,
+        "frontier": frontier,
+    })
+
+
 def progressive_bench(json_path: str | None = None):
     """Streaming early-exit suite -> progressive_* rows + JSON record.
 
@@ -621,6 +708,8 @@ def progressive_bench(json_path: str | None = None):
     }]
     # multi-device consensus walk rows (virtual-device subprocess)
     progressive_sharded_bench(rows)
+    # per-request precision classes: the calibrated policy frontier
+    precision_policy_bench(rows)
     a = jnp.asarray(rng.integers(-128, 128, (256, 64), dtype=np.int8))
     b = jnp.asarray(rng.integers(-128, 128, (64, 32), dtype=np.int8))
     res = progressive_matmul(a, b)

@@ -1,0 +1,112 @@
+"""Per-request precision classes: one mixed batch, three SLAs.
+
+    PYTHONPATH=src python examples/precision_policies.py
+
+PR 8's policy layer (core/policy.py) turns the streaming walks'
+batch-global early-exit decision into a PER-ROW one: each request
+carries a `PrecisionClass` —
+
+  * ``exact``        — run the full digit stream (reference quality);
+  * ``budget(L)``    — clamp at level L (latency SLA; tokens identical
+                       to a `levels=L` truncated run);
+  * ``bounded(eps)`` — early-exit once the argmax margin beats the
+                       scaled tail bound by eps (``bounded(0)`` IS the
+                       legacy early-exit walk, bit for bit);
+
+packed into a `LevelPolicy` pytree and folded inside ONE fused while
+loop.  This demo shows:
+
+  1. the raw head walk serving a mixed batch, each row committing at
+     its own class's level — bit-identical to serving that row alone;
+  2. a mixed-class batch through the `ContinuousBatcher` (precision on
+     `Request`), with per-class exit-level histograms in `stats()`;
+  3. the offline calibration loop: fit a `budget(L)` from the bounded
+     class's observed exit histogram (tools/calibrate_levels.py).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+import importlib.util
+
+import jax
+import numpy as np
+
+from repro.core.policy import LevelPolicy, PrecisionClass
+from repro.core.progressive import streaming_argmax
+from repro.core.quant import QuantConfig
+
+rng = np.random.default_rng(0)
+qc = QuantConfig()
+n_levels = 2 * qc.planes - 1
+
+# ----------------------------------- 1. mixed classes in one head walk
+print("== one fused walk, three precision classes ==")
+from repro.models.protohead import prototype_head
+
+xq, xs, w_q, _ = prototype_head(rng, 256, 32, 9, cfg=qc)
+classes = [PrecisionClass.exact(), PrecisionClass.budget(3),
+           PrecisionClass.bounded()] * 3
+pol = LevelPolicy.from_classes(classes)
+_, tok, lv = streaming_argmax(xq, w_q.q, xs, w_q.scale, qc.n_bits,
+                              qc.log2_radix, early_exit=True, policy=pol)
+_, tok_full, _ = streaming_argmax(xq, w_q.q, xs, w_q.scale, qc.n_bits,
+                                  qc.log2_radix)
+for i, c in enumerate(classes[:3]):
+    rows = [j for j in range(len(classes)) if classes[j] is c or
+            classes[j].label() == c.label()]
+    lvs = np.asarray(lv)[rows]
+    agree = np.mean(np.asarray(tok)[rows] == np.asarray(tok_full)[rows])
+    print(f"  {c.label():<12} exit levels {lvs.tolist()}  "
+          f"agreement vs exact {agree:.2f}")
+print(f"  (full depth = level {n_levels - 1}; budget(3) caps at 2; "
+      f"bounded rows stop at their own margin)")
+
+# ------------------------------- 2. mixed classes through the batcher
+print("\n== mixed-class batch through ContinuousBatcher ==")
+from repro.configs import get_smoke
+from repro.models.common import materialize
+from repro.models.transformer import lm_build
+from repro.serve.batching import ContinuousBatcher, Request
+from repro.serve.engine import prepare_params
+
+cfg = dataclasses.replace(get_smoke("smollm-135m"), l2r=QuantConfig())
+desc = lm_build(cfg)
+params = prepare_params(cfg, materialize(desc, jax.random.PRNGKey(0)), desc)
+prompts = [rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+           for n in (5, 7, 6)]
+eng = ContinuousBatcher(cfg, params, n_slots=3, max_len=48,
+                        progressive=True, early_exit=True)
+for i, (p, c) in enumerate(zip(prompts, [PrecisionClass.exact(),
+                                         PrecisionClass.budget(3),
+                                         PrecisionClass.bounded()])):
+    eng.submit(Request(uid=i, prompt=p, max_new_tokens=8, precision=c))
+eng.run(max_steps=200)
+st = eng.stats()
+print(f"  served {st['tokens']} tokens over {st['n_levels']} levels, "
+      f"mean exit level {st['mean_exit_level']:.2f}")
+for label, hist in st["exit_level_hist_by_class"].items():
+    h = np.asarray(hist, np.float64)
+    mean = (h * np.arange(h.size)).sum() / max(h.sum(), 1)
+    print(f"  {label:<12} hist {np.asarray(hist).tolist()}  "
+          f"mean exit {mean:.2f}")
+
+# --------------------------------- 3. close the loop: fit a budget
+print("\n== calibration: bounded histogram -> fitted budget(L) ==")
+_spec = importlib.util.spec_from_file_location(
+    "calibrate_levels", os.path.join(os.path.dirname(__file__), "..",
+                                     "tools", "calibrate_levels.py"))
+cal = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cal)
+fits = cal.fit_class_budgets(st["exit_level_hist_by_class"], coverage=0.99)
+print(f"  fitted budgets @99% coverage: {fits}")
+bounded_fit = fits.get("bounded(0)", n_levels)
+print(f"  -> redeploy the bounded class as "
+      f"PrecisionClass.budget({bounded_fit}): a static clamp that "
+      f"reproduces 99% of its observed commits")
+print("  (benchmarks/run.py precision_policy_bench measures the full "
+      "accuracy-vs-levels-vs-latency frontier into "
+      "BENCH_progressive.json)")

@@ -1,0 +1,451 @@
+"""Per-request precision classes: ONE decision fold for every streaming
+walk.
+
+Every early-exit consumer in the stack used to carry its own private
+decision closure — the local head argmax (`streaming_argmax`), the
+shard_mapped consensus walk (`_streaming_argmax_sharded`), and the
+margin-bounded decode attention (`models/attention.py`) each re-derived
+"has this row seen enough significance levels?" with slightly different
+carries and done predicates.  This module is the single home of that
+logic, and it generalizes the batch-global knobs (`levels`,
+`early_exit`) into **per-row precision classes**:
+
+  * ``exact``      — the row never early-commits; the walk runs full
+                     depth for it and the committed value is the
+                     full-precision fallback (bit-identical to the
+                     legacy no-early-exit path).
+  * ``budget(L)``  — the row force-commits at level L (index L-1): its
+                     committed value is the argmax of the dequantized
+                     prefix after L levels, bit-identical to a legacy
+                     run truncated at ``levels=L`` (the tail bounds are
+                     truncation-independent, so margin decisions before
+                     the clamp are identical too).
+  * ``bounded(tol)`` — margin early-exit: the row commits once the
+                     top-1 lower confidence bound beats every other
+                     entry's upper bound minus ``tol``.  ``tol=0`` is
+                     the legacy early-exit walk bit for bit; ``tol>0``
+                     trades up to ~``tol`` of score margin for earlier
+                     exits.  In the attention walk ``tol`` is the
+                     normalizer tolerance (the legacy ``exit_tol``).
+
+A :class:`LevelPolicy` is a tiny pytree of per-row ``(mode, clamp,
+tol)`` arrays; one mixed batch can therefore serve heterogeneous SLAs
+inside ONE fused while loop — each row commits by its own rule, and the
+loop stops at the slowest row's level (rows are decision-independent,
+so a row's committed token/level never depends on its batch-mates).
+
+:class:`PrecisionClass` is the host-side description (`Request`
+carries one); ``LevelPolicy.from_classes`` turns a list of them into
+device rows, and ``label()`` is the stable string key of the per-class
+exit histograms in ``stats()``.
+
+The fold builders:
+
+  * :func:`head_walk_machinery` — the head-argmax fold shared by the
+    local AND the shard_mapped consensus walk; the cross-shard
+    reductions (pmax/pmin over ``model``, the early-exit consensus
+    psum over the data axes) degrade to identities when no axis name
+    is given, which is exactly the single-device walk.
+  * :func:`attn_walk_machinery` — the decode-attention fold (max
+    decided AND normalizer pinned); budget rows snapshot their int32
+    score prefix at the clamp so their softmax sees exactly the
+    ``levels=L`` scores even when batch-mates stream deeper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MODE_EXACT",
+    "MODE_BUDGET",
+    "MODE_BOUNDED",
+    "NO_CLAMP",
+    "PrecisionClass",
+    "LevelPolicy",
+    "decision_state",
+    "policy_commit",
+    "head_walk_machinery",
+    "attn_walk_machinery",
+]
+
+MODE_EXACT = 0
+MODE_BUDGET = 1
+MODE_BOUNDED = 2
+# BUDGET clamp sentinel for non-budget rows: larger than any level index
+# the walk can reach, so `idx >= clamp - 1` never fires.  The policy
+# deliberately does NOT know the stream depth — the same rows drive
+# walks of any n_levels.
+NO_CLAMP = 2**31 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionClass:
+    """Host-side precision class of one request (see module docstring).
+
+    ``kind`` is "exact" | "budget" | "bounded"; ``levels`` is the budget
+    clamp (levels of the walk the row pays for), ``tol`` the bounded
+    margin slack in the scaled score domain.  Hashable and frozen: used
+    as a stats key (via :meth:`label`) and safe as a jit static.
+    """
+
+    kind: str
+    levels: int | None = None
+    tol: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("exact", "budget", "bounded"):
+            raise ValueError(f"unknown precision class kind: {self.kind!r}")
+        if self.kind == "budget" and (self.levels is None or self.levels < 1):
+            raise ValueError("budget class needs levels >= 1 "
+                             f"(got {self.levels})")
+
+    @classmethod
+    def exact(cls) -> "PrecisionClass":
+        return cls("exact")
+
+    @classmethod
+    def budget(cls, levels: int) -> "PrecisionClass":
+        return cls("budget", levels=int(levels))
+
+    @classmethod
+    def bounded(cls, tol: float = 0.0) -> "PrecisionClass":
+        return cls("bounded", tol=float(tol))
+
+    def label(self) -> str:
+        """Stable string key of the per-class exit histograms."""
+        if self.kind == "exact":
+            return "exact"
+        if self.kind == "budget":
+            return f"budget({self.levels})"
+        return f"bounded({self.tol:g})"
+
+    def row(self) -> tuple[int, int, float]:
+        """(mode, clamp, tol) device-row values of this class."""
+        if self.kind == "exact":
+            return MODE_EXACT, NO_CLAMP, 0.0
+        if self.kind == "budget":
+            return MODE_BUDGET, int(self.levels), 0.0
+        return MODE_BOUNDED, NO_CLAMP, float(self.tol)
+
+
+class LevelPolicy(NamedTuple):
+    """Per-row precision policy of one streaming walk (a pytree).
+
+    mode:  (rows,) int32 — MODE_EXACT / MODE_BUDGET / MODE_BOUNDED.
+    clamp: (rows,) int32 — budget rows force-commit at level index
+           ``clamp - 1`` (i.e. after ``clamp`` levels); NO_CLAMP on
+           other rows.
+    tol:   (rows,) float32 — bounded rows' margin slack (head walk) /
+           normalizer tolerance (attention walk); 0 elsewhere.
+
+    Registered as a pytree (NamedTuple), so it rides through jit,
+    shard_map in_specs, and ``.at[row].set`` slot splicing unchanged.
+    """
+
+    mode: jax.Array
+    clamp: jax.Array
+    tol: jax.Array
+
+    # -------------------------------------------------- constructors
+    @classmethod
+    def from_classes(cls, classes) -> "LevelPolicy":
+        rows = [c.row() for c in classes]
+        mode = np.asarray([r[0] for r in rows], np.int32)
+        clamp = np.asarray([r[1] for r in rows], np.int32)
+        tol = np.asarray([r[2] for r in rows], np.float32)
+        return cls(jnp.asarray(mode), jnp.asarray(clamp), jnp.asarray(tol))
+
+    @classmethod
+    def exact(cls, rows: int) -> "LevelPolicy":
+        return cls.from_classes([PrecisionClass.exact()] * rows)
+
+    @classmethod
+    def budget(cls, levels: int, rows: int) -> "LevelPolicy":
+        return cls.from_classes([PrecisionClass.budget(levels)] * rows)
+
+    @classmethod
+    def bounded(cls, rows: int, tol: float = 0.0) -> "LevelPolicy":
+        return cls.from_classes([PrecisionClass.bounded(tol)] * rows)
+
+    # -------------------------------------------------------- editing
+    @property
+    def rows(self) -> int:
+        return int(self.mode.shape[0])
+
+    def set_row(self, i: int, pc: PrecisionClass) -> "LevelPolicy":
+        """Functional slot update (the batcher's admission/retirement
+        splice): row ``i`` becomes class ``pc``."""
+        m, c, t = pc.row()
+        return LevelPolicy(self.mode.at[i].set(m),
+                           self.clamp.at[i].set(c),
+                           self.tol.at[i].set(t))
+
+    def reshape(self, shape) -> "LevelPolicy":
+        """Broadcast helper for non-(rows,) walks (decode attention
+        reshapes to (B, 1, 1) against its (B, Kv, G) decision rows)."""
+        return LevelPolicy(self.mode.reshape(shape),
+                           self.clamp.reshape(shape),
+                           self.tol.reshape(shape))
+
+
+# ------------------------------------------------------ decision machinery
+def decision_state(values: jax.Array, bvec: jax.Array):
+    """Is the argmax of `values` invariant to any ±bvec perturbation?
+
+    values: (..., N) scores; bvec: per-entry bound, broadcastable to
+    values.  Decided iff the top-1 lower confidence bound strictly beats
+    every other entry's upper bound.  Returns (decided (...,), argmax).
+    """
+    top = jnp.argmax(values, axis=-1)
+    lb = values - bvec
+    ub = values + bvec
+    lb_top = jnp.take_along_axis(lb, top[..., None], axis=-1)[..., 0]
+    ub_others = jnp.where(
+        jax.nn.one_hot(top, values.shape[-1], dtype=bool), -jnp.inf, ub)
+    return lb_top > jnp.max(ub_others, axis=-1), top.astype(jnp.int32)
+
+
+def policy_commit(policy: LevelPolicy | None, decided, idx, done):
+    """The one mode/clamp gate of every policy walk.
+
+    ``decided`` is this level's margin decision per row, ``done`` the
+    rows already committed.  Returns ``(newly, forced)``:
+
+      * ``newly``  — rows committing BY MARGIN this level (exact rows
+        are never eligible; with no policy every row is, which is the
+        legacy batch-global walk);
+      * ``forced`` — budget rows hitting their clamp this level without
+        a margin decision (the caller commits them from the dequantized
+        prefix — the truncated walk's fallback).
+
+    The two are disjoint and both imply ``~done``.  Shapes follow
+    ``decided`` (policy leaves must be broadcastable to it).
+    """
+    if policy is None:
+        newly = decided & ~done
+        return newly, jnp.zeros_like(newly)
+    eligible = policy.mode != MODE_EXACT
+    newly = decided & eligible & ~done
+    forced = (policy.mode == MODE_BUDGET) & (idx >= policy.clamp - 1) \
+        & ~done & ~newly
+    return newly, forced
+
+
+# --------------------------------------------------------- head argmax walk
+def head_walk_machinery(bounds_f32, xsf, wsr, bias, out_dtype, *,
+                        safety: float, n_levels: int, m_global: int,
+                        n_total: int, policy: LevelPolicy | None = None,
+                        early_exit: bool = False, model_ax: str | None = None,
+                        dp: tuple = ()):
+    """The head-argmax decision fold — local and sharded are ONE fold.
+
+    Returns ``(fold, init, done_fn, finalize)`` for the streaming
+    emitters (`streaming_matmul_scan` / `streaming_matmul_while`):
+    ``fold`` carries ``(tok, lv, done, all_done)``, ``done_fn`` reads
+    the consensus scalar, ``finalize(acc, carry)`` dequantizes exactly
+    like ``l2r_matmul_f`` and falls undecided rows back to the full
+    argmax, returning ``(logits, tok, lv)``.
+
+    ``xsf``/``wsr``/``bias`` are the LOCAL (per-shard) scale/bias
+    arrays; ``model_ax``/``dp`` name the mesh axes of the consensus
+    walk.  With no axis names every cross-shard reduction is the
+    identity and the early-exit consensus is a local ``sum(done) ==
+    m_global`` — exactly the single-device walk (``jnp.all(done)``).
+    The per-level decision is the masked own/others form of
+    :func:`decision_state` (one finite entry per side), reduced with
+    pmax/pmin when sharded — bit-identical either way.
+
+    Per-row policy semantics (see module docstring): bounded rows
+    widen the margin test by their ``tol``; budget rows force-commit at
+    their clamp from the ``out_dtype`` round-trip of the prefix (the
+    SAME dequantization the truncated walk's fallback argmax sees, so
+    ``budget(L)`` == ``levels=L`` bit for bit); exact rows never set
+    ``done`` — the loop runs full depth for them and ``finalize``
+    commits the full-precision fallback.
+    """
+    m_l = xsf.shape[0]
+    n_l = wsr.shape[-1]
+    # |fl(v) - v| <= ~3 ulp(|v|) across the cast + two scale products and
+    # the bias add; 8 ulp of the row max is a comfortable envelope
+    eps = 8.0 * jnp.finfo(jnp.float32).eps
+    off = (jax.lax.axis_index(model_ax) * n_l if model_ax
+           else jnp.int32(0))
+    col = off + jnp.arange(n_l, dtype=jnp.int32)
+
+    def vmax_all(v):  # exact: max commutes/associates exactly
+        return jax.lax.pmax(v, model_ax) if model_ax else v
+
+    def vmin_all(v):
+        return jax.lax.pmin(v, model_ax) if model_ax else v
+
+    def gmax_first(vals):
+        """(global max, FIRST global index achieving it) — exactly
+        ``jnp.argmax``'s value and tie-break on the unsharded row."""
+        vmax_l = jnp.max(vals, axis=-1)
+        amax_l = jnp.argmax(vals, axis=-1).astype(jnp.int32) + off
+        vmax = vmax_all(vmax_l)
+        cand = jnp.where(vmax_l == vmax, amax_l, jnp.int32(n_total))
+        return vmax, vmin_all(cand)
+
+    def dequant_roundtrip(partial):
+        """The l2r_matmul_f dequantization: f32 product, output cast,
+        back to f32 for the argmax — the bit pattern every fallback
+        (and every budget clamp commit) must reproduce."""
+        logits = (partial.astype(jnp.float32) * xsf * wsr).astype(out_dtype)
+        full = logits.astype(jnp.float32)
+        if bias is not None:
+            logits = logits + bias.astype(logits.dtype)
+            full = full + bias.astype(jnp.float32)
+        return logits, full
+
+    def fold(carry, partial, idx):
+        tok, lv, done, _ = carry
+        values = partial.astype(jnp.float32) * xsf * wsr
+        if bias is not None:
+            values = values + bias.astype(jnp.float32)
+        vmax_abs = vmax_all(jnp.max(jnp.abs(values), axis=-1,
+                                    keepdims=True))
+        bvec = bounds_f32[idx] * xsf * wsr * (1.0 + safety) + eps * vmax_abs
+        _, gtop = gmax_first(values)
+        own = col[None, :] == gtop[:, None]
+        # decision_state on the (possibly sharded) row: lb of the owned
+        # winner, ub of everything else — the same single masked entry
+        lb_top = vmax_all(jnp.max(
+            jnp.where(own, values - bvec, -jnp.inf), axis=-1))
+        ub_others = vmax_all(jnp.max(
+            jnp.where(own, -jnp.inf, values + bvec), axis=-1))
+        if policy is None:
+            decided = lb_top > ub_others
+        else:
+            # bounded rows trade up to `tol` of margin for earlier exits
+            # (tol=0 rows reproduce the strict test bit for bit)
+            decided = lb_top > ub_others - policy.tol
+        newly, forced = policy_commit(policy, decided, idx, done)
+        tok = jnp.where(newly, gtop, tok)
+        if policy is not None:
+            # budget clamp: commit the row from the out_dtype round-trip
+            # of THIS prefix — the value a levels=clamp run's fallback
+            # argmax would commit
+            _, full = dequant_roundtrip(partial)
+            _, ftok = gmax_first(full)
+            tok = jnp.where(forced, ftok, tok)
+        commit = newly | forced
+        lv = jnp.where(commit, idx, lv)
+        done = done | commit
+        # the consensus scalar is only read by the while loop's done_fn;
+        # the fixed scan must not pay a per-level psum for a flag nobody
+        # reads (loop-carried values are not DCE'd)
+        if early_exit:
+            n_done = jnp.sum(done.astype(jnp.int32))
+            if dp:
+                n_done = jax.lax.psum(n_done, dp)
+            all_done = n_done == m_global
+        else:
+            all_done = jnp.bool_(False)
+        return tok, lv, done, all_done
+
+    init = (jnp.zeros((m_l,), jnp.int32),
+            jnp.full((m_l,), max(n_levels - 1, 0), jnp.int32),
+            jnp.zeros((m_l,), bool),
+            jnp.bool_(False))
+
+    def done_fn(carry):
+        return carry[3]
+
+    def finalize(acc, carry):
+        # dequantize exactly like l2r_matmul_f: f32 product, then output
+        # cast.  Whenever an undecided row exists the loop exhausted its
+        # stream (undecided rows hold `all_done` False), so `acc` IS the
+        # full (or levels-truncated) result — the fallback argmax is
+        # identical on both control flows.
+        tok, lv, done, _ = carry
+        logits, full = dequant_roundtrip(acc)
+        _, fallback = gmax_first(full)
+        tok = jnp.where(done, tok, fallback)
+        return logits, tok, lv
+
+    return fold, init, done_fn, finalize
+
+
+# ------------------------------------------------------ decode attention walk
+def attn_walk_machinery(bounds_f32, dequant, valid_b, scale_row, *,
+                        rows_shape: tuple, n_levels: int,
+                        safety: float = 1e-5, exit_tol: float = 1e-4,
+                        policy: LevelPolicy | None = None,
+                        score_shape: tuple | None = None):
+    """The decode-attention decision fold (models/attention.py).
+
+    ``dequant(partial)`` maps the int32 score prefix (B, Kv, G, 1, S)
+    to scaled scores; ``valid_b`` is the (B, 1, 1, 1, S) slot-validity
+    mask; ``scale_row`` the (broadcastable) per-entry scale product
+    ``q_scale * k_scale * softmax_scale`` on the (B, Kv, G, S) row
+    layout; ``rows_shape`` = (B, Kv, G), the decision rows.
+
+    A row is decided when BOTH its running max is invariant to the tail
+    (:func:`decision_state`) and its normalizer is pinned (every
+    unmasked score known to within the tolerance — the per-row ``tol``
+    for bounded policy rows, ``exit_tol`` otherwise).  Returns ``(fold,
+    init, done_fn)``; without a policy the carry is the legacy
+    ``(done, lv)``, with one it is ``(done, lv, forced, s_commit)``
+    where budget rows SNAPSHOT their int32 prefix at the clamp —
+    ``jnp.where(forced[..., None, None], s_commit, acc)`` then feeds
+    softmax the exact ``levels=clamp`` scores even when batch-mates
+    stream deeper.  Bounded rows keep the legacy batch-coupled
+    semantics (softmax over the prefix at the GLOBAL stop level): their
+    guarantee is the decision, not the score bits, so serving them
+    alone can stop the loop earlier and move non-argmax softmax weights
+    within the tolerance.
+    """
+    neg = jnp.float32(-1e30)
+    eps = 8.0 * jnp.finfo(jnp.float32).eps
+    valid_row = valid_b[:, :, :, 0, :]  # (B, 1, 1, S)
+    pol = policy.reshape((-1, 1, 1)) if policy is not None else None
+    tol = pol.tol if pol is not None else exit_tol
+
+    def decide(partial, idx, done):
+        values = jnp.where(valid_b, dequant(partial), neg)[:, :, :, 0, :]
+        vmax = jnp.max(jnp.abs(jnp.where(valid_row, values, 0.0)),
+                       axis=-1, keepdims=True)
+        # per-entry bound on the unseen tail, in the scaled score domain;
+        # masked slots are EXACT (-1e30 by fiat) -> bound 0
+        bvec = bounds_f32[idx] * scale_row * (1.0 + safety) + eps * vmax
+        bvec = jnp.where(valid_row, bvec, 0.0)
+        max_decided, _ = decision_state(values, bvec)
+        norm_decided = jnp.max(bvec, axis=-1) <= tol
+        return policy_commit(pol, max_decided & norm_decided, idx, done)
+
+    if policy is None:
+        def fold(carry, partial, idx):
+            done, lv = carry
+            newly, _ = decide(partial, idx, done)
+            lv = jnp.where(newly, idx, lv)
+            return done | newly, lv
+
+        init = (jnp.zeros(rows_shape, bool),
+                jnp.full(rows_shape, max(n_levels - 1, 0), jnp.int32))
+    else:
+        def fold(carry, partial, idx):
+            done, lv, forced_any, s_commit = carry
+            newly, forced = decide(partial, idx, done)
+            commit = newly | forced
+            lv = jnp.where(commit, idx, lv)
+            s_commit = jnp.where(forced[..., None, None], partial, s_commit)
+            return done | commit, lv, forced_any | forced, s_commit
+
+        assert score_shape is not None, \
+            "policy attention walk: pass the (B, Kv, G, 1, S) score shape"
+        init = (jnp.zeros(rows_shape, bool),
+                jnp.full(rows_shape, max(n_levels - 1, 0), jnp.int32),
+                jnp.zeros(rows_shape, bool),
+                jnp.zeros(score_shape, jnp.int32))
+
+    def done_fn(carry):
+        return jnp.all(carry[0])
+
+    return fold, init, done_fn

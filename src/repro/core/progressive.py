@@ -47,6 +47,9 @@ import numpy as np
 
 from .l2r_gemm import _f32_dot_exact
 from .online import msdf_levels, tail_bound
+# decision_state moved to core/policy.py (the one decision fold of every
+# streaming walk); re-exported here for existing importers
+from .policy import LevelPolicy, decision_state, head_walk_machinery
 from .quant import (PlaneOperands, plane_count, stack_planes_lhs,
                     stack_planes_rhs)
 
@@ -404,22 +407,6 @@ def progressive_matmul(
 
 
 # ------------------------------------------------------ decision machinery
-def decision_state(values: jax.Array, bvec: jax.Array):
-    """Is the argmax of `values` invariant to any ±bvec perturbation?
-
-    values: (..., N) scores; bvec: per-entry bound, broadcastable to
-    values.  Decided iff the top-1 lower confidence bound strictly beats
-    every other entry's upper bound.  Returns (decided (...,), argmax).
-    """
-    top = jnp.argmax(values, axis=-1)
-    lb = values - bvec
-    ub = values + bvec
-    lb_top = jnp.take_along_axis(lb, top[..., None], axis=-1)[..., 0]
-    ub_others = jnp.where(
-        jax.nn.one_hot(top, values.shape[-1], dtype=bool), -jnp.inf, ub)
-    return lb_top > jnp.max(ub_others, axis=-1), top.astype(jnp.int32)
-
-
 def streaming_argmax(
     xq: jax.Array,
     wq: jax.Array,
@@ -433,6 +420,7 @@ def streaming_argmax(
     safety: float = 1e-5,
     early_exit: bool = False,
     mesh=None,
+    policy: LevelPolicy | None = None,
 ):
     """Stream a quantized classifier/LM-head matmul, committing the argmax
     of the *dequantized* scores at the earliest sound level.
@@ -483,57 +471,42 @@ def streaming_argmax(
     path (the sharded accumulator is integer-exact per vocab shard, the
     decision floats are elementwise, and every cross-shard reduction is
     an exact max/min/sum of the same values).
+
+    **Per-row policy.**  ``policy`` (core/policy.py:LevelPolicy, one row
+    per M) replaces the batch-global decision with per-row precision
+    classes: ``bounded(0)`` rows reproduce this walk bit for bit,
+    ``budget(L)`` rows force-commit at level L with the token a
+    ``levels=L`` run would commit, ``exact`` rows never early-commit
+    (full-depth fallback).  Rows are decision-independent, so a mixed
+    batch commits each row exactly as a single-class batch would;
+    ``early_exit`` still picks the while-loop emitter, which stops at
+    the slowest row (an exact row keeps the loop running full depth).
     """
     axes = sharded_walk_axes(_lhs_lead(xq), _rhs_n(wq), mesh)
     if axes is not None:
         return _streaming_argmax_sharded(
             xq, wq, xs, ws, n_bits, log2_radix, levels, bias, out_dtype,
-            safety, early_exit, *axes)
+            safety, early_exit, policy, *axes)
     d = plane_count(n_bits, log2_radix)
     bounds = level_bounds(d, log2_radix, _contract_k(xq), levels)
     n_levels = int(bounds.f32.shape[0])
     wsr = ws.reshape(1, -1).astype(jnp.float32)
     xsf = xs.astype(jnp.float32)
     m = _lhs_lead(xq)[-1]
-    # |fl(v) - v| <= ~3 ulp(|v|) across the cast + two scale products and
-    # the bias add; 8 ulp of the row max is a comfortable envelope
-    eps = 8.0 * jnp.finfo(jnp.float32).eps
-
-    def fold(carry, partial, idx):
-        tok, lv, done = carry
-        values = partial.astype(jnp.float32) * xsf * wsr
-        if bias is not None:
-            values = values + bias.astype(jnp.float32)
-        vmax = jnp.max(jnp.abs(values), axis=-1, keepdims=True)
-        bvec = bounds.f32[idx] * xsf * wsr * (1.0 + safety) + eps * vmax
-        decided, am = decision_state(values, bvec)
-        newly = decided & ~done
-        tok = jnp.where(newly, am, tok)
-        lv = jnp.where(newly, idx, lv)
-        return tok, lv, done | decided
-
-    init = (jnp.zeros((m,), jnp.int32),
-            jnp.full((m,), max(n_levels - 1, 0), jnp.int32),
-            jnp.zeros((m,), bool))
+    if policy is not None:
+        assert policy.mode.shape == (m,), \
+            f"policy rows {policy.mode.shape} != batch rows ({m},)"
+    fold, init, done_fn, finalize = head_walk_machinery(
+        bounds.f32, xsf, wsr, bias, out_dtype, safety=safety,
+        n_levels=n_levels, m_global=m, n_total=_rhs_n(wq),
+        policy=policy, early_exit=early_exit)
     if early_exit:
-        acc, (tok, lv, done), _ = streaming_matmul_while(
-            xq, wq, fold, init, lambda c: jnp.all(c[2]),
-            n_bits, log2_radix, levels)
+        acc, carry, _ = streaming_matmul_while(
+            xq, wq, fold, init, done_fn, n_bits, log2_radix, levels)
     else:
-        acc, (tok, lv, done), _ = streaming_matmul_scan(
+        acc, carry, _ = streaming_matmul_scan(
             xq, wq, fold, init, n_bits, log2_radix, levels)
-    # dequantize exactly like l2r_matmul_f: f32 product, then output cast.
-    # Early exit only stops the loop short when EVERY row decided, so
-    # whenever the fallback below is reachable (some row undecided) the
-    # stream was exhausted and `acc` IS the full (or levels-truncated)
-    # result — the fallback argmax is identical on both control flows.
-    logits = (acc.astype(jnp.float32) * xsf * wsr).astype(out_dtype)
-    full = logits.astype(jnp.float32)
-    if bias is not None:
-        logits = logits + bias.astype(logits.dtype)
-        full = full + bias.astype(jnp.float32)
-    tok = jnp.where(done, tok, jnp.argmax(full, axis=-1).astype(jnp.int32))
-    return logits, tok, lv
+    return finalize(acc, carry)
 
 
 # ------------------------------------------------- sharded streaming walk
@@ -569,7 +542,7 @@ def sharded_walk_axes(lead: tuple[int, ...], n: int, mesh=None):
 
 
 def _streaming_argmax_sharded(xq, wq, xs, ws, n_bits, log2_radix, levels,
-                              bias, out_dtype, safety, early_exit,
+                              bias, out_dtype, safety, early_exit, policy,
                               mesh, dp, model_ax):
     """The ``shard_map``ped consensus level walk behind
     :func:`streaming_argmax` (see its docstring for routing).
@@ -600,6 +573,12 @@ def _streaming_argmax_sharded(xq, wq, xs, ws, n_bits, log2_radix, levels,
     ``done_fn`` reads that scalar — every device stops at the SAME
     level, the fleet-wide slowest row's, which is exactly where the
     single-device while loop stops for the full batch.
+
+    The decision fold itself is core/policy.py:head_walk_machinery —
+    the SAME fold as the local walk, with the cross-shard reductions
+    (pmax/pmin over ``model``, the consensus psum over ``dp``) switched
+    on by the axis names.  Per-row policies shard their rows over the
+    data axes like every other per-row carry.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -611,95 +590,43 @@ def _streaming_argmax_sharded(xq, wq, xs, ws, n_bits, log2_radix, levels,
     n_total = _rhs_n(wq)
     wsr = ws.reshape(1, -1).astype(jnp.float32)
     xsf = xs.astype(jnp.float32)
-    eps = 8.0 * jnp.finfo(jnp.float32).eps
     has_bias = bias is not None
     b_arr = bias.reshape(-1) if has_bias else jnp.zeros((n_total,), jnp.float32)
     dp_spec = dp if dp else None
+    if policy is not None:
+        assert policy.mode.shape == (m,), \
+            f"policy rows {policy.mode.shape} != batch rows ({m},)"
 
-    def walk(bf32, xq_s, wq_s, xsf_s, wsr_s, bias_s):
-        m_l = _lhs_lead(xq_s)[-1]
-        n_l = _rhs_n(wq_s)
-        off = (jax.lax.axis_index(model_ax) * n_l if model_ax
-               else jnp.int32(0))
-        col = off + jnp.arange(n_l, dtype=jnp.int32)
-
-        def vmax_all(v):  # exact: max commutes/associates exactly
-            return jax.lax.pmax(v, model_ax) if model_ax else v
-
-        def vmin_all(v):
-            return jax.lax.pmin(v, model_ax) if model_ax else v
-
-        def gmax_first(vals):
-            """(global max, FIRST global index achieving it) — exactly
-            ``jnp.argmax``'s value and tie-break on the unsharded row."""
-            vmax_l = jnp.max(vals, axis=-1)
-            amax_l = jnp.argmax(vals, axis=-1).astype(jnp.int32) + off
-            vmax = vmax_all(vmax_l)
-            cand = jnp.where(vmax_l == vmax, amax_l, jnp.int32(n_total))
-            return vmax, vmin_all(cand)
-
-        def fold(carry, partial, idx):
-            tok, lv, done, _ = carry
-            values = partial.astype(jnp.float32) * xsf_s * wsr_s
-            if has_bias:
-                values = values + bias_s.astype(jnp.float32)[None, :]
-            vmax_abs = vmax_all(jnp.max(jnp.abs(values), axis=-1,
-                                        keepdims=True))
-            bvec = bf32[idx] * xsf_s * wsr_s * (1.0 + safety) + eps * vmax_abs
-            _, gtop = gmax_first(values)
-            own = col[None, :] == gtop[:, None]
-            # decision_state on the sharded row: lb of the owned winner,
-            # ub of everything else — the same single masked entry
-            lb_top = vmax_all(jnp.max(
-                jnp.where(own, values - bvec, -jnp.inf), axis=-1))
-            ub_others = vmax_all(jnp.max(
-                jnp.where(own, -jnp.inf, values + bvec), axis=-1))
-            decided = lb_top > ub_others
-            newly = decided & ~done
-            tok = jnp.where(newly, gtop, tok)
-            lv = jnp.where(newly, idx, lv)
-            done = done | decided
-            # the consensus scalar is only read by the while loop's
-            # done_fn; the fixed scan must not pay a per-level psum for
-            # a flag nobody reads (loop-carried values are not DCE'd)
-            if early_exit:
-                n_done = jnp.sum(done.astype(jnp.int32))
-                if dp:
-                    n_done = jax.lax.psum(n_done, dp)
-                all_done = n_done == m
-            else:
-                all_done = jnp.bool_(False)
-            return tok, lv, done, all_done
-
-        init = (jnp.zeros((m_l,), jnp.int32),
-                jnp.full((m_l,), max(n_levels - 1, 0), jnp.int32),
-                jnp.zeros((m_l,), bool),
-                jnp.bool_(False))
+    def walk(bf32, xq_s, wq_s, xsf_s, wsr_s, bias_s, *maybe_policy):
+        policy_s = maybe_policy[0] if maybe_policy else None
+        fold, init, done_fn, finalize = head_walk_machinery(
+            bf32, xsf_s, wsr_s, bias_s if has_bias else None, out_dtype,
+            safety=safety, n_levels=n_levels, m_global=m, n_total=n_total,
+            policy=policy_s, early_exit=early_exit,
+            model_ax=model_ax, dp=dp)
         if early_exit:
-            acc, (tok, lv, done, _), _ = streaming_matmul_while(
-                xq_s, wq_s, fold, init, lambda c: c[3],
+            acc, carry, _ = streaming_matmul_while(
+                xq_s, wq_s, fold, init, done_fn,
                 n_bits, log2_radix, levels)
         else:
-            acc, (tok, lv, done, _), _ = streaming_matmul_scan(
+            acc, carry, _ = streaming_matmul_scan(
                 xq_s, wq_s, fold, init, n_bits, log2_radix, levels)
         # dequantize + fallback exactly as the single-device path: the
         # out_dtype round-trip must match bit for bit
-        logits = (acc.astype(jnp.float32) * xsf_s * wsr_s).astype(out_dtype)
-        full = logits.astype(jnp.float32)
-        if has_bias:
-            logits = logits + bias_s.astype(logits.dtype)[None, :]
-            full = full + bias_s.astype(jnp.float32)[None, :]
-        _, fallback = gmax_first(full)
-        tok = jnp.where(done, tok, fallback)
-        return logits, tok, lv
+        return finalize(acc, carry)
 
+    args = [bounds.f32, xq, wq, xsf, wsr, b_arr]
+    in_specs = [P(None), P(dp_spec, None), P(None, model_ax),
+                P(dp_spec, None), P(None, model_ax), P(model_ax)]
+    if policy is not None:
+        args.append(policy)
+        in_specs.append(LevelPolicy(P(dp_spec), P(dp_spec), P(dp_spec)))
     fn = shard_map(
         walk, mesh,
-        in_specs=(P(None), P(dp_spec, None), P(None, model_ax),
-                  P(dp_spec, None), P(None, model_ax), P(model_ax)),
+        in_specs=tuple(in_specs),
         out_specs=(P(dp_spec, model_ax), P(dp_spec), P(dp_spec)),
         check_rep=False)
-    return fn(bounds.f32, xq, wq, xsf, wsr, b_arr)
+    return fn(*args)
 
 
 def earliest_decision_level(result: ProgressiveResult) -> jax.Array:

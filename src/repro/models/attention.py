@@ -22,7 +22,8 @@ import numpy as np
 from repro.core.l2r_attention import (attn_scores_stacked,
                                       attn_scores_streaming_while,
                                       quantize_per_vector)
-from repro.core.progressive import decision_state, level_bounds
+from repro.core.policy import LevelPolicy, attn_walk_machinery
+from repro.core.progressive import level_bounds
 from repro.core.quant import PlaneOperands, QuantConfig, _symmetric_quant
 
 __all__ = [
@@ -46,11 +47,13 @@ def attn_exit_tap():
     """Collect per-call decode-attention exit levels (EAGER calls only).
 
     Yields a list; every eager ``decode_attention(..., early_exit=True)``
-    call inside the context appends its levels-run scalar (int).  Calls
-    under ``jit`` see tracers and record nothing — the tap is a
-    demo/diagnostic hook (examples/progressive_attention.py), not an aux
-    output channel.  Call order is evaluation order, i.e. layer order
-    for a single decode step.
+    call inside the context appends its levels-run scalar (int).  The
+    tap is a demo/diagnostic hook (examples/progressive_attention.py),
+    not an aux output channel — exit levels under ``jit`` are tracers
+    with no runtime value, so a TRACED call inside an active tap raises
+    ``RuntimeError`` instead of silently recording nothing (run the
+    tapped call eagerly, e.g. under ``jax.disable_jit()``).  Call order
+    is evaluation order, i.e. layer order for a single decode step.
     """
     global _EXIT_TAP
     prev, records = _EXIT_TAP, []
@@ -289,6 +292,7 @@ def decode_attention(
     exit_tol: float = 1e-4,
     k_planes: jax.Array | PlaneOperands | None = None,
     k_scale: jax.Array | None = None,
+    policy: LevelPolicy | None = None,
 ) -> jax.Array:
     """Single-token attention against a (possibly ring) cache.
 
@@ -308,12 +312,26 @@ def decode_attention(
     ``lax.while_loop`` over significance levels that stops once every
     (batch, kv-head, group) score row has BOTH its running max decided
     (the argmax margin beats the scaled tail bound —
-    core/progressive.py:decision_state) and its normalizer pinned (every
+    core/policy.py:decision_state) and its normalizer pinned (every
     unmasked score known to within ``exit_tol``, so softmax weights are
     stable at the tolerance).  Rows that never decide consume the whole
     stream, making the output exactly the full-depth quantized result;
     decided rows return softmax over the exit-level prefix.  Incompatible
     with ``softcap``.
+
+    ``policy`` (core/policy.py:LevelPolicy, one row per BATCH entry)
+    runs the walk with per-row precision classes instead of the
+    batch-global knobs: ``bounded(tol)`` rows use their own normalizer
+    tolerance (``bounded(exit_tol)`` == the legacy early-exit walk bit
+    for bit), ``budget(L)`` rows SNAPSHOT their int32 score prefix at
+    level L — their softmax sees exactly the ``levels=L`` scores, bit-
+    identical to a truncated run, even when batch-mates stream deeper —
+    and ``exact`` rows never early-commit (the loop runs full depth for
+    them, output == the full stacked schedule).  Bounded rows keep the
+    batch-coupled legacy semantics: their softmax runs over the prefix
+    at the GLOBAL stop level, so non-argmax weights can move within the
+    tolerance relative to a solo run (the decision, not the score bits,
+    is the guarantee).  Implies the progressive walk; requires ``l2r``.
     """
     b, _, h, dh = q.shape
     kv_heads = k_cache.shape[2]
@@ -355,7 +373,7 @@ def decode_attention(
     def dequant(acc):
         return acc.astype(jnp.float32) * qs_t * ks_t * sf
 
-    if not early_exit:
+    if not early_exit and policy is None:
         s_int = attn_scores_stacked(qq, k_op, l2r.n_bits, l2r.log2_radix,
                                     levels)
         s = dequant(s_int)
@@ -369,40 +387,39 @@ def decode_attention(
 
     # ---- margin-bounded progressive walk -----------------------------
     if softcap is not None:
-        raise ValueError("early_exit attention does not compose with "
-                         "softcap: tanh re-scales the score margins the "
-                         "tail bounds are stated in")
+        raise ValueError("progressive attention (early_exit/policy) does "
+                         "not compose with softcap: tanh re-scales the "
+                         "score margins the tail bounds are stated in")
     bounds = level_bounds(l2r.planes, l2r.log2_radix, dh, levels)
     n_levels = int(bounds.f32.shape[0])
-    safety = 1e-5
-    eps = 8.0 * jnp.finfo(jnp.float32).eps
-    neg = jnp.float32(-1e30)
-
-    def fold(carry, partial, idx):
-        done, lv = carry
-        values = jnp.where(valid_b, dequant(partial), neg)[:, :, :, 0, :]
-        vmax = jnp.max(jnp.abs(jnp.where(valid_b[:, :, :, 0, :], values,
-                                         0.0)), axis=-1, keepdims=True)
-        # per-entry bound on the unseen tail, in the scaled score domain;
-        # masked slots are EXACT (-1e30 by fiat) -> bound 0
-        bvec = bounds.f32[idx] * qs_t[:, :, :, 0, :] * ks_t[:, :, :, 0, :] \
-            * sf * (1.0 + safety) + eps * vmax
-        bvec = jnp.where(valid_b[:, :, :, 0, :], bvec, 0.0)
-        max_decided, _ = decision_state(values, bvec)
-        norm_decided = jnp.max(bvec, axis=-1) <= exit_tol
-        newly = (max_decided & norm_decided) & ~done
-        lv = jnp.where(newly, idx, lv)
-        return done | newly, lv
-
-    init = (jnp.zeros((b, kv_heads, g), bool),
-            jnp.full((b, kv_heads, g), max(n_levels - 1, 0), jnp.int32))
-    acc, (done, lv), levels_run = attn_scores_streaming_while(
-        qq, k_op, fold, init, lambda c: jnp.all(c[0]),
+    fold, init, done_fn = attn_walk_machinery(
+        bounds.f32, dequant, valid_b,
+        qs_t[:, :, :, 0, :] * ks_t[:, :, :, 0, :] * sf,
+        rows_shape=(b, kv_heads, g), n_levels=n_levels,
+        exit_tol=exit_tol, policy=policy,
+        score_shape=(b, kv_heads, g, 1, k_cache.shape[1]))
+    acc, carry, levels_run = attn_scores_streaming_while(
+        qq, k_op, fold, init, done_fn,
         l2r.n_bits, l2r.log2_radix, levels)
-    if _EXIT_TAP is not None and not isinstance(levels_run, jax.core.Tracer):
+    if policy is None:
+        _done, lv = carry
+        s_int = acc
+    else:
+        _done, lv, forced_any, s_commit = carry
+        # budget rows committed at their clamp level: serve THEIR softmax
+        # from the snapshotted prefix so mixed batches stay bit-identical
+        # to a solo levels=L run even when batch-mates stream deeper.
+        s_int = jnp.where(forced_any[..., None, None], s_commit, acc)
+    if _EXIT_TAP is not None:
+        if isinstance(levels_run, jax.core.Tracer):
+            raise RuntimeError(
+                "attn_exit_tap() cannot record under jit: levels_run is a "
+                "tracer, so the tap would silently capture nothing. Run the "
+                "tapped call eagerly (e.g. under jax.disable_jit()) or drop "
+                "the tap around traced code.")
         _EXIT_TAP.append({"levels_run": int(levels_run),
                           "exit_levels": np.asarray(lv)})
-    s = jnp.where(valid_b, dequant(acc), -1e30)
+    s = jnp.where(valid_b, dequant(s_int), -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)

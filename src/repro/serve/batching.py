@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.policy import LevelPolicy, PrecisionClass
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_lm_state
 from .engine import (_bspec, bucket_for, make_bucket_prefill_step,
@@ -33,7 +34,7 @@ from .engine import (_bspec, bucket_for, make_bucket_prefill_step,
                      state_specs, supports_bucketed_prefill)
 
 __all__ = ["Request", "ContinuousBatcher", "infer_batch_axes",
-           "state_batch_axes", "latency_percentiles"]
+           "state_batch_axes", "latency_percentiles", "progressive_stats"]
 
 
 def latency_percentiles(ttft: list, tpot: list) -> dict:
@@ -44,6 +45,48 @@ def latency_percentiles(ttft: list, tpot: list) -> dict:
 
     return {"ttft_p50_s": p(ttft, 50), "ttft_p99_s": p(ttft, 99),
             "tpot_p50_s": p(tpot, 50), "tpot_p99_s": p(tpot, 99)}
+
+
+def progressive_stats(n_levels: int, exit_hist, prefill_exit_hist,
+                      exit_hist_by_class: dict,
+                      prefill_exit_hist_by_class: dict) -> dict:
+    """The progressive saved-levels stats block, shared by
+    `ContinuousBatcher.stats` and `ServingGateway.stats` so the
+    histogram schema cannot drift between the two engines (they once
+    disagreed on raw-int vs stringified level keys).
+
+    Normalized schema, the ONE place it is defined:
+
+      * level histograms are positional lists indexed by 0-based MSDF
+        exit level (``hist[l]`` = tokens committed after ``l + 1``
+        levels) — never level-keyed dicts;
+      * per-class maps key on the precision class's
+        :meth:`~repro.core.policy.PrecisionClass.label` STRING
+        ("exact", "budget(3)", "bounded(0.0001)"), sorted, each value a
+        positional level-hist list of the same length.
+    """
+    levels = np.arange(n_levels)
+    total = int(np.sum(exit_hist))
+    mean_exit = (float((exit_hist * levels).sum() / total)
+                 if total else 0.0)
+    total_p = int(np.sum(prefill_exit_hist))
+    return dict(
+        n_levels=n_levels,
+        exit_level_hist=np.asarray(exit_hist).tolist(),
+        mean_exit_level=mean_exit,
+        mean_levels_saved=(float(n_levels - 1 - mean_exit)
+                          if total else 0.0),
+        prefill_exit_level_hist=np.asarray(prefill_exit_hist).tolist(),
+        mean_prefill_exit_level=(
+            float((prefill_exit_hist * levels).sum() / total_p)
+            if total_p else 0.0),
+        exit_level_hist_by_class={
+            k: np.asarray(v).tolist()
+            for k, v in sorted(exit_hist_by_class.items())},
+        prefill_exit_level_hist_by_class={
+            k: np.asarray(v).tolist()
+            for k, v in sorted(prefill_exit_hist_by_class.items())},
+    )
 
 
 @dataclasses.dataclass
@@ -61,6 +104,9 @@ class Request:
     # (the first generated token, committed from the LAST prompt
     # position's logit stream)
     prefill_exit_level: int | None = None
+    # progressive mode: this request's precision class (exact / budget /
+    # bounded — core/policy.py).  None = the engine's default class.
+    precision: PrecisionClass | None = None
     done: bool = False
     # latency timestamps (time.perf_counter seconds).  ``t_arrival`` is
     # stamped at submit() unless the caller pre-stamped it (traffic
@@ -150,7 +196,8 @@ class ContinuousBatcher:
                  max_len: int = 128, cache_dtype=jnp.float32,
                  progressive: bool = False, early_exit: bool = False,
                  mesh=None, state_sharding: str = "replicated",
-                 donate_state: bool = True, bucketed: bool | None = None):
+                 donate_state: bool = True, bucketed: bool | None = None,
+                 default_class: PrecisionClass | None = None):
         """``mesh`` (default: the installed ``sharding.ctx`` mesh) makes
         the engine mesh-aware: the progressive head stream runs the
         shard_mapped consensus walk (vocab over "model", slot rows over
@@ -198,6 +245,16 @@ class ContinuousBatcher:
         Default None = auto: on for attention-mixer families (and, with
         local windows, when the cache bound fits the window), off
         otherwise.
+
+        ``default_class`` (progressive mode) is the
+        :class:`~repro.core.policy.PrecisionClass` applied to requests
+        that do not carry their own ``Request.precision``, and to idle
+        slot rows.  Default ``bounded(0.0)`` — bit-identical to the
+        legacy batch-global early-exit walk, so a batcher constructed
+        without policies serves exactly what it always served.  Each
+        admitted request's class is spliced into the per-slot
+        :class:`~repro.core.policy.LevelPolicy` rows, so one fused
+        decode loop serves a heterogeneous exact/budget/bounded batch.
         """
         from repro.sharding import ctx
 
@@ -267,20 +324,45 @@ class ContinuousBatcher:
         self.steps = 0
         # saved-levels accounting (progressive mode): histograms over the
         # MSDF exit level of every decoded token across all requests AND
-        # of every streamed prefill head (the first generated token)
+        # of every streamed prefill head (the first generated token),
+        # plus the same histograms split per precision class
         self.n_levels = (2 * cfg.l2r.planes - 1
                          if progressive and cfg.l2r is not None else 0)
         self.exit_hist = np.zeros(max(self.n_levels, 1), np.int64)
         self.prefill_exit_hist = np.zeros(max(self.n_levels, 1), np.int64)
+        if default_class is not None and not progressive:
+            raise ValueError("default_class steers the progressive head "
+                             "walk: requires progressive=True")
+        self.default_class = (default_class or PrecisionClass.bounded()
+                              if progressive else None)
+        self.slot_policy = (LevelPolicy.from_classes(
+            [self.default_class] * n_slots) if progressive else None)
+        seed = ({self.default_class.label():
+                 np.zeros(max(self.n_levels, 1), np.int64)}
+                if progressive else {})
+        self.exit_hist_by_class = {k: v.copy() for k, v in seed.items()}
+        self.prefill_exit_hist_by_class = dict(seed)
         # per-request latency samples, recorded at retirement (seconds)
         self._ttft: list[float] = []
         self._tpot: list[float] = []
 
     # ------------------------------------------------------------- api
     def submit(self, req: Request):
+        if req.precision is not None and not self.progressive:
+            raise ValueError("Request.precision steers the progressive "
+                             "head walk: requires progressive=True")
         if req.t_arrival is None:
             req.t_arrival = time.perf_counter()
         self.queue.append(req)
+
+    def _class_of(self, req: Request) -> PrecisionClass:
+        return req.precision if req.precision is not None \
+            else self.default_class
+
+    def _class_hist(self, hists: dict, label: str) -> np.ndarray:
+        if label not in hists:
+            hists[label] = np.zeros(max(self.n_levels, 1), np.int64)
+        return hists[label]
 
     def _prefill_request(self, req: Request):
         """One-sequence prefill, through the bucket pad when enabled.
@@ -290,17 +372,24 @@ class ContinuousBatcher:
         BUCKET shape instead of one per unique prompt length, and the
         returned state is bit-identical to the unpadded prefill (pad
         cache entries are masked empty, ``pos`` is the true length).
+
+        Progressive: the request's precision class rides along as a
+        one-row LevelPolicy (class VALUES are array contents, never
+        trace shapes — mixing classes cannot retrace).
         """
         prompt = np.asarray(req.prompt, np.int32)
+        pol1 = (LevelPolicy.from_classes([self._class_of(req)])
+                if self.progressive else None)
         if self.bucketed:
             lb = bucket_for(len(prompt), self._buckets)
             padded = np.zeros((1, lb), np.int32)
             padded[0, :len(prompt)] = prompt
             return self._bucket_prefill(
                 self.params, jnp.asarray(padded),
-                jnp.asarray([len(prompt)], jnp.int32))
+                jnp.asarray([len(prompt)], jnp.int32), pol1)
         return self._prefill1(self.params,
-                              {"tokens": jnp.asarray(prompt[None, :])})
+                              {"tokens": jnp.asarray(prompt[None, :])},
+                              pol1)
 
     def _admit(self):
         for slot in range(self.n_slots):
@@ -310,12 +399,17 @@ class ContinuousBatcher:
             if self.progressive:
                 # batch-progressive prefill: the head streams the LAST
                 # prompt position only, committing the first token at its
-                # earliest sound level
+                # earliest sound level (under the request's class)
                 st1, _, tok, lv = self._prefill_request(req)
                 first = tok[0, 0]
                 level = int(lv[0, 0])
                 req.prefill_exit_level = level
                 self.prefill_exit_hist[level] += 1
+                cls = self._class_of(req)
+                self._class_hist(self.prefill_exit_hist_by_class,
+                                 cls.label())[level] += 1
+                # splice the class into the live per-slot policy rows
+                self.slot_policy = self.slot_policy.set_row(slot, cls)
             else:
                 st1, logits = self._prefill_request(req)
                 first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
@@ -348,6 +442,12 @@ class ContinuousBatcher:
                             (req.t_complete - req.t_first_token)
                             / (len(req.output) - 1))
                 self.slot_req[slot] = None
+                if self.progressive:
+                    # idle rows revert to the default class so an
+                    # `exact` occupant cannot pin the early-exit loop
+                    # at full depth after retirement
+                    self.slot_policy = self.slot_policy.set_row(
+                        slot, self.default_class)
 
     def step(self):
         """One engine iteration: admit, decode all active slots, retire."""
@@ -356,7 +456,8 @@ class ContinuousBatcher:
             return False
         if self.progressive:
             self.state, nxt, _, lv = self._decode(self.params, self.state,
-                                                  self.cur_tok)
+                                                  self.cur_tok, None,
+                                                  self.slot_policy)
         else:
             self.state, nxt, _ = self._decode(self.params, self.state,
                                               self.cur_tok)
@@ -369,6 +470,8 @@ class ContinuousBatcher:
                     level = int(lv[slot, 0])
                     req.exit_levels.append(level)
                     self.exit_hist[level] += 1
+                    self._class_hist(self.exit_hist_by_class,
+                                     self._class_of(req).label())[level] += 1
         self.steps += 1
         self._retire()
         return True
@@ -394,7 +497,9 @@ class ContinuousBatcher:
         construction on — they used to appear only once the first
         token/prefill landed, so monitoring consumers scraping stats()
         saw the dict change shape mid-run.  Means over zero events are
-        reported as 0.0.
+        reported as 0.0.  The histogram block (including the per-class
+        split, string-label keys) is the shared `progressive_stats`
+        schema — identical to `ServingGateway.stats`.
 
         ``latency=True`` additionally reports per-request wall-clock
         percentiles over RETIRED requests (completed count, p50/p99
@@ -408,22 +513,12 @@ class ContinuousBatcher:
             out.update(completed=len(self._ttft),
                        **latency_percentiles(self._ttft, self._tpot))
         if self.progressive:
-            levels = np.arange(self.n_levels)
-            total = int(self.exit_hist.sum())
-            mean_exit = (float((self.exit_hist * levels).sum() / total)
-                         if total else 0.0)
-            total_p = int(self.prefill_exit_hist.sum())
             out.update(
-                n_levels=self.n_levels,
-                tokens=total,
-                exit_level_hist=self.exit_hist.tolist(),
-                mean_exit_level=mean_exit,
-                mean_levels_saved=(float(self.n_levels - 1 - mean_exit)
-                                   if total else 0.0),
-                prefills=total_p,
-                prefill_exit_level_hist=self.prefill_exit_hist.tolist(),
-                mean_prefill_exit_level=(
-                    float((self.prefill_exit_hist * levels).sum() / total_p)
-                    if total_p else 0.0),
+                tokens=int(self.exit_hist.sum()),
+                prefills=int(self.prefill_exit_hist.sum()),
+                **progressive_stats(self.n_levels, self.exit_hist,
+                                    self.prefill_exit_hist,
+                                    self.exit_hist_by_class,
+                                    self.prefill_exit_hist_by_class),
             )
         return out

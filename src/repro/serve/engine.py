@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.policy import LevelPolicy
 from repro.core.progressive import streaming_argmax
 from repro.core.quant import QuantConfig, QuantizedWeights, quantize
 from repro.models.attention import KVCache
@@ -201,12 +202,35 @@ def abstract_state(cfg: ModelConfig, batch: int, max_len: int,
 
 
 # ------------------------------------------------------------ step factories
+def _check_step_flags(progressive: bool, early_exit: bool,
+                      policy: LevelPolicy | None = None) -> None:
+    """Reject contradictory step-factory flag combinations.
+
+    ``early_exit``/``levels`` knobs are kept as shims over the
+    :class:`~repro.core.policy.LevelPolicy` path, but both shim and
+    policy ride the progressive head stream — asking for either with
+    ``progressive=False`` is a contradiction, not a silent no-op."""
+    if early_exit and not progressive:
+        raise ValueError(
+            "contradictory arguments: early_exit=True requires "
+            "progressive=True — early_exit stops the streamed head's "
+            "level loop, which only exists on the progressive path "
+            "(got progressive=False, early_exit=True)")
+    if policy is not None and not progressive:
+        raise ValueError(
+            "contradictory arguments: policy requires progressive=True — "
+            "LevelPolicy rows steer the streamed head's level walk, which "
+            "only exists on the progressive path "
+            "(got progressive=False with policy set)")
+
+
 def make_prefill_step(cfg: ModelConfig, max_len: int,
                       cache_dtype=jnp.bfloat16,
                       progressive: bool = False,
                       early_exit: bool = False,
                       backbone_hints: bool = True,
-                      mesh: Mesh | None = None) -> Callable:
+                      mesh: Mesh | None = None,
+                      policy: LevelPolicy | None = None) -> Callable:
     """(params, batch) -> (state, last_token_logits).
 
     ``progressive=True`` (LM families, requires ``cfg.l2r``) is
@@ -231,15 +255,20 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
     to the unmeshed trace.  ``mesh`` overrides the installed context
     mesh for the head stream (callers holding an explicit mesh — the
     batcher — must not depend on the module global being set).
+
+    ``policy`` (factory default, overridable per call as a trailing
+    step argument) routes the head stream through per-row
+    :class:`~repro.core.policy.LevelPolicy` precision classes — one row
+    per batch entry; ``early_exit`` stays as the batch-global shim.
     """
-    assert progressive or not early_exit, \
-        "early_exit stops the streamed head: requires progressive=True"
+    _check_step_flags(progressive, early_exit, policy)
+    default_policy = policy
     if progressive:
         assert cfg.family != "encdec", "progressive prefill: LM families only"
         assert cfg.l2r is not None, \
             "progressive prefill streams the quantized head: set cfg.l2r"
 
-    def prefill(params, batch):
+    def prefill(params, batch, policy=None):
         from contextlib import ExitStack
 
         from repro.sharding import ctx
@@ -247,9 +276,9 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
         with ExitStack() as stack:
             if not backbone_hints:
                 stack.enter_context(ctx.hints_disabled())
-            return _prefill_body(params, batch)
+            return _prefill_body(params, batch, policy)
 
-    def _prefill_body(params, batch):
+    def _prefill_body(params, batch, policy=None):
         if cfg.family == "encdec":
             state = init_encdec_state(cfg, batch["tokens"].shape[0], max_len,
                                       cache_dtype)
@@ -268,7 +297,8 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
         if progressive:
             logits, tok, lv = progressive_logits_from_hidden(
                 cfg, params, hidden[:, -1:], early_exit=early_exit,
-                mesh=mesh)
+                mesh=mesh,
+                policy=policy if policy is not None else default_policy)
             return state, logits, tok.astype(jnp.int32), lv
         logits = logits_from_hidden(cfg, params, hidden[:, -1:])
         return state, logits
@@ -346,7 +376,8 @@ def make_bucket_prefill_step(cfg: ModelConfig, max_len: int,
                              progressive: bool = False,
                              early_exit: bool = False,
                              backbone_hints: bool = True,
-                             mesh: Mesh | None = None) -> Callable:
+                             mesh: Mesh | None = None,
+                             policy: LevelPolicy | None = None) -> Callable:
     """(params, tokens (B, Lb), true_len (B,)) -> make_prefill_step returns.
 
     The bucketed form of :func:`make_prefill_step`: ``tokens`` is a
@@ -363,17 +394,21 @@ def make_bucket_prefill_step(cfg: ModelConfig, max_len: int,
     ignore their outputs.  Attention families only (see
     :func:`supports_bucketed_prefill`); local (ring) windows require
     the bucket to fit the window, asserted at trace time.
+
+    ``policy`` works as in :func:`make_prefill_step`: factory default,
+    per-call trailing override (the gateway lowers the policy
+    positionally into each bucket's AOT executable).
     """
-    assert progressive or not early_exit, \
-        "early_exit stops the streamed head: requires progressive=True"
+    _check_step_flags(progressive, early_exit, policy)
     assert supports_bucketed_prefill(cfg), \
         "bucketed prefill: attention-mixer LM families only"
+    default_policy = policy
     if progressive:
         assert cfg.l2r is not None, \
             "progressive prefill streams the quantized head: set cfg.l2r"
     local = any(k == "local" for k, _ in cfg.layer_kinds())
 
-    def prefill(params, tokens, true_len):
+    def prefill(params, tokens, true_len, policy=None):
         from contextlib import ExitStack
 
         from repro.sharding import ctx
@@ -381,9 +416,9 @@ def make_bucket_prefill_step(cfg: ModelConfig, max_len: int,
         with ExitStack() as stack:
             if not backbone_hints:
                 stack.enter_context(ctx.hints_disabled())
-            return _body(params, tokens, true_len)
+            return _body(params, tokens, true_len, policy)
 
-    def _body(params, tokens, true_len):
+    def _body(params, tokens, true_len, policy=None):
         bsz, lb = tokens.shape
         if local:
             assert lb <= cfg.window, (
@@ -398,7 +433,8 @@ def make_bucket_prefill_step(cfg: ModelConfig, max_len: int,
         state = _mask_bucket_state(state, true_len)
         if progressive:
             logits, tok, lv = progressive_logits_from_hidden(
-                cfg, params, h_last, early_exit=early_exit, mesh=mesh)
+                cfg, params, h_last, early_exit=early_exit, mesh=mesh,
+                policy=policy if policy is not None else default_policy)
             return state, logits, tok.astype(jnp.int32), lv
         return state, logits_from_hidden(cfg, params, h_last)
 
@@ -407,7 +443,8 @@ def make_bucket_prefill_step(cfg: ModelConfig, max_len: int,
 
 def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden,
                                    early_exit: bool = False,
-                                   mesh: Mesh | None = None):
+                                   mesh: Mesh | None = None,
+                                   policy: LevelPolicy | None = None):
     """Stream the LM head level-by-level, committing each row's token at
     its earliest sound MSDF level.
 
@@ -427,6 +464,13 @@ def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden,
     vocab shards over ``model``, early exit at the fleet-wide slowest
     row — with bit-identical logits, tokens, and exit levels
     (core/progressive.py:streaming_argmax, sharded walk).
+
+    ``policy`` carries per-row :class:`~repro.core.policy.LevelPolicy`
+    precision classes — one row per FLATTENED lead entry of ``hidden``
+    (decode: one per batch slot) — threaded straight into the shared
+    decision fold; ``exact`` rows roundtrip the full stream, ``budget``
+    rows clamp at their level, ``bounded`` rows early-commit at their
+    own tolerance.
     """
     qcfg = cfg.l2r or QuantConfig()
     if "head_q" in params:  # the prepare_params load-time head cache
@@ -444,18 +488,22 @@ def progressive_logits_from_hidden(cfg: ModelConfig, params, hidden,
     lead = hidden.shape[:-1]
     x2 = hidden.reshape(-1, hidden.shape[-1])
     xq, xs = quantize(x2, qcfg, axis=0 if qcfg.per_channel else None)
+    if policy is not None:
+        policy = policy.reshape((x2.shape[0],))
     logits, tok, lv = streaming_argmax(xq, wq, xs, ws, qcfg.n_bits,
                                        qcfg.log2_radix,
                                        levels=cfg.l2r_levels,
                                        out_dtype=hidden.dtype,
-                                       early_exit=early_exit, mesh=mesh)
+                                       early_exit=early_exit, mesh=mesh,
+                                       policy=policy)
     return (logits.reshape(*lead, -1), tok.reshape(lead), lv.reshape(lead))
 
 
 def make_decode_step(cfg: ModelConfig, progressive: bool = False,
                      early_exit: bool = False,
                      backbone_hints: bool = True,
-                     mesh: Mesh | None = None) -> Callable:
+                     mesh: Mesh | None = None,
+                     policy: LevelPolicy | None = None) -> Callable:
     """(params, state, tokens (B,1)) -> (state, next_tokens (B,1), logits).
 
     ``progressive=True`` (LM families, requires ``cfg.l2r``) streams the
@@ -473,15 +521,22 @@ def make_decode_step(cfg: ModelConfig, progressive: bool = False,
     during tracing — the replicated-backbone mesh setting — and ``mesh``
     overrides the context mesh for the head stream; see
     :func:`make_prefill_step`.
+
+    ``policy`` (factory default, overridable per call as the trailing
+    step argument — ``decode(params, state, tokens, rope_positions,
+    policy)``) streams the head under per-slot
+    :class:`~repro.core.policy.LevelPolicy` precision classes; the
+    batcher/gateway splice admitted requests' classes into the slot
+    rows so one fused while loop serves heterogeneous SLAs.
     """
-    assert progressive or not early_exit, \
-        "early_exit stops the streamed head: requires progressive=True"
+    _check_step_flags(progressive, early_exit, policy)
+    default_policy = policy
     if progressive:
         assert cfg.family != "encdec", "progressive decode: LM families only"
         assert cfg.l2r is not None, \
             "progressive decode streams the quantized head: set cfg.l2r"
 
-    def decode(params, state, tokens, rope_positions=None):
+    def decode(params, state, tokens, rope_positions=None, policy=None):
         from contextlib import ExitStack
 
         from repro.sharding import ctx
@@ -489,9 +544,11 @@ def make_decode_step(cfg: ModelConfig, progressive: bool = False,
         with ExitStack() as stack:
             if not backbone_hints:
                 stack.enter_context(ctx.hints_disabled())
-            return _decode_body(params, state, tokens, rope_positions)
+            return _decode_body(params, state, tokens, rope_positions,
+                                policy)
 
-    def _decode_body(params, state, tokens, rope_positions=None):
+    def _decode_body(params, state, tokens, rope_positions=None,
+                     policy=None):
         if cfg.family == "encdec":
             hidden, state, _ = encdec_forward(
                 cfg, params, tokens=tokens, mode="decode", state=state)
@@ -501,7 +558,8 @@ def make_decode_step(cfg: ModelConfig, progressive: bool = False,
                 mode="decode", state=state)
         if progressive:
             logits, tok, lv = progressive_logits_from_hidden(
-                cfg, params, hidden, early_exit=early_exit, mesh=mesh)
+                cfg, params, hidden, early_exit=early_exit, mesh=mesh,
+                policy=policy if policy is not None else default_policy)
             return state, tok.astype(jnp.int32), logits, lv
         logits = logits_from_hidden(cfg, params, hidden)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)

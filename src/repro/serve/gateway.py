@@ -53,10 +53,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.policy import LevelPolicy, PrecisionClass
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_lm_state
 from .batching import (Request, _splice, latency_percentiles,
-                       state_batch_axes)
+                       progressive_stats, state_batch_axes)
 from .engine import (bucket_for, make_bucket_prefill_step, make_decode_step,
                      prefill_buckets, supports_bucketed_prefill)
 
@@ -146,6 +147,16 @@ class ServingGateway:
     head streams through the sharded consensus walk, the backbone
     traces with interior sharding hints scoped off, and tokens/stats
     stay bit-identical to the unmeshed gateway.
+
+    ``default_class`` mirrors `ContinuousBatcher`: the
+    :class:`~repro.core.policy.PrecisionClass` for requests without
+    their own ``Request.precision`` and for idle/dummy rows (default
+    ``bounded(0.0)`` — the legacy walk bit for bit).  Admission splices
+    each request's class into the per-slot
+    :class:`~repro.core.policy.LevelPolicy` rows, packed prefills carry
+    a per-row group policy, and the AOT executables lower the policy as
+    a trailing positional argument — classes are array VALUES, so no
+    class mix can trigger a trace.
     """
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 8,
@@ -153,7 +164,8 @@ class ServingGateway:
                  progressive: bool = False, early_exit: bool = False,
                  prefill_group: int = 4, buckets: tuple[int, ...] | None = None,
                  mesh=None, aot_warmup: bool = True, async_emit: bool = True,
-                 emit_queue_depth: int = 8):
+                 emit_queue_depth: int = 8,
+                 default_class: PrecisionClass | None = None):
         from repro.sharding import ctx
 
         assert supports_bucketed_prefill(cfg), \
@@ -178,6 +190,14 @@ class ServingGateway:
             self.state = jax.device_put(self.state, sh)
             self.cur_tok = jax.device_put(
                 self.cur_tok, NamedSharding(self.mesh, P(None, None)))
+
+        if default_class is not None and not progressive:
+            raise ValueError("default_class steers the progressive head "
+                             "walk: requires progressive=True")
+        self.default_class = (default_class or PrecisionClass.bounded()
+                              if progressive else None)
+        self.slot_policy = (LevelPolicy.from_classes(
+            [self.default_class] * n_slots) if progressive else None)
 
         # replicated backbone -> interior sharding hints scoped off (see
         # ContinuousBatcher: they would float-reassociate contractions)
@@ -208,6 +228,11 @@ class ServingGateway:
                          if progressive and cfg.l2r is not None else 0)
         self.exit_hist = np.zeros(max(self.n_levels, 1), np.int64)
         self.prefill_exit_hist = np.zeros(max(self.n_levels, 1), np.int64)
+        seed = ({self.default_class.label():
+                 np.zeros(max(self.n_levels, 1), np.int64)}
+                if progressive else {})
+        self.exit_hist_by_class = {k: v.copy() for k, v in seed.items()}
+        self.prefill_exit_hist_by_class = dict(seed)
         self._ttft: list[float] = []
         self._tpot: list[float] = []
         self._tokens = 0
@@ -224,29 +249,54 @@ class ServingGateway:
         """AOT-compile the decode step and one prefill executable per
         bucket (``jit(...).lower(...).compile()``).  Lowering against
         the live (committed) params/state pins the executables' in/out
-        shardings; afterwards no request shape can trigger a trace."""
+        shardings; afterwards no request shape can trigger a trace.
+        Progressive executables take the LevelPolicy rows as a trailing
+        positional argument (class mixes are array values, not trace
+        shapes)."""
         g = self.prefill_group
+
+        def pol_sds(rows):
+            return LevelPolicy(
+                jax.ShapeDtypeStruct((rows,), jnp.int32),
+                jax.ShapeDtypeStruct((rows,), jnp.int32),
+                jax.ShapeDtypeStruct((rows,), jnp.float32))
+
         for lb in self.buckets:
             if lb in self._prefill_exe:
                 continue
+            args = [self.params,
+                    jax.ShapeDtypeStruct((g, lb), jnp.int32),
+                    jax.ShapeDtypeStruct((g,), jnp.int32)]
+            if self.progressive:
+                args.append(pol_sds(g))
             self._prefill_exe[lb] = (
-                jax.jit(self._prefill_fn)
-                .lower(self.params,
-                       jax.ShapeDtypeStruct((g, lb), jnp.int32),
-                       jax.ShapeDtypeStruct((g,), jnp.int32))
-                .compile())
+                jax.jit(self._prefill_fn).lower(*args).compile())
         if self._decode_exe is None:
+            args = [self.params, self.state,
+                    jax.ShapeDtypeStruct((self.n_slots, 1), jnp.int32)]
+            if self.progressive:
+                args.extend([None, pol_sds(self.n_slots)])
             self._decode_exe = (
                 jax.jit(self._decode_fn, donate_argnums=(1,))
-                .lower(self.params, self.state,
-                       jax.ShapeDtypeStruct((self.n_slots, 1), jnp.int32))
-                .compile())
+                .lower(*args).compile())
 
     # ------------------------------------------------------------- api
     def submit(self, req: Request):
+        if req.precision is not None and not self.progressive:
+            raise ValueError("Request.precision steers the progressive "
+                             "head walk: requires progressive=True")
         if req.t_arrival is None:
             req.t_arrival = time.perf_counter()
         self.queue.append(req)
+
+    def _class_of(self, req: Request) -> PrecisionClass:
+        return req.precision if req.precision is not None \
+            else self.default_class
+
+    def _class_hist(self, hists: dict, label: str) -> np.ndarray:
+        if label not in hists:
+            hists[label] = np.zeros(max(self.n_levels, 1), np.int64)
+        return hists[label]
 
     def run(self, requests=None, max_steps: int = 100_000,
             realtime: bool = False):
@@ -299,22 +349,10 @@ class ServingGateway:
                "tokens_per_s": (self._tokens / self._elapsed
                                 if self._elapsed > 0 else 0.0)}
         if self.progressive:
-            levels = np.arange(self.n_levels)
-            total = int(self.exit_hist.sum())
-            mean_exit = (float((self.exit_hist * levels).sum() / total)
-                         if total else 0.0)
-            total_p = int(self.prefill_exit_hist.sum())
-            out.update(
-                n_levels=self.n_levels,
-                exit_level_hist=self.exit_hist.tolist(),
-                mean_exit_level=mean_exit,
-                mean_levels_saved=(float(self.n_levels - 1 - mean_exit)
-                                   if total else 0.0),
-                prefill_exit_level_hist=self.prefill_exit_hist.tolist(),
-                mean_prefill_exit_level=(
-                    float((self.prefill_exit_hist * levels).sum() / total_p)
-                    if total_p else 0.0),
-            )
+            out.update(progressive_stats(self.n_levels, self.exit_hist,
+                                         self.prefill_exit_hist,
+                                         self.exit_hist_by_class,
+                                         self.prefill_exit_hist_by_class))
         if latency:
             out.update(latency_percentiles(self._ttft, self._tpot))
         return out
@@ -363,8 +401,17 @@ class ServingGateway:
                 tokens[i, :len(p)] = p
                 true_len[i] = len(p)
             exe = self._prefill_exe.get(lb, self._prefill_jit)
-            out = exe(self.params, jnp.asarray(tokens),
-                      jnp.asarray(true_len))
+            if self.progressive:
+                # per-row group policy: admitted requests' classes,
+                # dummy pad rows at the default class
+                gcls = [self._class_of(r) for r in group]
+                gcls += [self.default_class] * (g - len(group))
+                out = exe(self.params, jnp.asarray(tokens),
+                          jnp.asarray(true_len),
+                          LevelPolicy.from_classes(gcls))
+            else:
+                out = exe(self.params, jnp.asarray(tokens),
+                          jnp.asarray(true_len))
             if self.progressive:
                 st1, _, tok, lv = out
             else:
@@ -385,6 +432,9 @@ class ServingGateway:
                     if a >= 0 else x, st1, self._axes)
                 self.state = _splice(self.state, row, slot, self._axes)
                 self.cur_tok = self.cur_tok.at[slot, 0].set(tok[i, 0])
+                if self.progressive:
+                    self.slot_policy = self.slot_policy.set_row(
+                        slot, self._class_of(r))
                 entries.append((i, slot, s.gen, r))
             self._dispatch_emit(("prefill", entries, tok, lv))
 
@@ -400,8 +450,13 @@ class ServingGateway:
                           self.max_len - 1 - len(req.prompt)))
 
     def _decode_step(self):
-        out = (self._decode_exe or self._decode_jit)(
-            self.params, self.state, self.cur_tok)
+        if self.progressive:
+            out = (self._decode_exe or self._decode_jit)(
+                self.params, self.state, self.cur_tok, None,
+                self.slot_policy)
+        else:
+            out = (self._decode_exe or self._decode_jit)(
+                self.params, self.state, self.cur_tok)
         if self.progressive:
             self.state, tok, _, lv = out
         else:
@@ -424,6 +479,11 @@ class ServingGateway:
         s.req = None
         s.rem = 0
         s.gen += 1  # stale EOS signals for the old occupant die here
+        if self.progressive:
+            # idle rows revert to the default class (an `exact` leftover
+            # would pin the early-exit loop at full depth)
+            self.slot_policy = self.slot_policy.set_row(
+                slot, self.default_class)
 
     def _drain_eos_signals(self):
         with self._eos_lock:
@@ -460,6 +520,8 @@ class ServingGateway:
                     level = int(lv[row])
                     req.prefill_exit_level = level
                     self.prefill_exit_hist[level] += 1
+                    self._class_hist(self.prefill_exit_hist_by_class,
+                                     self._class_of(req).label())[level] += 1
                 self._land(req, int(tok[row]), slot, gen)
         else:
             for slot, gen, req in entries:
@@ -469,6 +531,8 @@ class ServingGateway:
                     level = int(lv[slot])
                     req.exit_levels.append(level)
                     self.exit_hist[level] += 1
+                    self._class_hist(self.exit_hist_by_class,
+                                     self._class_of(req).label())[level] += 1
                 self._land(req, int(tok[slot]), slot, gen)
 
     def _land(self, req: Request, t: int, slot: int, gen: int):

@@ -18,6 +18,24 @@ def pytest_collection_modifyitems(items):
             item.add_marker(pytest.mark.tier1)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Drop jax's in-process executable caches between test MODULES.
+
+    A full tier-1 run compiles many hundreds of XLA CPU executables into
+    one process; on single-CPU hosts the accumulated JIT state has been
+    observed to segfault the XLA compiler late in the suite (inside
+    backend_compile, at a different test each run — including on trees
+    with no local changes).  Clearing per module bounds the live
+    executable set at the cost of recompiling the handful of helpers
+    shared across modules; correctness is untouched (jitted functions
+    simply retrace on next call)."""
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 @pytest.fixture(autouse=True)
 def _mesh_context_hygiene():
     """Restore sharding.ctx.set_mesh(None) after EVERY test: an installed

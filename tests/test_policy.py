@@ -1,0 +1,573 @@
+"""Per-request precision classes (core/policy.py): the ONE LevelPolicy
+decision fold across the streaming head walk, the sharded consensus
+walk, decode attention, and both serving engines.
+
+Bit-parity contract of the refactor (the acceptance sweeps):
+
+  * ``exact``        == the full-depth stream at every call site;
+  * ``budget(L)``    == the truncated ``levels=L`` run at every L;
+  * ``bounded(0.0)`` == the legacy batch-global early-exit walk;
+  * a MIXED batch serves each row bit-identically to that row alone at
+    its own class (heterogeneous SLAs in one fused while loop), through
+    the raw walks, the ContinuousBatcher, and the ServingGateway —
+    including under the virtual-8-device mesh.
+
+Plus the satellites: the tracing guard on ``attn_exit_tap``, the
+contradictory step-flag validation, the normalized (shared) stats
+histogram schema, and the offline calibration controller.
+"""
+
+import dataclasses
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import (LevelPolicy, MODE_BOUNDED, MODE_BUDGET,
+                               MODE_EXACT, NO_CLAMP, PrecisionClass)
+from repro.core.progressive import streaming_argmax
+from repro.core.quant import QuantConfig
+
+pytestmark = pytest.mark.policy
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------------ class algebra
+def test_precision_class_validation():
+    with pytest.raises(ValueError):
+        PrecisionClass("turbo")
+    with pytest.raises(ValueError):
+        PrecisionClass("budget")  # needs levels
+    with pytest.raises(ValueError):
+        PrecisionClass.budget(0)
+
+
+def test_precision_class_labels_and_rows():
+    assert PrecisionClass.exact().label() == "exact"
+    assert PrecisionClass.budget(3).label() == "budget(3)"
+    assert PrecisionClass.bounded(1e-4).label() == "bounded(0.0001)"
+    assert PrecisionClass.exact().row() == (MODE_EXACT, NO_CLAMP, 0.0)
+    assert PrecisionClass.budget(3).row() == (MODE_BUDGET, 3, 0.0)
+    m, c, t = PrecisionClass.bounded(0.5).row()
+    assert (m, c) == (MODE_BOUNDED, NO_CLAMP) and t == 0.5
+
+
+def test_level_policy_rows_and_set_row():
+    pol = LevelPolicy.exact(3)
+    assert pol.rows == 3
+    assert np.all(np.asarray(pol.mode) == MODE_EXACT)
+    pol = pol.set_row(1, PrecisionClass.budget(2))
+    assert int(pol.mode[1]) == MODE_BUDGET and int(pol.clamp[1]) == 2
+    assert int(pol.mode[0]) == MODE_EXACT
+
+
+# -------------------------------------------------------- head-walk parity
+@pytest.fixture(scope="module")
+def head():
+    from repro.models.protohead import prototype_head
+
+    cfg = QuantConfig()
+    xq, xs, w_q, _ = prototype_head(np.random.default_rng(3), 96, 12, 9,
+                                    cfg=cfg)
+    bias = jnp.asarray(
+        np.random.default_rng(4).normal(size=(12,)).astype(np.float32))
+    return cfg, xq, xs, w_q, bias
+
+
+def _argmax(cfg, xq, xs, w_q, bias=None, **kw):
+    logits, tok, lv = streaming_argmax(xq, w_q.q, xs, w_q.scale, cfg.n_bits,
+                                       cfg.log2_radix, bias=bias, **kw)
+    return jax.tree.map(np.asarray, (logits, tok, lv))
+
+
+@pytest.mark.parametrize("bias_on", [False, True])
+def test_exact_policy_matches_full_scan(head, bias_on):
+    cfg, xq, xs, w_q, bias = head
+    b = bias if bias_on else None
+    ref_lg, ref_tok, _ = _argmax(cfg, xq, xs, w_q, b)
+    n_levels = 2 * cfg.planes - 1
+    for early_exit in (False, True):
+        lg, tok, lv = _argmax(cfg, xq, xs, w_q, b,
+                              policy=LevelPolicy.exact(xq.shape[0]),
+                              early_exit=early_exit)
+        np.testing.assert_array_equal(ref_lg, lg)
+        np.testing.assert_array_equal(ref_tok, tok)
+        # exact rows never early-commit: full depth, by definition
+        assert (lv == n_levels - 1).all()
+
+
+@pytest.mark.parametrize("bias_on", [False, True])
+def test_budget_policy_matches_truncated_levels(head, bias_on):
+    cfg, xq, xs, w_q, bias = head
+    b = bias if bias_on else None
+    n_levels = 2 * cfg.planes - 1
+    m = xq.shape[0]
+    for lvl in range(1, n_levels + 1):
+        _, ref_tok, _ = _argmax(cfg, xq, xs, w_q, b, levels=lvl)
+        pol = LevelPolicy.budget(lvl, m)
+        for early_exit in (False, True):
+            _, tok, lv = _argmax(cfg, xq, xs, w_q, b, policy=pol,
+                                 early_exit=early_exit)
+            # the COMMITTED TOKEN is the budget contract: identical to
+            # a levels=L truncated run, on both emitters
+            np.testing.assert_array_equal(ref_tok, tok, err_msg=f"L={lvl}")
+            # exit levels: rows may margin-commit EARLIER than the
+            # clamp (the clamp is a ceiling, not a pin)
+            assert (lv <= lvl - 1).all()
+
+
+@pytest.mark.parametrize("bias_on", [False, True])
+def test_bounded_policy_matches_legacy_early_exit(head, bias_on):
+    cfg, xq, xs, w_q, bias = head
+    b = bias if bias_on else None
+    ref = _argmax(cfg, xq, xs, w_q, b, early_exit=True)
+    got = _argmax(cfg, xq, xs, w_q, b,
+                  policy=LevelPolicy.bounded(xq.shape[0]), early_exit=True)
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(r, g)
+
+
+def test_mixed_policy_rows_match_solo(head):
+    cfg, xq, xs, w_q, _ = head
+    m = xq.shape[0]
+    classes = [PrecisionClass.exact(), PrecisionClass.budget(3),
+               PrecisionClass.bounded()] * (m // 3)
+    _, tok, lv = _argmax(cfg, xq, xs, w_q, None,
+                         policy=LevelPolicy.from_classes(classes),
+                         early_exit=True)
+    for i, c in enumerate(classes):
+        _, tok_i, lv_i = _argmax(cfg, xq[i:i + 1], xs[i:i + 1], w_q, None,
+                                 policy=LevelPolicy.from_classes([c]),
+                                 early_exit=True)
+        assert tok[i] == tok_i[0], (i, c.label())
+        assert lv[i] == lv_i[0], (i, c.label())
+
+
+# ---------------------------------------------------- decode-attn parity
+@pytest.fixture(scope="module")
+def attn_inputs():
+    rng = np.random.default_rng(0)
+    B, L, H, Kv, dh = 3, 16, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, 1, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, L, Kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, L, Kv, dh)), jnp.float32)
+    kv_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    q_pos = jnp.full((B,), L - 1, jnp.int32)
+    return q, k, v, kv_pos, q_pos
+
+
+def _attn(attn_inputs, **kw):
+    from repro.models.attention import decode_attention
+
+    q, k, v, kv_pos, q_pos = attn_inputs
+    return np.asarray(decode_attention(q, k, v, kv_pos, q_pos,
+                                       l2r=QuantConfig(), **kw))
+
+
+def test_attn_exact_policy_matches_full_depth(attn_inputs):
+    b = attn_inputs[0].shape[0]
+    np.testing.assert_array_equal(
+        _attn(attn_inputs, policy=LevelPolicy.exact(b)),
+        _attn(attn_inputs))
+
+
+def test_attn_budget_policy_matches_truncated_levels(attn_inputs):
+    b = attn_inputs[0].shape[0]
+    n_levels = 2 * QuantConfig().planes - 1
+    for lvl in range(1, n_levels + 1):
+        np.testing.assert_array_equal(
+            _attn(attn_inputs, policy=LevelPolicy.budget(lvl, b)),
+            _attn(attn_inputs, levels=lvl), err_msg=f"L={lvl}")
+
+
+def test_attn_bounded_policy_matches_legacy_early_exit(attn_inputs):
+    b = attn_inputs[0].shape[0]
+    np.testing.assert_array_equal(
+        _attn(attn_inputs, policy=LevelPolicy.bounded(b, tol=1e-4)),
+        _attn(attn_inputs, early_exit=True, exit_tol=1e-4))
+
+
+def test_attn_mixed_budget_rows_snapshot_their_prefix(attn_inputs):
+    """Budget rows in a MIXED batch serve softmax from the snapshotted
+    levels=L score prefix — bit-identical to a solo truncated run even
+    though exact batch-mates force the loop to full depth."""
+    from repro.models.attention import decode_attention
+
+    q, k, v, kv_pos, q_pos = attn_inputs
+    classes = [PrecisionClass.exact(), PrecisionClass.budget(3),
+               PrecisionClass.budget(5)]
+    mix = _attn(attn_inputs, policy=LevelPolicy.from_classes(classes))
+    for i, c in enumerate(classes):
+        solo = np.asarray(decode_attention(
+            q[i:i + 1], k[i:i + 1], v[i:i + 1], kv_pos[i:i + 1],
+            q_pos[i:i + 1], l2r=QuantConfig(),
+            policy=LevelPolicy.from_classes([c])))
+        np.testing.assert_array_equal(mix[i], solo[0],
+                                      err_msg=f"row {i} {c.label()}")
+
+
+def test_attn_policy_requires_l2r(attn_inputs):
+    from repro.models.attention import decode_attention
+
+    q, k, v, kv_pos, q_pos = attn_inputs
+    b = q.shape[0]
+    # policy implies the digit-serial walk: the float path has no levels
+    out_f = decode_attention(q, k, v, kv_pos, q_pos)
+    assert out_f.shape == q.shape  # float path unaffected by the refactor
+    with pytest.raises(ValueError, match="softcap"):
+        decode_attention(q, k, v, kv_pos, q_pos, l2r=QuantConfig(),
+                         softcap=30.0, policy=LevelPolicy.exact(b))
+
+
+# -------------------------------------------------- satellite: tap tracing
+def test_attn_exit_tap_raises_under_jit(attn_inputs):
+    from repro.models.attention import attn_exit_tap, decode_attention
+
+    q, k, v, kv_pos, q_pos = attn_inputs
+
+    def step(q, k, v, kv_pos, q_pos):
+        return decode_attention(q, k, v, kv_pos, q_pos, l2r=QuantConfig(),
+                                early_exit=True)
+
+    with attn_exit_tap() as rec:
+        with pytest.raises(RuntimeError, match="disable_jit"):
+            jax.jit(step)(q, k, v, kv_pos, q_pos)
+    assert rec == []  # nothing silently recorded
+
+    with attn_exit_tap() as rec:
+        with jax.disable_jit():
+            step(q, k, v, kv_pos, q_pos)
+    assert len(rec) == 1 and "exit_levels" in rec[0]
+
+
+def test_attn_no_tap_traces_fine(attn_inputs):
+    q, k, v, kv_pos, q_pos = attn_inputs
+    out = jax.jit(lambda *a: __import__(
+        "repro.models.attention", fromlist=["decode_attention"]
+    ).decode_attention(*a, l2r=QuantConfig(), early_exit=True))(
+        q, k, v, kv_pos, q_pos)
+    assert out.shape == q.shape
+
+
+# ---------------------------------------------- satellite: step-flag guard
+def test_step_factories_reject_contradictory_flags():
+    from repro.configs import get_smoke
+    from repro.serve.engine import (make_bucket_prefill_step,
+                                    make_decode_step, make_prefill_step)
+
+    cfg = dataclasses.replace(get_smoke("smollm-135m"), l2r=QuantConfig())
+    factories = [lambda **k: make_decode_step(cfg, **k),
+                 lambda **k: make_prefill_step(cfg, 16, **k),
+                 lambda **k: make_bucket_prefill_step(cfg, 16, **k)]
+    for fac in factories:
+        with pytest.raises(ValueError) as e:
+            fac(progressive=False, early_exit=True)
+        assert "early_exit" in str(e.value) and "progressive" in str(e.value)
+        with pytest.raises(ValueError) as e:
+            fac(progressive=False, policy=LevelPolicy.exact(2))
+        assert "policy" in str(e.value) and "progressive" in str(e.value)
+
+
+# ------------------------------------------------------- serving parity
+@pytest.fixture(scope="module")
+def smoke_lm():
+    from repro.configs import get_smoke
+    from repro.models.common import materialize
+    from repro.models.transformer import lm_build
+    from repro.serve.engine import prepare_params
+
+    cfg = dataclasses.replace(get_smoke("smollm-135m"), l2r=QuantConfig())
+    desc = lm_build(cfg)
+    params = prepare_params(cfg, materialize(desc, jax.random.PRNGKey(0)),
+                            desc)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+               for n in (5, 7, 6)]
+    return cfg, params, prompts
+
+
+_CLASSES = [PrecisionClass.exact(), PrecisionClass.budget(3),
+            PrecisionClass.bounded()]
+
+
+def _requests(prompts, classes):
+    from repro.serve.batching import Request
+
+    return [Request(uid=i, prompt=p, max_new_tokens=4, precision=c)
+            for i, (p, c) in enumerate(zip(prompts, classes))]
+
+
+def test_mixed_class_batcher_matches_solo(smoke_lm):
+    from repro.serve.batching import ContinuousBatcher
+
+    cfg, params, prompts = smoke_lm
+
+    def run(prompts_, classes_, n_slots):
+        eng = ContinuousBatcher(cfg, params, n_slots=n_slots, max_len=32,
+                                progressive=True, early_exit=True)
+        reqs = _requests(prompts_, classes_)
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_steps=200)
+        return reqs, eng
+
+    mixed, eng = run(prompts, _CLASSES, 3)
+    for i, c in enumerate(_CLASSES):
+        solo, _ = run(prompts[i:i + 1], [c], 1)
+        assert mixed[i].output == solo[0].output, (i, c.label())
+        assert mixed[i].exit_levels == solo[0].exit_levels, (i, c.label())
+        assert mixed[i].prefill_exit_level == solo[0].prefill_exit_level
+
+    st = eng.stats()
+    assert set(st["exit_level_hist_by_class"]) == \
+        {"exact", "budget(3)", "bounded(0)"}
+    # per-class counts recompose the total
+    total = np.zeros(st["n_levels"], np.int64)
+    for h in st["exit_level_hist_by_class"].values():
+        total += np.asarray(h)
+    np.testing.assert_array_equal(total, np.asarray(st["exit_level_hist"]))
+
+
+def test_mixed_class_gateway_matches_batcher(smoke_lm):
+    from repro.serve.batching import ContinuousBatcher
+    from repro.serve.gateway import ServingGateway
+
+    cfg, params, prompts = smoke_lm
+    breqs = _requests(prompts, _CLASSES)
+    eng = ContinuousBatcher(cfg, params, n_slots=3, max_len=32,
+                            progressive=True, early_exit=True)
+    for r in breqs:
+        eng.submit(r)
+    eng.run(max_steps=200)
+
+    greqs = _requests(prompts, _CLASSES)
+    gw = ServingGateway(cfg, params, n_slots=3, max_len=32,
+                        progressive=True, early_exit=True)
+    gw.run(greqs)
+    gw.close()
+    for b, g in zip(breqs, greqs):
+        assert b.output == g.output
+        assert b.exit_levels == g.exit_levels
+        assert b.prefill_exit_level == g.prefill_exit_level
+    bst, gst = eng.stats(), gw.stats(latency=False)
+    assert bst["exit_level_hist_by_class"] == gst["exit_level_hist_by_class"]
+    assert bst["prefill_exit_level_hist_by_class"] == \
+        gst["prefill_exit_level_hist_by_class"]
+
+
+# ------------------------------------------- satellite: stats schema
+def test_progressive_stats_schema_shared_and_normalized(smoke_lm):
+    """The histogram block is ONE schema for both engines (string-label
+    per-class keys, positional level lists), present from construction
+    on — the raw-int vs stringified key drift cannot recur."""
+    from repro.serve.batching import ContinuousBatcher, progressive_stats
+    from repro.serve.gateway import ServingGateway
+
+    cfg, params, _ = smoke_lm
+    eng = ContinuousBatcher(cfg, params, n_slots=2, max_len=32,
+                            progressive=True, early_exit=True)
+    gw = ServingGateway(cfg, params, n_slots=2, max_len=32,
+                        progressive=True, early_exit=True, aot_warmup=False)
+    bst, gst = eng.stats(), gw.stats(latency=False)
+    gw.close()
+    shared = set(progressive_stats(1, np.zeros(1), np.zeros(1), {}, {}))
+    assert shared <= set(bst) and shared <= set(gst)
+    for st in (bst, gst):
+        assert isinstance(st["exit_level_hist"], list)
+        for key, hist in st["exit_level_hist_by_class"].items():
+            assert isinstance(key, str) and isinstance(hist, list)
+        # default class pre-seeded: schema stable before the first token
+        assert list(st["exit_level_hist_by_class"]) == ["bounded(0)"]
+
+
+def test_request_precision_requires_progressive(smoke_lm):
+    from repro.serve.batching import ContinuousBatcher, Request
+
+    cfg, params, prompts = smoke_lm
+    eng = ContinuousBatcher(cfg, params, n_slots=1, max_len=32,
+                            progressive=False)
+    with pytest.raises(ValueError, match="progressive"):
+        eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=2,
+                           precision=PrecisionClass.exact()))
+    with pytest.raises(ValueError, match="progressive"):
+        ContinuousBatcher(cfg, params, n_slots=1, max_len=32,
+                          progressive=False,
+                          default_class=PrecisionClass.exact())
+
+
+# -------------------------------------------------- calibration controller
+def _calibrate():
+    path = os.path.join(_REPO, "tools", "calibrate_levels.py")
+    spec = importlib.util.spec_from_file_location("calibrate_levels", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_fit_budget():
+    cal = _calibrate()
+    assert cal.fit_budget([0, 0, 5, 3], coverage=0.99) == 4
+    assert cal.fit_budget([0, 0, 5, 3], coverage=0.5) == 3
+    assert cal.fit_budget([8, 0, 0, 0], coverage=1.0) == 1
+    assert cal.fit_budget([0, 0, 0, 0]) == 4  # no evidence: full depth
+    with pytest.raises(ValueError):
+        cal.fit_budget([1, 2], coverage=0.0)
+    with pytest.raises(ValueError):
+        cal.fit_budget([])
+
+
+def test_fit_class_budgets_and_cli(tmp_path):
+    cal = _calibrate()
+    stats = {"exit_level_hist_by_class": {
+        "bounded(0)": [0, 4, 4, 0], "exact": [0, 0, 0, 9]}}
+    fits = cal.fit_class_budgets(stats["exit_level_hist_by_class"],
+                                 coverage=0.5)
+    assert fits == {"bounded(0)": 2, "exact": 4}
+    sp = tmp_path / "stats.json"
+    sp.write_text(json.dumps(stats))
+    op = tmp_path / "budgets.json"
+    cal.main([str(sp), "--coverage", "0.5", "-o", str(op)])
+    payload = json.loads(op.read_text())
+    assert payload["budgets"] == {"bounded(0)": 2, "exact": 4}
+    # per-layer form
+    lp = tmp_path / "layers.json"
+    lp.write_text(json.dumps({"layers": {"head": stats}}))
+    cal.main([str(lp), "--coverage", "0.5", "-o", str(op)])
+    assert json.loads(op.read_text())["budgets"]["head"]["exact"] == 4
+
+
+# ------------------------------------------------- sharded consensus walk
+SHARDED_POLICY = r"""
+import sys
+sys.path.insert(0, "src")
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.policy import LevelPolicy, PrecisionClass
+from repro.core.progressive import streaming_argmax
+from repro.core.quant import QuantConfig
+from repro.models.protohead import prototype_head
+from repro.launch.mesh import make_local_mesh
+
+cfg = QuantConfig()
+n_levels = 2 * cfg.planes - 1
+xq, xs, w_q, _ = prototype_head(np.random.default_rng(3), 96, 16, 8,
+                                cfg=cfg)
+m = xq.shape[0]
+classes = [PrecisionClass.exact(), PrecisionClass.budget(3),
+           PrecisionClass.bounded(), PrecisionClass.budget(5)] * (m // 4)
+pol = LevelPolicy.from_classes(classes)
+
+def run(mesh, policy, **kw):
+    out = streaming_argmax(xq, w_q.q, xs, w_q.scale, cfg.n_bits,
+                           cfg.log2_radix, mesh=mesh, policy=policy, **kw)
+    return jax.tree.map(np.asarray, out)
+
+ref = run(None, pol, early_exit=True)
+for shape in [(2, 4), (4, 2), (1, 8), (8, 1)]:
+    mesh = make_local_mesh(*shape)
+    got = run(mesh, pol, early_exit=True)
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(r, g, err_msg=str(shape))
+    # per-class sweeps under the mesh: exact == full, budget(L) ==
+    # levels=L, bounded(0) == legacy early-exit
+    full = run(mesh, None)
+    ex = run(mesh, LevelPolicy.exact(m), early_exit=True)
+    np.testing.assert_array_equal(full[0], ex[0], err_msg=str(shape))
+    np.testing.assert_array_equal(full[1], ex[1], err_msg=str(shape))
+    assert (ex[2] == n_levels - 1).all(), shape
+    for L in (1, 3, n_levels):
+        tr = run(mesh, None, levels=L)
+        bu = run(mesh, LevelPolicy.budget(L, m), early_exit=True)
+        np.testing.assert_array_equal(tr[1], bu[1], err_msg=str(shape))
+        assert (bu[2] <= L - 1).all(), shape
+    leg = run(mesh, None, early_exit=True)
+    bo = run(mesh, LevelPolicy.bounded(m), early_exit=True)
+    for r, g in zip(leg, bo):
+        np.testing.assert_array_equal(r, g, err_msg=str(shape))
+    print("mesh", shape, "ok")
+print("ALL_OK")
+"""
+
+
+@pytest.mark.sharded
+def test_sharded_policy_walk_bit_identical():
+    """Mixed precision classes through the shard_mapped consensus walk
+    on virtual-8-device meshes: tokens, exit levels, and logits all
+    bit-identical to the unmeshed policy walk, and each class's parity
+    sweep (exact/budget/bounded) holds under every mesh shape."""
+    from repro.launch.mesh import virtual_device_env
+
+    out = subprocess.run(
+        [sys.executable, "-c", SHARDED_POLICY], capture_output=True,
+        text=True, cwd=_REPO, env=virtual_device_env(8), timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    assert "ALL_OK" in out.stdout
+
+
+SHARDED_MIXED_SERVING = r"""
+import dataclasses
+import sys
+sys.path.insert(0, "src")
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke
+from repro.core.policy import PrecisionClass
+from repro.core.quant import QuantConfig
+from repro.launch.mesh import make_local_mesh
+from repro.models.common import materialize
+from repro.models.transformer import lm_build
+from repro.serve.batching import ContinuousBatcher, Request
+from repro.serve.engine import prepare_params
+from repro.sharding import ctx
+
+cfg = dataclasses.replace(get_smoke("smollm-135m"), l2r=QuantConfig())
+desc = lm_build(cfg)
+raw = materialize(desc, jax.random.PRNGKey(0))
+rng = np.random.default_rng(7)
+prompts = [rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+           for n in (5, 7, 6)]
+classes = [PrecisionClass.exact(), PrecisionClass.budget(3),
+           PrecisionClass.bounded()]
+
+def serve(mesh):
+    ctx.set_mesh(mesh)
+    params = prepare_params(cfg, raw, desc, mesh=mesh)
+    eng = ContinuousBatcher(cfg, params, n_slots=3, max_len=32,
+                            progressive=True, early_exit=True, mesh=mesh)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=4, precision=c)
+            for i, (p, c) in enumerate(zip(prompts, classes))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=200)
+    ctx.set_mesh(None)
+    return [(r.output, r.exit_levels, r.prefill_exit_level)
+            for r in reqs], eng.stats()
+
+ref, stats_ref = serve(None)
+got, stats_mesh = serve(make_local_mesh(2, 4))
+assert ref == got, (ref, got)
+assert stats_ref == stats_mesh, (stats_ref, stats_mesh)
+print("ALL_OK")
+"""
+
+
+@pytest.mark.sharded
+def test_sharded_mixed_class_serving_bit_identical():
+    """A mixed exact/budget/bounded batch through the ContinuousBatcher
+    on a (2, 4) virtual-8-device mesh: per-request outputs, exit
+    levels, and the full stats() dict bit-identical to the unmeshed
+    engine."""
+    from repro.launch.mesh import virtual_device_env
+
+    out = subprocess.run(
+        [sys.executable, "-c", SHARDED_MIXED_SERVING], capture_output=True,
+        text=True, cwd=_REPO, env=virtual_device_env(8), timeout=1500)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    assert "ALL_OK" in out.stdout

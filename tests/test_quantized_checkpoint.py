@@ -147,3 +147,84 @@ def test_quantize_params_matches_quantize_desc_structure(model):
                      is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes")))
     s2 = jax.tree_util.tree_structure(jax.tree.map(lambda _: 0, qparams))
     assert s1 == s2
+
+
+# ---------------------------------------------------------------- KV caches
+# Round-trips of state trees containing the None-defaulted
+# `KVCache.k_planes`/`k_scale` fields: None fields are EMPTY pytree
+# nodes (no leaves, no .npz keys), so a cache saved without the plane
+# stack — which is byte-identical to what the pre-plane-stack 3-field
+# KVCache wrote — loads straight into the new 5-field structure, and a
+# plane-stacked cache restores its int8 stack and per-slot scales
+# bit-exact.
+
+def _filled_kv_cache(quant=None, dtype=jnp.float32):
+    from repro.core.quant import QuantConfig  # noqa: F401 (doc pointer)
+    from repro.models.attention import init_kv_cache, update_kv_cache
+
+    rng = np.random.default_rng(5)
+    b, L, kv, dh, s = 2, 8, 2, 4, 3
+    cache = init_kv_cache(b, L, kv, dh, dtype=dtype, quant=quant)
+    k_new = jnp.asarray(rng.normal(size=(b, s, kv, dh)), dtype)
+    v_new = jnp.asarray(rng.normal(size=(b, s, kv, dh)), dtype)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return update_kv_cache(cache, k_new, v_new, pos, quant=quant)
+
+
+def _assert_trees_bit_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_kv_cache_none_planes_roundtrip(tmp_path):
+    from repro.checkpoint.manager import load_pytree, save_pytree
+    from repro.models.attention import init_kv_cache
+
+    cache = _filled_kv_cache(quant=None)
+    assert cache.k_planes is None and cache.k_scale is None
+    path = str(tmp_path / "kv.npz")
+    save_pytree(cache, path)
+    template = jax.eval_shape(
+        lambda: init_kv_cache(2, 8, 2, 4, dtype=jnp.float32))
+    restored = load_pytree(template, path)
+    assert restored.k_planes is None and restored.k_scale is None
+    _assert_trees_bit_equal(cache, restored)
+
+
+def test_kv_cache_old_checkpoint_loads_into_new_structure(tmp_path):
+    """A pre-plane-stack checkpoint (written when KVCache had only
+    k/v/positions) carries exactly the keys of a None-field save — so
+    the emulated old .npz loads into the new structure unchanged."""
+    from repro.checkpoint.manager import load_pytree
+    from repro.models.attention import init_kv_cache
+
+    cache = _filled_kv_cache(quant=None)
+    path = str(tmp_path / "old_kv.npz")
+    # the old 3-field writer: attr-keyed leaves, no plane entries
+    np.savez(path, **{".k": np.asarray(cache.k),
+                      ".v": np.asarray(cache.v),
+                      ".positions": np.asarray(cache.positions)})
+    template = jax.eval_shape(
+        lambda: init_kv_cache(2, 8, 2, 4, dtype=jnp.float32))
+    restored = load_pytree(template, path)
+    assert restored.k_planes is None and restored.k_scale is None
+    _assert_trees_bit_equal(cache, restored)
+
+
+def test_kv_cache_plane_stack_roundtrip_bit_exact(tmp_path):
+    from repro.checkpoint.manager import load_pytree, save_pytree
+    from repro.core.quant import QuantConfig
+    from repro.models.attention import init_kv_cache
+
+    quant = QuantConfig()
+    cache = _filled_kv_cache(quant=quant)
+    assert cache.k_planes is not None and cache.k_planes.dtype == jnp.int8
+    path = str(tmp_path / "kvq.npz")
+    save_pytree(cache, path)
+    template = jax.eval_shape(
+        lambda: init_kv_cache(2, 8, 2, 4, dtype=jnp.float32, quant=quant))
+    restored = load_pytree(template, path)
+    _assert_trees_bit_equal(cache, restored)

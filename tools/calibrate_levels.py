@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Offline calibration controller for per-class level budgets.
+
+Serving records, per precision class, a histogram of the MSDF exit
+levels its tokens actually committed at (the
+``exit_level_hist_by_class`` block of ``ContinuousBatcher.stats()`` /
+``ServingGateway.stats()`` — core/policy.py precision classes).  This
+tool closes the loop: it fits the smallest ``budget(L)`` clamp whose
+observed-exit coverage meets a target, per class and — when given a
+``{"layers": {name: stats, ...}}`` dump — per layer.  A fitted budget
+replaces the margin machinery of a ``bounded`` class with a static
+truncation that reproduces ``coverage`` of its commits at serve time;
+the residual ``1 - coverage`` of tokens are the ones a ``budget(L)``
+deployment would decide from a too-short prefix.
+
+Numpy-only on purpose: the controller runs offline against stats dumps,
+never inside a trace.
+
+CLI::
+
+    python tools/calibrate_levels.py stats.json --coverage 0.99 -o budgets.json
+
+``stats.json`` is a single engine ``stats()`` dict or a
+``{"layers": {...}}`` map of them; the output maps class labels (or
+``layer -> label``) to fitted level budgets.
+
+The ``frontier_row`` schema is what ``benchmarks/run.py``'s
+``precision_policy_bench`` suite emits into ``BENCH_progressive.json``:
+one accuracy-vs-levels-vs-latency record per policy operating point.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+__all__ = ["fit_budget", "fit_class_budgets", "fit_layer_budgets",
+           "frontier_row", "main"]
+
+
+def fit_budget(hist, coverage: float = 0.99) -> int:
+    """Smallest level count ``L`` such that at least ``coverage`` of the
+    observed exits commit within the first ``L`` levels.
+
+    ``hist[l]`` counts tokens committed at 0-based level ``l`` — i.e.
+    after ``l + 1`` streamed levels — so the fitted budget is
+    ``argmin_L { cumsum(hist)[L-1] / total >= coverage }``.  An empty
+    histogram fits the full depth (``len(hist)``): no evidence, no
+    truncation.
+    """
+    if not 0.0 < coverage <= 1.0:
+        raise ValueError(f"coverage must be in (0, 1], got {coverage}")
+    h = np.asarray(hist, np.float64)
+    if h.ndim != 1 or h.size == 0:
+        raise ValueError(f"hist must be a non-empty 1-D histogram, "
+                         f"got shape {h.shape}")
+    total = h.sum()
+    if total <= 0:
+        return int(h.size)
+    cum = np.cumsum(h) / total
+    # tolerance absorbs the float division: a bin holding exactly the
+    # coverage mass satisfies it
+    return int(np.searchsorted(cum, coverage - 1e-12) + 1)
+
+
+def fit_class_budgets(hist_by_class: dict, coverage: float = 0.99) -> dict:
+    """Per-class fitted budgets from a ``stats()``
+    ``exit_level_hist_by_class`` map (string class labels -> level
+    histogram lists)."""
+    return {label: fit_budget(h, coverage)
+            for label, h in sorted(hist_by_class.items())}
+
+
+def fit_layer_budgets(stats_by_layer: dict, coverage: float = 0.99) -> dict:
+    """Per-layer x per-class budgets from ``{layer: stats()-dict}``.
+    Layers without per-class histograms fit to an empty map."""
+    return {layer: fit_class_budgets(
+        st.get("exit_level_hist_by_class", {}), coverage)
+        for layer, st in sorted(stats_by_layer.items())}
+
+
+def frontier_row(label: str, levels: int, n_levels: int, agreement: float,
+                 mean_exit_level: float, us: float | None = None,
+                 full_us: float | None = None) -> dict:
+    """One accuracy-vs-levels-vs-latency frontier record (the
+    ``precision_policy_frontier`` rows of ``BENCH_progressive.json``).
+
+    ``agreement`` is the fraction of tokens matching the exact-class
+    run; ``levels`` the operating point's level budget (clamp, or the
+    worst committed level + 1 for margin classes); ``us``/``full_us``
+    attach measured wall-clock when available.
+    """
+    row = {
+        "class": str(label),
+        "levels": int(levels),
+        "n_levels": int(n_levels),
+        "agreement_vs_exact": float(agreement),
+        "mean_exit_level": float(mean_exit_level),
+        "levels_saved_frac": float(1.0 - (mean_exit_level + 1.0) / n_levels),
+    }
+    if us is not None:
+        row["us_per_call"] = float(us)
+        if full_us:
+            row["wallclock_saved_frac"] = float(1.0 - us / full_us)
+    return row
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="fit per-class level budgets from observed "
+                    "exit-level histograms")
+    ap.add_argument("stats_json",
+                    help="engine stats() dump, or {'layers': {...}} map")
+    ap.add_argument("--coverage", type=float, default=0.99,
+                    help="fraction of observed exits the fitted budget "
+                         "must cover (default 0.99)")
+    ap.add_argument("-o", "--out", default=None,
+                    help="output JSON path (default: stdout)")
+    args = ap.parse_args(argv)
+    with open(args.stats_json) as f:
+        stats = json.load(f)
+    if "layers" in stats:
+        budgets = fit_layer_budgets(stats["layers"], args.coverage)
+    else:
+        budgets = fit_class_budgets(
+            stats.get("exit_level_hist_by_class", {}), args.coverage)
+    payload = {"coverage": args.coverage, "budgets": budgets}
+    text = json.dumps(payload, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()
