@@ -33,7 +33,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import SHAPES, get_config  # noqa: E402
 from repro.launch import hlo_analysis as H  # noqa: E402
-from repro.launch.roofline import HBM_BW, roofline_terms  # noqa: E402
+from repro.launch.roofline import roofline_terms  # noqa: E402
 
 _ATTN_SIGS = ("bqkgd,bskd->bkgqs", "bkgqs,bskd->bkgqd")
 

@@ -17,9 +17,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AcceleratorConfig, hw_model, l2r_matmul_int,
-                        network_cycles, peak_gops, simulate_cipu)
-from repro.core.online import tail_bound
+from repro.core import (hw_model, l2r_matmul_int, network_cycles,
+                        peak_gops, simulate_cipu)
 from repro.core.progressive import progressive_matmul
 from repro.kernels.l2r_gemm import l2r_gemm, int_gemm_ref
 

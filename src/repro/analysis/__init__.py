@@ -1,0 +1,32 @@
+"""l2r-lint: static verification of the repo's exactness claims.
+
+Three passes, one registry, one CLI (``tools/l2r_lint.py``):
+
+* :mod:`repro.analysis.exactness` — jaxpr/HLO taint audit proving every
+  claimed-exact walk keeps integer (or guarded-f32) arithmetic between
+  plane extraction and the level accumulator;
+* :mod:`repro.analysis.overflow` — worst-case int32 accumulator
+  certification per digit config, with a trace-time guard in the GEMM
+  dispatch and weight quantizer;
+* :mod:`repro.analysis.compiled` — compiled-artifact audits (decode
+  donation, AOT bucket coverage, retrace budgets);
+* :mod:`repro.analysis.registry` — the claimed-exact entry points every
+  pass sweeps (new schedules declare their contract here).
+"""
+
+from repro.analysis.exactness import (ExactnessContract, ExactnessReport,
+                                      Violation, audit_exactness,
+                                      audit_hlo_text, audit_jaxpr,
+                                      f32_guard_holds)
+from repro.analysis.overflow import (AccumulatorOverflowWarning,
+                                     OverflowCertificate, audit_registry,
+                                     certify, check_or_raise)
+from repro.analysis.registry import ExactEntry, iter_entries, register
+
+__all__ = [
+    "ExactnessContract", "ExactnessReport", "Violation",
+    "audit_exactness", "audit_hlo_text", "audit_jaxpr", "f32_guard_holds",
+    "AccumulatorOverflowWarning", "OverflowCertificate", "audit_registry",
+    "certify", "check_or_raise",
+    "ExactEntry", "iter_entries", "register",
+]

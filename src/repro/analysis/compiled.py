@@ -1,0 +1,178 @@
+"""Compiled-artifact audits: donation, AOT coverage, retrace budgets.
+
+The serving fast path (PR 6/7) rests on three *compiled* facts that the
+python source can only request, not guarantee:
+
+* **decode-state donation** — ``donate_argnums`` is a hint; XLA only
+  aliases buffers when layouts/shardings allow.  The proof is in the
+  executable: the HLO module header's ``input_output_alias`` map must
+  alias the state parameter, and after a real call the donated input
+  buffer must actually be dead (``.is_deleted()``).  Without it, decode
+  silently regresses to the pre-PR 6 copy-per-step behavior.
+* **AOT prefill coverage** — every bucket the gateway can route to must
+  hold a warmed executable, or the first request of that length eats a
+  compile on the serving thread.
+* **retrace budget** — serving a bucketed workload must leave the
+  fallback ``jax.jit`` caches empty (gateway) / at exactly one trace
+  (batcher): any growth means shapes leaked past the buckets.
+
+These audits inspect live engine objects (``ServingGateway`` /
+``ContinuousBatcher``) plus generic helpers usable on any
+``jax.jit``/AOT artifact, so tests can seed a deliberately non-donated
+step and prove the auditor catches it.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+
+__all__ = [
+    "parse_input_output_alias",
+    "donation_report",
+    "probe_donation",
+    "audit_gateway",
+    "audit_batcher",
+]
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}\s*:\s*\((\d+)\s*,\s*\{([\d,\s]*)\}")
+
+
+def _hlo_text(exe) -> str:
+    return exe.as_text() if hasattr(exe, "as_text") else str(exe)
+
+
+def parse_input_output_alias(text: str) -> list[dict]:
+    """Alias entries from an HLO module header.
+
+    Header form: ``input_output_alias={ {0}: (1, {0}, may-alias), ... }``
+    — output tuple index -> (parameter number, parameter tuple index).
+    Tuple-typed parameters produce multi-element index paths, which is
+    exactly the donated pytree-state case.
+    """
+    m = re.search(r"input_output_alias=\{", text)
+    if not m:
+        return []
+    depth, i = 1, m.end()
+    while i < len(text) and depth:
+        depth += {"{": 1, "}": -1}.get(text[i], 0)
+        i += 1
+    blob = text[m.end():i - 1]
+    out = []
+    for om, pnum, pidx in _ALIAS_ENTRY_RE.findall(blob):
+        out.append({
+            "output_index": tuple(int(x) for x in om.split(",") if x.strip()),
+            "param": int(pnum),
+            "param_index": tuple(int(x) for x in pidx.split(",")
+                                 if x.strip()),
+        })
+    return out
+
+
+def donation_report(exe) -> dict:
+    """Which parameters of a compiled executable are donated (aliased
+    into outputs), straight from the artifact."""
+    aliases = parse_input_output_alias(_hlo_text(exe))
+    return {
+        "n_aliases": len(aliases),
+        "aliased_params": sorted({a["param"] for a in aliases}),
+        "aliases": aliases,
+    }
+
+
+def probe_donation(fn, args, donated: tuple[int, ...]) -> dict:
+    """Dynamic donation probe: call ``fn(*args)`` and check the donated
+    inputs' buffers are actually dead afterwards.
+
+    ``args`` must be committed ``jax.Array``s (device_put them first);
+    returns per-argnum liveness — a live donated buffer means XLA
+    declined the alias (or the call path copies).
+    """
+    args = [jax.device_put(a) if not hasattr(a, "is_deleted") else a
+            for a in args]
+    fn(*args)
+    return {i: bool(args[i].is_deleted()) for i in donated}
+
+
+def _violation(entry: str, reason: str, detail: str = "") -> dict:
+    return {"entry": entry, "reason": reason, "detail": detail}
+
+
+def audit_gateway(gw, entry: str = "gateway") -> dict:
+    """AOT coverage + donation + retrace budget of a ServingGateway.
+
+    Call after (or instead of) serving traffic: triggers ``warmup()``
+    itself when the caller has not.  The fallback-jit cache check is
+    only meaningful after requests ran — a clean gateway trivially
+    passes it.
+    """
+    if not gw._prefill_exe or gw._decode_exe is None:
+        gw.warmup()
+    violations = []
+    missing = [b for b in gw.buckets if b not in gw._prefill_exe]
+    if missing:
+        violations.append(_violation(
+            entry, "AOT prefill coverage hole: buckets without warmed "
+                   "executables", f"missing={missing}"))
+    rep = donation_report(gw._decode_exe)
+    # arguments flatten to pytree leaves in the executable, so the
+    # donated state pytree shows up as a block of aliased parameter
+    # numbers (the model params, passed first, are never aliased) — an
+    # empty alias map means XLA declined the donation entirely and
+    # decode copies its state every step.
+    if rep["n_aliases"] == 0:
+        violations.append(_violation(
+            entry, "decode state is NOT donated in the compiled decode "
+                   "executable (empty input_output_alias) — "
+                   "copy-per-step decode",
+            "expected the state leaves aliased into the output"))
+    budget = {
+        "prefill_fallback_traces": int(gw._prefill_jit._cache_size()),
+        "decode_fallback_traces": int(gw._decode_jit._cache_size()),
+    }
+    for key, n in budget.items():
+        if n:
+            violations.append(_violation(
+                entry, f"retrace budget exceeded: {key}={n} (expected 0 "
+                       f"— a shape leaked past the AOT buckets)"))
+    return {
+        "entry": entry, "ok": not violations, "violations": violations,
+        "buckets": list(gw.buckets),
+        "aot_prefill_buckets": sorted(gw._prefill_exe),
+        "decode_donation": rep, **budget,
+    }
+
+
+def audit_batcher(b, entry: str = "batcher", step: bool = True) -> dict:
+    """Donation + retrace budget of a live ContinuousBatcher.
+
+    With ``step=True`` (requires at least one submitted request) the
+    audit runs one decode step and proves the previous slot state was
+    donated — its buffer is dead afterwards.  The retrace budget is one
+    trace total: the decode step sees a constant batch shape.
+    """
+    violations: list[dict] = []
+    donated: dict[str, Any] = {"checked": False}
+    if step:
+        leaves = [x for x in jax.tree.leaves(b.state)
+                  if hasattr(x, "is_deleted")]
+        b.step()
+        dead = [bool(x.is_deleted()) for x in leaves]
+        donated = {"checked": True, "n_leaves": len(dead),
+                   "n_dead": sum(dead)}
+        if not all(dead):
+            violations.append(_violation(
+                entry, "slot state was NOT donated: previous state "
+                       "buffers still live after a decode step "
+                       "(copy-per-step)",
+                f"live={len(dead) - sum(dead)}/{len(dead)} leaves"))
+    traces = int(b._decode._cache_size())
+    if traces > 1:
+        violations.append(_violation(
+            entry, f"retrace budget exceeded: decode traced {traces}x "
+                   f"(expected 1 — constant slot shape)"))
+    return {"entry": entry, "ok": not violations, "violations": violations,
+            "decode_traces": traces, "donation": donated}

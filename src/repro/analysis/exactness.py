@@ -1,0 +1,477 @@
+"""Static exactness audit of the L2R walk jaxprs (and compiled HLO).
+
+The repo's bit-exactness claims (streaming prefix == truncated stacked,
+committed token == full depth, shard consensus == replicated walk) all
+reduce to one structural invariant: **between digit-plane extraction and
+the level accumulator, every op is exact**.  Concretely, on the claimed-
+exact path
+
+* every op is integer-typed (or the guarded f32 BLAS fast path below),
+* every integer ``dot_general`` accumulates in int32
+  (``preferred_element_type=int32`` — never the operand dtype),
+* no float op touches a value derived from the digit planes before the
+  int32 accumulator is dequantized (``convert int32 -> float`` is the
+  legitimate region exit),
+* the only float excursion allowed is the guarded BLAS fast path
+  (core/l2r_gemm.py:_f32_dot_exact): ``convert int8 -> f32`` feeding a
+  ``dot_general`` with ``precision=HIGHEST`` whose products fit the f32
+  mantissa, converted straight back to int32 — bit-exact by the guard.
+
+This module checks the invariant *statically* on the jaxpr, by forward
+taint propagation from integer sources through the whole graph
+(recursing into scan/while/cond/pjit sub-jaxprs), before any tensor
+flows.  It is the static analogue of the parity tests — the class of
+bug it catches is the PR 5 GSPMD float-reassociation regression, where
+a float op silently appeared on a claimed-exact path.
+
+Taint lattice per value: ``None`` (not derived from the digit stream),
+``"int"`` (on the exact integer path), ``"f32exact"`` (inside the
+guarded fast path — only layout ops, the HIGHEST-precision dot, and the
+convert back to int32 are allowed).  Exits: ``convert int32 -> float``
+(dequantization), comparisons (bool decisions), and argmax/argmin
+(index decisions) end the tainted region.
+
+:func:`audit_hlo_text` re-checks the *compiled* artifact with the
+``launch/hlo_analysis.py`` parser: after XLA/GSPMD rewrites, any float
+``dot``/``convolution`` in the module must still be the guarded f32
+fast path (f32 only, and only when the contract's guard holds).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import numpy as np
+from jax.extend import core as jex_core
+
+from repro.core.l2r_gemm import _f32_dot_exact
+from repro.core.online import msdf_level_slices
+
+__all__ = [
+    "ExactnessContract",
+    "Violation",
+    "ExactnessReport",
+    "f32_guard_holds",
+    "audit_jaxpr",
+    "audit_exactness",
+    "audit_hlo_text",
+]
+
+_HIGHEST = jax.lax.Precision.HIGHEST
+
+#: value-preserving / value-selecting ops: the only primitives (besides
+#: the guarded dot and the converts) allowed to touch fast-path f32
+#: values — they move digits around without rounding.
+_LAYOUT_PRIMS = {
+    "slice", "dynamic_slice", "reshape", "transpose", "broadcast_in_dim",
+    "concatenate", "pad", "squeeze", "expand_dims", "rev", "gather",
+    "copy", "stop_gradient", "select_n",
+}
+
+#: index/decision reductions: outputs are positions, not accumulator
+#: values — taint does not flow through them.
+_DECISION_PRIMS = {"argmax", "argmin", "reduce_and", "reduce_or"}
+
+
+def f32_guard_holds(n_bits: int, log2_radix: int, k: int,
+                    levels: int | None = None) -> bool:
+    """Recompute the BLAS fast-path guard for a walk's widest level."""
+    d = n_bits // log2_radix
+    slices = msdf_level_slices(d, levels)
+    if not slices:
+        return True
+    width = max(hi - lo + 1 for _, lo, hi in slices)
+    return _f32_dot_exact(k, width, log2_radix)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactnessContract:
+    """What a claimed-exact entry point promises.
+
+    ``mode="taint"`` is the full forward-taint audit (jnp walks);
+    ``mode="kernel-int"`` is the stricter all-integer scan used for the
+    Pallas kernels, whose bodies must not contain ANY float op (their
+    dataflow never leaves the integer domain).  ``allow_f32`` permits
+    the guarded BLAS fast path — the auditor still independently
+    recomputes the guard from (k, levels) and rejects f32 dots when it
+    does not hold.
+    """
+
+    n_bits: int = 8
+    log2_radix: int = 2
+    k: int = 0
+    levels: int | None = None
+    allow_f32: bool = True
+    mode: str = "taint"  # taint | kernel-int
+
+    @property
+    def f32_ok(self) -> bool:
+        return self.allow_f32 and f32_guard_holds(
+            self.n_bits, self.log2_radix, self.k, self.levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    entry: str
+    primitive: str
+    reason: str
+    detail: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ExactnessReport:
+    entry: str
+    violations: list
+    eqns_checked: int = 0
+    tainted_eqns: int = 0
+    int_dots: int = 0
+    f32_fastpath_dots: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> dict:
+        return {
+            "entry": self.entry, "ok": self.ok,
+            "eqns_checked": self.eqns_checked,
+            "tainted_eqns": self.tainted_eqns,
+            "int_dots": self.int_dots,
+            "f32_fastpath_dots": self.f32_fastpath_dots,
+            "violations": [v.to_json() for v in self.violations],
+        }
+
+
+# ------------------------------------------------------------------ util
+def _aval_dtype(aval):
+    aval = getattr(aval, "inner_aval", aval)  # pallas Ref
+    return getattr(aval, "dtype", None)
+
+
+def _is_float(dt) -> bool:
+    return dt is not None and np.issubdtype(dt, np.floating)
+
+
+def _is_int(dt) -> bool:
+    return dt is not None and np.issubdtype(dt, np.integer)
+
+
+def _rank(t):
+    return {"int": 2, "f32exact": 1, None: 0}[t]
+
+
+def _merge(a, b):
+    return a if _rank(a) >= _rank(b) else b
+
+
+def _sub_closed(params, *keys):
+    for key in keys:
+        sub = params.get(key)
+        if sub is not None:
+            return sub
+    return None
+
+
+# ------------------------------------------------------------ taint walk
+class _Auditor:
+    def __init__(self, contract: ExactnessContract, entry: str):
+        self.c = contract
+        self.entry = entry
+        self.rep = ExactnessReport(entry=entry, violations=[])
+
+    def flag(self, eqn, reason: str):
+        ins = ",".join(str(_aval_dtype(v.aval))
+                       for v in eqn.invars
+                       if not isinstance(v, jex_core.Literal))
+        outs = ",".join(str(_aval_dtype(v.aval)) for v in eqn.outvars)
+        self.rep.violations.append(Violation(
+            entry=self.entry, primitive=eqn.primitive.name, reason=reason,
+            detail=f"in=({ins}) out=({outs})"))
+
+    # ---- main propagation over one (sub)jaxpr
+    def propagate(self, jaxpr, in_taint, record: bool):
+        env: dict = {}
+
+        def read(atom):
+            if isinstance(atom, jex_core.Literal):
+                return None
+            return env.get(atom)
+
+        def write(var, taint):
+            if taint is not None:
+                env[var] = _merge(env.get(var), taint)
+
+        for var, t in zip(jaxpr.invars, in_taint):
+            write(var, t)
+        for eqn in jaxpr.eqns:
+            if record:
+                self.rep.eqns_checked += 1
+            out_t = self.eqn_taint(eqn, [read(a) for a in eqn.invars], record)
+            for var, t in zip(eqn.outvars, out_t):
+                write(var, t)
+        return [read(v) for v in jaxpr.outvars]
+
+    def _fixpoint(self, body_jaxpr, in_taint, carry_lo: int, carry_hi: int,
+                  out_carry_lo: int):
+        """Iterate a loop body's carry taint to a fixed point (taint only
+        grows, so this terminates in <= len(carry) steps)."""
+        cur = list(in_taint)
+        for _ in range(max(2, carry_hi - carry_lo + 1)):
+            out = self.propagate(body_jaxpr, cur, record=False)
+            changed = False
+            for i in range(carry_hi - carry_lo):
+                new = _merge(cur[carry_lo + i], out[out_carry_lo + i])
+                if new != cur[carry_lo + i]:
+                    cur[carry_lo + i] = new
+                    changed = True
+            if not changed:
+                break
+        return cur
+
+    # ---- per-eqn rules
+    def eqn_taint(self, eqn, in_t, record: bool):
+        prim = eqn.primitive.name
+        params = eqn.params
+        n_out = len(eqn.outvars)
+
+        # --- structured control flow / calls: recurse
+        if prim == "scan":
+            nc, ncar = params["num_consts"], params["num_carry"]
+            body = params["jaxpr"].jaxpr
+            cur = self._fixpoint(body, in_t, nc, nc + ncar, 0)
+            out = self.propagate(body, cur, record)
+            # outputs: carries then stacked ys — same taint as body outs
+            return out[:n_out]
+        if prim == "while":
+            cn, bn = params["cond_nconsts"], params["body_nconsts"]
+            cond, body = params["cond_jaxpr"].jaxpr, params["body_jaxpr"].jaxpr
+            carry = in_t[cn + bn:]
+            body_in = in_t[cn:cn + bn] + carry
+            cur = self._fixpoint(body, body_in, bn, bn + len(carry), 0)
+            self.propagate(cond, in_t[:cn] + cur[bn:], record)
+            out = self.propagate(body, cur, record)
+            return out[:n_out]
+        if prim == "cond":
+            branches = params["branches"]
+            outs = [self.propagate(b.jaxpr, in_t[1:], record)
+                    for b in branches]
+            return [dataclasses_reduce_merge(col) for col in zip(*outs)] \
+                if outs else [None] * n_out
+        sub = _sub_closed(params, "jaxpr", "call_jaxpr")
+        if prim == "pallas_call":
+            if record and self.c.mode == "kernel-int":
+                self.kernel_scan(params.get("jaxpr"))
+            # opaque from the taint side: int32 out of tainted ints
+            tainted = any(t is not None for t in in_t)
+            return ["int" if tainted else None] * n_out
+        if sub is not None and prim not in ("custom_vjp_call_jaxpr",):
+            inner = getattr(sub, "jaxpr", sub)
+            n_in = len(inner.invars)
+            # align trailing invars (leading extras are consts/tangents)
+            pad = [None] * max(0, n_in - len(in_t))
+            out = self.propagate(inner, (pad + list(in_t))[-n_in:], record)
+            return out[:n_out]
+
+        # --- leaf eqns
+        any_int = "int" in in_t
+        any_f32x = "f32exact" in in_t
+        if not (any_int or any_f32x):
+            return [None] * n_out
+        if record:
+            self.rep.tainted_eqns += 1
+        out_dts = [_aval_dtype(v.aval) for v in eqn.outvars]
+
+        if prim == "convert_element_type":
+            src = next((v for v in eqn.invars
+                        if not isinstance(v, jex_core.Literal)), None)
+            src_dt = _aval_dtype(src.aval) if src is not None else None
+            dst = out_dts[0]
+            if any_int:
+                if _is_int(dst) or dst == np.bool_:
+                    return ["int"]
+                if _is_float(dst):
+                    if _is_int(src_dt) and np.dtype(src_dt).itemsize >= 4:
+                        return [None]  # int32 accumulator dequantized: exit
+                    if self.c.f32_ok and np.dtype(dst) == np.float32:
+                        return ["f32exact"]
+                    if record:
+                        self.flag(eqn, "digit-stream int converted to float "
+                                       "outside the guarded f32 fast path")
+                    return [None]
+                return [None]
+            # f32exact source
+            if _is_int(dst):
+                return ["int"]  # fast-path accumulator back to int32
+            if dst is not None and np.dtype(dst) == np.float32:
+                return ["f32exact"]
+            if record:
+                self.flag(eqn, f"guarded f32 fast-path value converted to "
+                               f"{dst} (loses exactness)")
+            return [None]
+
+        if prim in ("dot_general", "conv_general_dilated"):
+            if any_int and any_f32x:
+                if record:
+                    self.flag(eqn, "contraction mixes integer-path and "
+                                   "f32-fast-path operands")
+                return [None]
+            if any_int:
+                in_dts = [_aval_dtype(v.aval) for v in eqn.invars]
+                out_dt = out_dts[0]
+                if (all(_is_int(dt) for dt in in_dts)
+                        and out_dt is not None
+                        and np.dtype(out_dt).itemsize >= 4
+                        and _is_int(out_dt)):
+                    if record:
+                        self.rep.int_dots += 1
+                    return ["int"]
+                if record:
+                    self.flag(eqn, "integer contraction without int32 "
+                                   "accumulation (preferred_element_type)")
+                return [None]
+            # f32 fast path dot
+            prec = params.get("precision")
+            precs = prec if isinstance(prec, tuple) else (prec,)
+            if (self.c.f32_ok and all(p == _HIGHEST for p in precs)
+                    and _is_float(out_dts[0])):
+                if record:
+                    self.rep.f32_fastpath_dots += 1
+                return ["f32exact"]
+            if record:
+                self.flag(eqn, "f32 fast-path contraction without "
+                               "precision=HIGHEST (not bit-exact)")
+            return [None]
+
+        if all(dt == np.bool_ for dt in out_dts):
+            return [None] * n_out  # comparisons: decision exit
+        if prim in _DECISION_PRIMS:
+            return [None] * n_out  # index decisions: exit
+
+        if any_f32x and not any_int:
+            if prim in _LAYOUT_PRIMS:
+                return ["f32exact" if _is_float(dt) else None
+                        for dt in out_dts]
+            if record:
+                self.flag(eqn, "inexact op on a guarded f32 fast-path value")
+            return [None] * n_out
+
+        # integer path: int-out ops propagate, float-out ops are the bug
+        out_taint = []
+        for dt in out_dts:
+            if _is_int(dt):
+                out_taint.append("int")
+            elif dt == np.bool_ or dt is None:
+                out_taint.append(None)
+            elif _is_float(dt):
+                if record:
+                    self.flag(eqn, "float-producing op on the claimed-exact "
+                                   "integer path")
+                out_taint.append(None)
+            else:
+                out_taint.append(None)
+        return out_taint
+
+    # ---- kernel-int mode: Pallas kernel bodies must be all-integer
+    def kernel_scan(self, jaxpr):
+        if jaxpr is None:
+            return
+        inner = getattr(jaxpr, "jaxpr", jaxpr)
+        for eqn in inner.eqns:
+            self.rep.eqns_checked += 1
+            prim = eqn.primitive.name
+            for key in ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr"):
+                if key in eqn.params:
+                    self.kernel_scan(eqn.params[key])
+            if "branches" in eqn.params:
+                for b in eqn.params["branches"]:
+                    self.kernel_scan(b)
+            dts = [_aval_dtype(v.aval) for v in eqn.invars
+                   if not isinstance(v, jex_core.Literal)]
+            dts += [_aval_dtype(v.aval) for v in eqn.outvars]
+            if any(_is_float(dt) for dt in dts):
+                self.flag(eqn, "float op inside an all-integer Pallas "
+                               "kernel body")
+            if prim in ("dot_general", "conv_general_dilated"):
+                out_dt = _aval_dtype(eqn.outvars[0].aval)
+                if not (_is_int(out_dt) and np.dtype(out_dt).itemsize >= 4):
+                    self.flag(eqn, "kernel contraction without int32 "
+                                   "accumulation")
+                else:
+                    self.rep.int_dots += 1
+
+
+def dataclasses_reduce_merge(col):
+    out = None
+    for t in col:
+        out = _merge(out, t)
+    return out
+
+
+# ------------------------------------------------------------ public API
+def audit_jaxpr(closed_jaxpr, contract: ExactnessContract,
+                entry: str = "<jaxpr>") -> ExactnessReport:
+    """Audit a traced ClosedJaxpr against an exactness contract.
+
+    Taint seeds: every integer-typed top-level input (the walks consume
+    pre-quantized operands / plane stacks).  Constants are untainted —
+    level indices, shift tables and trip counts are schedule data, not
+    digit values.
+    """
+    aud = _Auditor(contract, entry)
+    jaxpr = closed_jaxpr.jaxpr
+    seeds = ["int" if _is_int(_aval_dtype(v.aval)) else None
+             for v in jaxpr.invars]
+    aud.propagate(jaxpr, seeds, record=True)
+    return aud.rep
+
+
+def audit_exactness(fn: Callable, args: tuple,
+                    contract: ExactnessContract,
+                    entry: str = "") -> ExactnessReport:
+    """Trace ``fn(*args)`` and audit the jaxpr (trace-time only: no
+    tensor data flows)."""
+    name = entry or getattr(fn, "__name__", "<fn>")
+    closed = jax.make_jaxpr(fn)(*args)
+    return audit_jaxpr(closed, contract, entry=name)
+
+
+def audit_hlo_text(text: str, contract: ExactnessContract,
+                   entry: str = "<hlo>") -> list[Violation]:
+    """Post-compilation re-check on optimized HLO text.
+
+    XLA/GSPMD may rewrite the module (the PR 5 o-projection bug class);
+    this asserts the only floating contractions that survive are f32
+    (never bf16/f16 — those silently round) and only when the entry's
+    guarded fast path is actually sound.
+    """
+    from repro.launch import hlo_analysis
+
+    violations = []
+    comps = hlo_analysis.parse_module(text)
+    for comp in comps.values():
+        for iname, rhs in comp["instrs"]:
+            kind = hlo_analysis._op_kind(rhs)
+            if kind not in ("dot", "convolution"):
+                continue
+            dt = rhs.split("[", 1)[0].strip().lstrip("(")
+            if not dt.startswith(("f", "bf")):
+                continue  # integer contraction: exact by construction
+            if dt != "f32":
+                violations.append(Violation(
+                    entry=entry, primitive=kind,
+                    reason=f"compiled module contains a {dt} contraction "
+                           f"(sub-f32 floats round digit products)",
+                    detail=f"{comp['name']}::{iname}"))
+            elif not contract.f32_ok:
+                violations.append(Violation(
+                    entry=entry, primitive=kind,
+                    reason="compiled module contains an f32 contraction "
+                           "but the f32 fast-path guard does not hold "
+                           "for this contract",
+                    detail=f"{comp['name']}::{iname}"))
+    return violations

@@ -1,0 +1,181 @@
+"""Registry of claimed-exact entry points.
+
+The exactness audit (analysis/exactness.py) is only as good as its
+coverage: a new schedule that never declares itself is never linted.
+This registry is the declaration point — every walk that claims the
+repo's bit-exactness contract registers an :class:`ExactEntry` binding
+
+* a **build** thunk returning ``(fn, args)`` — a traceable callable and
+  small representative operands (tracing is shape-driven, so tiny shapes
+  certify the same graph structure the production shapes run),
+* an :class:`~repro.analysis.exactness.ExactnessContract` describing
+  what the entry promises (digit config, contraction length, whether
+  the guarded f32 fast path may appear, taint vs kernel-int mode).
+
+``tools/l2r_lint.py`` runs every registered entry through all passes;
+adding a schedule without registering it here is the reviewable gap the
+ROADMAP's invariant-registry section calls out.
+
+Out-of-tree schedules register with::
+
+    from repro.analysis import registry
+    registry.register(registry.ExactEntry(
+        name="gemm/my-schedule/jnp",
+        build=lambda: (my_walk_fn, (aq, bq)),
+        contract=ExactnessContract(n_bits=8, log2_radix=2, k=K),
+    ))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.analysis.exactness import ExactnessContract
+
+__all__ = ["ExactEntry", "register", "iter_entries", "default_entries"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactEntry:
+    name: str
+    build: Callable[[], tuple]  # () -> (fn, args)
+    contract: ExactnessContract
+    tags: tuple = ()
+    skip: str | None = None  # present-but-unavailable (e.g. needs devices)
+
+
+_EXTRA: list[ExactEntry] = []
+
+
+def register(entry: ExactEntry) -> ExactEntry:
+    """Declare an additional claimed-exact entry point (idempotent per
+    name: re-registration replaces)."""
+    _EXTRA[:] = [e for e in _EXTRA if e.name != entry.name]
+    _EXTRA.append(entry)
+    return entry
+
+
+# ------------------------------------------------------------- builders
+def _gemm_operands(m=4, k=24, n=16, seed=0):
+    rng = np.random.default_rng(seed)
+    aq = rng.integers(-128, 128, (m, k)).astype(np.int8)
+    bq = rng.integers(-128, 128, (k, n)).astype(np.int8)
+    return aq, bq
+
+
+def _attn_operands(b=1, q=2, kv=1, g=2, dh=8, s=5, seed=1):
+    rng = np.random.default_rng(seed)
+    qq = rng.integers(-128, 128, (b, q, kv, g, dh)).astype(np.int8)
+    kq = rng.integers(-128, 128, (b, s, kv, dh)).astype(np.int8)
+    return qq, kq
+
+
+def _head_operands(m=4, k=16, n=12, seed=2):
+    rng = np.random.default_rng(seed)
+    xq = rng.integers(-128, 128, (m, k)).astype(np.int8)
+    wq = rng.integers(-128, 128, (k, n)).astype(np.int8)
+    xs = np.abs(rng.standard_normal((m, 1))).astype(np.float32) + 0.1
+    ws = np.abs(rng.standard_normal((1, n))).astype(np.float32) + 0.1
+    return xq, wq, xs, ws
+
+
+def _gemm_entry(schedule: str, backend: str, early_exit: bool = False,
+                levels: int | None = None, mode: str = "taint"):
+    name = f"gemm/{schedule}{'-while' if early_exit else ''}/{backend}"
+    if levels is not None:
+        name += f"/levels-{levels}"
+
+    def build():
+        from repro.kernels.l2r_gemm.ops import l2r_gemm
+        aq, bq = _gemm_operands()
+        fn = functools.partial(l2r_gemm, n_bits=8, log2_radix=2,
+                               levels=levels, schedule=schedule,
+                               backend=backend, early_exit=early_exit)
+        return fn, (aq, bq)
+
+    return ExactEntry(
+        name=name, build=build, tags=("gemm", backend),
+        contract=ExactnessContract(n_bits=8, log2_radix=2, k=24,
+                                   levels=levels, mode=mode))
+
+
+def _attn_entry(kind: str):
+    def build():
+        from repro.core import l2r_attention as la
+        fn = {"stacked": la.attn_scores_stacked,
+              "streaming-scan": la.attn_scores_streaming_scan,
+              "streaming-while": la.attn_scores_streaming_while}[kind]
+        return fn, _attn_operands()
+
+    return ExactEntry(
+        name=f"attn/{kind}", build=build, tags=("attention",),
+        contract=ExactnessContract(n_bits=8, log2_radix=2, k=8))
+
+
+def _head_entry(early_exit: bool):
+    def build():
+        from repro.core.progressive import streaming_argmax
+        fn = functools.partial(streaming_argmax, early_exit=early_exit)
+        return fn, _head_operands()
+
+    return ExactEntry(
+        name=f"head/streaming-{'while' if early_exit else 'scan'}",
+        build=build, tags=("head",),
+        contract=ExactnessContract(n_bits=8, log2_radix=2, k=16))
+
+
+def _sharded_entry():
+    n_dev = len(jax.devices())
+    skip = None if n_dev >= 2 else \
+        f"sharded consensus walk needs >= 2 devices (have {n_dev})"
+
+    def build():
+        from jax.sharding import Mesh
+
+        from repro.core.progressive import streaming_argmax
+        devs = np.array(jax.devices())
+        model = 4 if devs.size % 4 == 0 and devs.size > 4 else 2
+        mesh = Mesh(devs.reshape(-1, model), ("data", "model"))
+        fn = functools.partial(streaming_argmax, mesh=mesh)
+        return fn, _head_operands(m=devs.size // model * 2, n=model * 3)
+
+    return ExactEntry(
+        name="head/sharded-consensus", build=build,
+        tags=("head", "sharded"), skip=skip,
+        contract=ExactnessContract(n_bits=8, log2_radix=2, k=16))
+
+
+def default_entries() -> list[ExactEntry]:
+    """The in-tree claimed-exact walks: head + attention, all three
+    schedules, across the backends available on this host."""
+    entries = [
+        _gemm_entry("stacked", "jnp"),
+        _gemm_entry("pairs", "jnp"),
+        _gemm_entry("streaming", "jnp"),
+        _gemm_entry("streaming", "jnp", early_exit=True),
+        _gemm_entry("stacked", "jnp", levels=3),
+        _gemm_entry("stacked", "pallas-interpret", mode="kernel-int"),
+        _gemm_entry("streaming", "pallas-interpret", mode="kernel-int"),
+        _attn_entry("stacked"),
+        _attn_entry("streaming-scan"),
+        _attn_entry("streaming-while"),
+        _head_entry(early_exit=False),
+        _head_entry(early_exit=True),
+        _sharded_entry(),
+    ]
+    if jax.default_backend() == "tpu":
+        entries.insert(6, _gemm_entry("stacked", "pallas-tpu",
+                                      mode="kernel-int"))
+    return entries
+
+
+def iter_entries(tags: tuple | None = None) -> list[ExactEntry]:
+    out = default_entries() + list(_EXTRA)
+    if tags:
+        out = [e for e in out if set(tags) & set(e.tags)]
+    return out

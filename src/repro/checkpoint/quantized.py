@@ -15,13 +15,12 @@ be bit-exact keep the full-precision path in manager.py.
 from __future__ import annotations
 
 import os
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.common import Param, _is_param, _quantizable, quantize_params
+from repro.models.common import _is_param, _quantizable, quantize_params
 
 from .manager import load_pytree, save_pytree
 
@@ -44,9 +43,6 @@ def load_quantized(desc_tree, params_template, path: str,
     consumed directly by models/common.py:dense).  dequantize=True folds
     back to the template's float dtypes (for resuming non-serving work).
     """
-    from repro.models.common import quantize_desc
-
-    qdesc = quantize_desc(desc_tree)
     qtemplate = jax.eval_shape(
         lambda: quantize_params(desc_tree, params_template))
     q = load_pytree(qtemplate, path)

@@ -11,7 +11,7 @@ most-significant output digits can be emitted early.
 
 from __future__ import annotations
 
-from typing import Iterator, List, Sequence, Tuple
+from typing import List, Tuple
 
 __all__ = [
     "msdf_pairs",

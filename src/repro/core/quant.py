@@ -454,6 +454,14 @@ def quantize_weights(
         scale = constrain(scale, mesh, *shard)
     planes = None
     if prestack:
+        # trace-time int32 soundness certificate for the cached stack's
+        # contraction (analysis/overflow.py; deferred import — analysis
+        # imports this module).  window_pad adds zero planes only and
+        # never changes the bound.
+        from repro.analysis.overflow import check_or_raise as _certify
+        _certify(cfg.n_bits, cfg.log2_radix,
+                 int(w.shape[0 if plane_axis is None else plane_axis]),
+                 where="quantize_weights")
         planes = PlaneOperands.prepare_rhs(
             q, cfg.n_bits, cfg.log2_radix,
             axis=0 if plane_axis is None else plane_axis,

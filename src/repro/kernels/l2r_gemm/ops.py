@@ -333,6 +333,13 @@ def l2r_gemm(
             "schedule='pairs' (the D²-pass baseline) consumes raw int "
             "operands; pre-stacked PlaneOperands are a stacked/streaming-"
             "schedule format")
+    # trace-time int32 soundness certificate (analysis/overflow.py):
+    # K is static here, so unsound digit configs are caught before any
+    # tensor flows.  Deferred import: analysis pulls in core modules.
+    from repro.analysis.overflow import check_or_raise as _certify
+    k = aq.k if isinstance(aq, PlaneOperands) else (
+        bq.k if isinstance(bq, PlaneOperands) else int(aq.shape[-1]))
+    _certify(n_bits, log2_radix, int(k), levels=levels, where="l2r_gemm")
     return _l2r_gemm_backend(aq, bq, n_bits, log2_radix, levels,
                              bm, bk, bn, schedule, resolved,
                              early_exit)
@@ -505,6 +512,11 @@ def l2r_attn_scores(
             f"would silently drop the flag")
     _check_plane_operand(qq, "lhs", n_bits, log2_radix, other=kq)
     _check_plane_operand(kq, "rhs", n_bits, log2_radix, other=qq)
+    from repro.analysis.overflow import check_or_raise as _certify
+    dh = qq.k if isinstance(qq, PlaneOperands) else (
+        kq.k if isinstance(kq, PlaneOperands) else int(qq.shape[-1]))
+    _certify(n_bits, log2_radix, int(dh), levels=levels,
+             where="l2r_attn_scores")
     return _l2r_attn_scores_backend(qq, kq, n_bits, log2_radix, levels,
                                     schedule, resolved, early_exit)
 
@@ -698,6 +710,10 @@ def l2r_conv2d(
     """
     if w_q is None:
         w_q = quantize_weights(w, cfg)  # (kh,kw,cin,cout), scale (1,1,1,cout)
+    from repro.analysis.overflow import check_or_raise as _certify
+    kh, kw, cin, _ = w_q.q.shape
+    _certify(cfg.n_bits, cfg.log2_radix, int(cin), levels=levels,
+             taps=int(kh * kw), where="l2r_conv2d")
     xq, xs = quantize(x, cfg, axis=0)  # per-image scales (B,1,1,1)
     out = _l2r_conv2d_int(xq, _conv_w_in(w_q, cfg), cfg.n_bits,
                           cfg.log2_radix, levels,

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from repro.configs import SHAPES, all_cells, cell_supported, get_config, input_specs
 from repro.launch.hlo_analysis import analyze
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import model_flops, parse_collectives, roofline_terms
+from repro.launch.roofline import model_flops, roofline_terms
 from repro.models.common import abstract, count_params
 from repro.models.config import ModelConfig
 from repro.models.encdec import encdec_build

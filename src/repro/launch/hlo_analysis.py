@@ -23,7 +23,6 @@ This is a ~±20% traffic model, not a simulator; it is the profile the
 
 from __future__ import annotations
 
-import json
 import re
 from typing import Any
 
@@ -57,11 +56,22 @@ _SKIP_BYTES_OPS = {
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
-_OP_RE = re.compile(r"(?:^|\)\s|\}\s|\]\{[\d,]*\}\s|\]\s)([a-z][a-z0-9\-]*)\(")
+# Layouts may carry tiling / memory-space suffixes on sharded or TPU
+# modules: `{1,0:T(8,128)}`, `{1,0:T(8,128)S(1)}` — one brace group with
+# optional paren groups inside.
+_LAYOUT = r"\{[^{}()]*(?:\([^()]*\)[^{}()]*)*\}"
+
+_OP_RE = re.compile(
+    r"(?:^|\)\s|\}\s|\]" + _LAYOUT + r"\s|\]\s)([a-z][a-z0-9\-]*)\(")
 
 # Newer XLA prints operand types inline: `dot(f32[64,128]{1,0} %Arg_0.1,
-# ...)`.  Operand-matching regexes accept an optional typed prefix.
-_TYPED = r"(?:[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?\s+)?"
+# ...)`.  Operand-matching regexes accept an optional typed prefix —
+# either a single array type (with any layout annotation) or a
+# tuple-typed prefix `(f32[..]{..}, s32[..])` (get-tuple-element /
+# loop-carry operands of sharded modules).
+_TYPED_ONE = r"[a-z0-9]+\[[0-9,]*\](?:" + _LAYOUT + r")?"
+_TYPED = (r"(?:(?:" + _TYPED_ONE + r"|\((?:" + _TYPED_ONE
+          + r"(?:,\s*)?)*\))\s+)?")
 
 
 def _shape_bytes(s: str) -> float:
@@ -92,6 +102,25 @@ def _op_kind(rhs: str) -> str:
     return m.group(1) if m else ""
 
 
+def _result_type(rhs: str) -> str:
+    """Result-type prefix of an instruction right-hand side.
+
+    Array results end at the first space; tuple-typed results are
+    paren-balanced (layouts like ``{1,0:T(8,128)}`` nest parens, so a
+    naive ``index(") ")`` scan mis-splits sharded/tiled modules)."""
+    if not rhs.startswith("("):
+        return rhs.split(" ", 1)[0]
+    depth = 0
+    for i, ch in enumerate(rhs):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rhs[: i + 1]
+    return rhs
+
+
 def parse_module(text: str) -> dict[str, dict]:
     comps: dict[str, dict] = {}
     cur: dict | None = None
@@ -115,7 +144,7 @@ def parse_module(text: str) -> dict[str, dict]:
         if not m:
             continue
         name, rhs = m.group(1), m.group(2)
-        shape_str = rhs.split(" ", 1)[0] if not rhs.startswith("(") else rhs[: rhs.index(") ") + 1]
+        shape_str = _result_type(rhs)
         cur["defs"][name] = shape_str
         cur["rhs"][name] = rhs
         cur["instrs"].append((name, rhs))
@@ -318,8 +347,6 @@ def analyze(text: str) -> dict[str, Any]:
         return memo[name]
 
     flops, bytes_, coll, coll_n = comp_cost(entry["name"])
-    # charge ENTRY arguments (weights/caches read from HBM once)
-    hdr_params = 0.0
     return {
         "flops": flops,
         "bytes": bytes_,

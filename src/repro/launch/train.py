@@ -16,7 +16,6 @@ checkpoint/restart).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -26,7 +26,7 @@ from repro.core.quant import (QuantConfig, QuantizedWeights, quantize,
                               quantize_weights)
 from repro.kernels.l2r_gemm.ops import l2r_conv2d, l2r_matmul_f
 
-from .common import Param, materialize
+from .common import Param
 
 __all__ = ["vgg16_build", "vgg16_apply", "vgg16_classify_progressive",
            "vgg16_quantize_weights", "VGG16_CONV_LAYERS"]

@@ -4,7 +4,6 @@ when the config enables the paper's technique."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from .common import Param, dense
 from .config import ModelConfig

@@ -16,7 +16,6 @@ Three modes:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -236,7 +235,6 @@ def layer_norm_fn(cfg: ModelConfig) -> Callable:
 # --------------------------------------------------------------- LM assembly
 def lm_build(cfg: ModelConfig) -> dict:
     prefix, repeats, unit, suffix = cfg.block_grouping()
-    kinds = cfg.layer_kinds()
     params: dict[str, Any] = {
         "embed": Param((cfg.vocab, cfg.d_model), ("vocab", "embed"), init="embed"),
         "final_norm": Param((cfg.d_model,), ("embed",), init="zeros"),

@@ -23,10 +23,6 @@ import dataclasses
 import time
 from typing import Callable, Iterable
 
-import numpy as np
-
-from repro.checkpoint.manager import CheckpointManager
-
 __all__ = ["StragglerPolicy", "FaultTolerantLoop", "ElasticPlan", "elastic_replan"]
 
 

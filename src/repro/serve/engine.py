@@ -10,19 +10,18 @@ batch and relies on the model-axis sharding to fit.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.policy import LevelPolicy
 from repro.core.progressive import streaming_argmax
 from repro.core.quant import QuantConfig, QuantizedWeights, quantize
 from repro.models.attention import KVCache
 from repro.models.config import ModelConfig
-from repro.models.encdec import (EncDecState, encdec_forward, encode,
+from repro.models.encdec import (EncDecState, encdec_forward,
                                  init_encdec_state)
 from repro.models.transformer import (LMState, init_lm_state, lm_forward,
                                       logits_from_hidden)

@@ -28,7 +28,7 @@ from typing import Any
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.common import Param, partition_specs
+from repro.models.common import Param
 
 __all__ = [
     "PARAM_RULES",

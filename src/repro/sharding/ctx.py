@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import contextlib
 import math
-from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

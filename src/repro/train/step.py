@@ -14,19 +14,18 @@ Memory discipline for the big cells (gemma3-27b @ 1M tokens/step):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.config import ModelConfig
-from repro.models.transformer import lm_build, lm_forward
-from repro.models.encdec import encdec_build, encdec_forward
-from repro.optim.adamw import AdamWConfig, OptState, adamw_init, adamw_update
-from repro.optim.compression import EFState, ef_compress_grads, ef_init
-from repro.sharding.axes import batch_spec, dp_axes, named, param_specs, zero1_specs
+from repro.models.transformer import lm_forward
+from repro.models.encdec import encdec_forward
+from repro.optim.adamw import AdamWConfig, OptState, adamw_update
+from repro.optim.compression import EFState, ef_compress_grads
+from repro.sharding.axes import batch_spec, named, param_specs, zero1_specs
 
 __all__ = ["TrainConfig", "make_loss_fn", "make_train_step", "train_step_shardings",
            "chunked_xent"]

@@ -1,7 +1,5 @@
 """Reproduction checks for the paper's Tables I and II (cycle + hw model)."""
 
-import math
-
 import pytest
 
 from repro.core.cycle_model import (AcceleratorConfig, VGG16_CONV_LAYERS,

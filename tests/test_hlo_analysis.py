@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze
@@ -63,3 +62,48 @@ def test_no_collectives_on_single_device():
     a = jax.ShapeDtypeStruct((8, 8), jnp.float32)
     res = analyze(_hlo(lambda x: x * 2 + 1, a))
     assert res["total_wire_bytes"] == 0
+
+
+# ------------------------------------- sharded/tiled text-level parsing
+# TPU and sharded lowerings annotate types with tiled layouts
+# (``{1,0:T(8,128)S(1)}``) and pass tuples through ``opt-barrier``; the
+# parser must read operand types through both (single-device CPU dumps
+# never exercise these spellings, hence the synthetic module).
+_TILED_HLO = """
+HloModule tiled
+
+%body (p: (f32[8,16]{1,0:T(8,128)S(1)}, s32[])) -> (f32[8,16], s32[]) {
+  %p = (f32[8,16]{1,0:T(8,128)S(1)}, s32[]) parameter(0)
+  %x = f32[8,16]{1,0:T(8,128)} get-tuple-element((f32[8,16]{1,0:T(8,128)S(1)}, s32[]) %p), index=0
+  %i = s32[] get-tuple-element((f32[8,16]{1,0:T(8,128)S(1)}, s32[]) %p), index=1
+  ROOT %t = (f32[8,16]{1,0}, s32[]) tuple(f32[8,16]{1,0:T(8,128)} %x, s32[] %i)
+}
+
+ENTRY %main (a: f32[8,16], b: f32[16,4]) -> f32[8,4] {
+  %a = f32[8,16]{1,0:T(8,128)S(1)} parameter(0)
+  %b = f32[16,4]{1,0:T(8,128)} parameter(1)
+  ROOT %dot.1 = f32[8,4]{1,0:T(8,128)} dot(f32[8,16]{1,0:T(8,128)S(1)} %a, f32[16,4]{1,0:T(8,128)} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_tiled_layout_operands_parse():
+    from repro.launch.hlo_analysis import _op_kind, parse_module
+    comps = parse_module(_TILED_HLO)
+    assert set(comps) == {"body", "main"}
+    kinds = [_op_kind(r) for _, r in comps["main"]["instrs"]]
+    assert "dot" in kinds
+    res = analyze(_TILED_HLO)
+    assert res["flops"] == pytest.approx(2 * 8 * 16 * 4, rel=1e-6)
+
+
+def test_tuple_typed_operands_parse():
+    from repro.launch.hlo_analysis import _op_kind, parse_module
+    comps = parse_module(_TILED_HLO)
+    kinds = [_op_kind(r) for _, r in comps["body"]["instrs"]]
+    assert kinds.count("get-tuple-element") == 2
+    assert "tuple" in kinds
+    # the tuple-typed ROOT result must not confuse the rhs type split
+    (rhs,) = [r for _, r in comps["body"]["instrs"]
+              if _op_kind(r) == "tuple"]
+    assert rhs.startswith("(f32[8,16]")

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core.l2r_gemm import l2r_matmul_int, l2r_matmul_int_stacked
-from repro.kernels.l2r_gemm import (int_gemm_ref, l2r_gemm, l2r_gemm_pallas,
+from repro.kernels.l2r_gemm import (int_gemm_ref, l2r_gemm,
                                     l2r_gemm_pallas_stacked, l2r_gemm_ref,
                                     l2r_gemm_ref_stacked, l2r_matmul_f)
 

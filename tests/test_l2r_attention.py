@@ -16,8 +16,8 @@ from repro.core.l2r_attention import (attn_scores_stacked,
                                       quantize_per_vector)
 from repro.core.quant import PlaneOperands, QuantConfig, stack_planes_rhs
 from repro.models.attention import (attn_exit_tap, decode_attention,
-                                    chunked_attention, init_kv_cache,
-                                    kv_plane_operands, update_kv_cache)
+                                    init_kv_cache, kv_plane_operands,
+                                    update_kv_cache)
 from repro.models.common import materialize
 from repro.models.transformer import lm_build
 from repro.serve.engine import greedy_generate

@@ -10,8 +10,7 @@ from repro.models.config import ModelConfig
 from repro.models.moe import moe_apply, moe_build, moe_capacity
 from repro.models.rglru import (init_rglru_state, rglru_apply, rglru_build,
                                 rglru_decode)
-from repro.models.ssm import (init_ssm_state, ssd_chunked, ssm_apply,
-                              ssm_build, ssm_decode)
+from repro.models.ssm import ssd_chunked, ssm_apply, ssm_build, ssm_decode
 
 
 def test_ssd_chunked_vs_naive_recurrence():

@@ -5,8 +5,6 @@ NaNs, plus one real optimizer step.  The FULL configs are exercised only
 via the dry-run (ShapeDtypeStruct, no allocation).
 """
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -49,7 +47,6 @@ def test_smoke_forward(arch):
         params = materialize(encdec_build(cfg), jax.random.PRNGKey(0))
         hidden, _, aux = encdec_forward(cfg, params, tokens=batch["tokens"],
                                         frames=batch["frames"], mode="train")
-        w_out = params["embed"].T
     else:
         params = materialize(lm_build(cfg), jax.random.PRNGKey(0))
         hidden, _, aux = lm_forward(

@@ -2,10 +2,9 @@
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st  # optional hypothesis
 
-from repro.core.online import msdf_levels, msdf_pairs, online_delay, tail_bound
+from repro.core.online import msdf_pairs, online_delay, tail_bound
 from repro.core.quant import (QuantConfig, dequantize, digit_planes,
                               from_digit_planes, quantize)
 

@@ -416,11 +416,16 @@ def test_fit_budget():
     assert cal.fit_budget([0, 0, 5, 3], coverage=0.99) == 4
     assert cal.fit_budget([0, 0, 5, 3], coverage=0.5) == 3
     assert cal.fit_budget([8, 0, 0, 0], coverage=1.0) == 1
-    assert cal.fit_budget([0, 0, 0, 0]) == 4  # no evidence: full depth
+    # no evidence -> hard error, never a degenerate "calibrated" budget
+    with pytest.raises(ValueError, match="empty exit histogram"):
+        cal.fit_budget([0, 0, 0, 0])
     with pytest.raises(ValueError):
         cal.fit_budget([1, 2], coverage=0.0)
     with pytest.raises(ValueError):
         cal.fit_budget([])
+    # zero-evidence classes are skipped, not fitted
+    assert cal.fit_class_budgets(
+        {"a": [0, 0], "b": [0, 3]}, coverage=0.9) == {"b": 2}
 
 
 def test_fit_class_budgets_and_cli(tmp_path):

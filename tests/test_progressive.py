@@ -3,7 +3,6 @@ analogue of the hardware's MSDF digit stream."""
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st  # optional hypothesis
 
 from repro.core.progressive import earliest_decision_level, progressive_matmul

@@ -34,7 +34,7 @@ def test_quantized_roundtrip_error_bounded(tmp_path, model):
     path = str(tmp_path / "q.npz")
     save_quantized(desc, params, path)
     restored = load_quantized(desc, params, path, dequantize=True)
-    from repro.models.common import Param, _is_param, _quantizable
+    from repro.models.common import _is_param, _quantizable
 
     flat_d = jax.tree.leaves(desc, is_leaf=_is_param)
     for d, a, b in zip(flat_d, jax.tree.leaves(params),

@@ -4,8 +4,8 @@ import numpy as np
 import pytest
 
 from repro.data.pipeline import DataConfig, ShardedPipeline
-from repro.runtime.fault import (ElasticPlan, FaultTolerantLoop,
-                                 StragglerPolicy, elastic_replan)
+from repro.runtime.fault import (FaultTolerantLoop, StragglerPolicy,
+                                 elastic_replan)
 
 
 def make_loop(fault_source, ckpt_every=5, data=None):
@@ -92,7 +92,6 @@ def test_data_replay_after_restore_is_exact():
     dcfg = DataConfig(vocab=64, seq_len=8, global_batch=4)
     p1 = ShardedPipeline(dcfg)
     batches = [next(p1) for _ in range(6)]
-    state = p1.state_dict()
     p2 = ShardedPipeline(dcfg)
     p2.load_state_dict({"step": 3, "shard": 0, "n_shards": 1})
     replay = next(p2)

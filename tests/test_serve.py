@@ -11,8 +11,7 @@ import pytest
 from repro.configs import get_smoke
 from repro.core.quant import QuantConfig
 from repro.models.common import materialize
-from repro.models.transformer import (init_lm_state, lm_build, lm_forward,
-                                      logits_from_hidden)
+from repro.models.transformer import init_lm_state, lm_build, lm_forward
 from repro.serve.engine import greedy_generate, make_decode_step, make_prefill_step
 
 

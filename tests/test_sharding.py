@@ -15,7 +15,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_config
 from repro.launch.mesh import make_local_mesh
 from repro.models.transformer import lm_build
-from repro.sharding.axes import safe_spec, zero1_specs
+from repro.sharding.axes import safe_spec
 
 
 def test_param_specs_divisible_everywhere():

@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st  # optional hypothesis
 
-from repro.core.l2r_gemm import l2r_matmul_int, l2r_matmul_int_stacked
+from repro.core.l2r_gemm import l2r_matmul_int_stacked
 from repro.core.progressive import (ProgressiveResult, earliest_decision_level,
                                     l2r_matmul_int_streaming, level_bounds,
                                     progressive_matmul, streaming_argmax,

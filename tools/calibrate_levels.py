@@ -46,9 +46,10 @@ def fit_budget(hist, coverage: float = 0.99) -> int:
 
     ``hist[l]`` counts tokens committed at 0-based level ``l`` — i.e.
     after ``l + 1`` streamed levels — so the fitted budget is
-    ``argmin_L { cumsum(hist)[L-1] / total >= coverage }``.  An empty
-    histogram fits the full depth (``len(hist)``): no evidence, no
-    truncation.
+    ``argmin_L { cumsum(hist)[L-1] / total >= coverage }``.  An
+    all-zero histogram is an error: with no observed exits there is no
+    evidence to fit, and silently returning the full depth would ship a
+    degenerate "calibrated" budget that no serving data supports.
     """
     if not 0.0 < coverage <= 1.0:
         raise ValueError(f"coverage must be in (0, 1], got {coverage}")
@@ -58,7 +59,11 @@ def fit_budget(hist, coverage: float = 0.99) -> int:
                          f"got shape {h.shape}")
     total = h.sum()
     if total <= 0:
-        return int(h.size)
+        raise ValueError(
+            "empty exit histogram: no observed exits to calibrate from "
+            "(run the engine with a progressive class and re-export "
+            "stats() before fitting — a budget fitted from zero evidence "
+            "would be degenerate)")
     cum = np.cumsum(h) / total
     # tolerance absorbs the float division: a bin holding exactly the
     # coverage mass satisfies it
@@ -68,9 +73,16 @@ def fit_budget(hist, coverage: float = 0.99) -> int:
 def fit_class_budgets(hist_by_class: dict, coverage: float = 0.99) -> dict:
     """Per-class fitted budgets from a ``stats()``
     ``exit_level_hist_by_class`` map (string class labels -> level
-    histogram lists)."""
+    histogram lists).
+
+    Classes whose histogram holds no observed exits are SKIPPED (engines
+    seed zero histograms for classes that never committed a token); a
+    map with no evidence at all fits to an empty dict — the CLI turns
+    that into a hard error.
+    """
     return {label: fit_budget(h, coverage)
-            for label, h in sorted(hist_by_class.items())}
+            for label, h in sorted(hist_by_class.items())
+            if np.asarray(h, np.float64).sum() > 0}
 
 
 def fit_layer_budgets(stats_by_layer: dict, coverage: float = 0.99) -> dict:
@@ -123,9 +135,16 @@ def main(argv=None) -> None:
         stats = json.load(f)
     if "layers" in stats:
         budgets = fit_layer_budgets(stats["layers"], args.coverage)
+        any_fit = any(budgets.values())
     else:
         budgets = fit_class_budgets(
             stats.get("exit_level_hist_by_class", {}), args.coverage)
+        any_fit = bool(budgets)
+    if not any_fit:
+        raise SystemExit(
+            f"{args.stats_json}: every exit histogram is empty or "
+            f"all-zero — nothing to calibrate (serve progressive traffic "
+            f"and re-export stats() first)")
     payload = {"coverage": args.coverage, "budgets": budgets}
     text = json.dumps(payload, indent=2)
     if args.out:

@@ -1,0 +1,162 @@
+#!/usr/bin/env python
+"""l2r-lint: run the static exactness/overflow/compiled audits.
+
+Three passes over the registered claimed-exact entry points
+(repro/analysis/registry.py):
+
+1. **exactness** — trace every registered walk (head + attention, all
+   schedules, the backends available on this host) and taint-audit the
+   jaxpr: integer ops only between plane extraction and the level
+   accumulator, int32 ``dot_general`` accumulation, guarded-f32 fast
+   path only where the guard holds.  ``--hlo`` additionally compiles
+   each entry and re-checks the optimized module (slower; the CI gate
+   runs it).
+2. **overflow** — certify the worst-case int32 accumulator magnitude of
+   every entry's digit config and of every config in the arch registry
+   (``configs/registry.py``).
+3. **compiled** — build the smoke serving stack (gateway + batcher),
+   serve a tiny workload, and audit the artifacts: AOT bucket coverage,
+   actually-donated decode state, retrace budgets.  ``--skip-compiled``
+   skips this (it executes real compiles).
+
+Exit status 1 on any violation; ``--json`` writes the full report.
+
+CI::
+
+    PYTHONPATH=src python tools/l2r_lint.py --hlo --json lint-report.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _pass_exactness(entries, with_hlo: bool) -> list[dict]:
+    import jax
+
+    from repro.analysis import exactness
+
+    rows = []
+    for e in entries:
+        row = {"entry": e.name, "tags": list(e.tags)}
+        if e.skip:
+            row.update(status="skip", reason=e.skip)
+            rows.append(row)
+            continue
+        fn, args = e.build()
+        rep = exactness.audit_exactness(fn, args, e.contract, entry=e.name)
+        row.update(status="ok" if rep.ok else "violation", **rep.to_json())
+        if with_hlo and rep.ok:
+            text = jax.jit(fn).lower(*args).compile().as_text()
+            hlo_v = exactness.audit_hlo_text(text, e.contract, entry=e.name)
+            if hlo_v:
+                row["status"] = "violation"
+                row["violations"] = (row.get("violations", [])
+                                     + [v.to_json() for v in hlo_v])
+                row["ok"] = False
+        rows.append(row)
+    return rows
+
+
+def _pass_overflow(entries) -> list[dict]:
+    from repro.analysis import overflow
+
+    rows = []
+    for e in entries:
+        c = e.contract
+        cert = overflow.certify(c.n_bits, c.log2_radix, c.k, levels=c.levels)
+        rows.append({"entry": e.name, "status": "ok" if cert.sound
+                     else "violation", **cert.to_json()})
+    for row in overflow.audit_registry():
+        rows.append({"entry": f"configs/{row['arch']}/{row['site']}",
+                     "status": "ok" if row["sound"] else "violation", **row})
+    return rows
+
+
+def _pass_compiled() -> list[dict]:
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.analysis import compiled as C
+    from repro.configs import get_smoke
+    from repro.core.quant import QuantConfig
+    from repro.models.common import materialize
+    from repro.models.transformer import lm_build
+    from repro.serve import ContinuousBatcher, Request, ServingGateway
+    from repro.serve.engine import prepare_params
+
+    cfg = dataclasses.replace(get_smoke("smollm-135m"), l2r=QuantConfig())
+    params = prepare_params(cfg, materialize(lm_build(cfg),
+                                             jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(0)
+
+    def requests(n=3, max_new=3):
+        return [Request(uid=i, prompt=rng.integers(
+                    0, cfg.vocab, (int(L),)).astype(np.int32),
+                    max_new_tokens=max_new)
+                for i, L in enumerate(rng.integers(3, 20, n))]
+
+    gw = ServingGateway(cfg, params, n_slots=2, max_len=32)
+    gw.warmup()
+    gw.run(requests())
+    gw_rep = C.audit_gateway(gw)
+
+    b = ContinuousBatcher(cfg, params, n_slots=2, max_len=32)
+    for r in requests(2):
+        b.submit(r)
+    b.step()  # prefill + first decode; the audited step donates its state
+    b_rep = C.audit_batcher(b)
+    for rep in (gw_rep, b_rep):
+        rep["status"] = "ok" if rep["ok"] else "violation"
+    return [gw_rep, b_rep]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="static L2R invariant linter")
+    ap.add_argument("--json", default=None, help="write JSON report here")
+    ap.add_argument("--hlo", action="store_true",
+                    help="also compile each entry and audit the optimized "
+                         "HLO module (slower)")
+    ap.add_argument("--skip-compiled", action="store_true",
+                    help="skip the serving-artifact pass (pass 3)")
+    ap.add_argument("--tags", default=None,
+                    help="comma-separated entry tag filter (e.g. gemm,head)")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import registry
+
+    tags = tuple(args.tags.split(",")) if args.tags else None
+    entries = registry.iter_entries(tags)
+
+    report = {
+        "exactness": _pass_exactness(entries, with_hlo=args.hlo),
+        "overflow": _pass_overflow(entries),
+        "compiled": [] if args.skip_compiled else _pass_compiled(),
+    }
+
+    n_bad = 0
+    for pass_name, rows in report.items():
+        for row in rows:
+            mark = {"ok": "PASS", "skip": "SKIP"}.get(row["status"], "FAIL")
+            if mark == "FAIL":
+                n_bad += 1
+            print(f"[{pass_name:9s}] {mark} {row['entry']}")
+            for v in row.get("violations", []):
+                reason = v["reason"] if isinstance(v, dict) else v
+                print(f"            - {reason}")
+    report["n_violations"] = n_bad
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+    print(f"l2r-lint: {n_bad} violation(s) across "
+          f"{sum(len(r) for r in report.values() if isinstance(r, list))} "
+          f"checks")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
