@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/exactness_audit.py
 
-Four acts using the l2r-lint API (``repro.analysis``, CLI in
+Five acts using the l2r-lint API (``repro.analysis``, CLI in
 ``tools/l2r_lint.py`` — the CI gate runs the same passes over every
 registered entry point plus the compiled serving artifacts):
 
@@ -10,7 +10,11 @@ registered entry point plus the compiled serving artifacts):
 2. catch a seeded violation (an unguarded f32 dot on the exact path),
 3. certify int32 non-overflow for a digit config — and find the exact
    contraction length where the certificate flips to unsound,
-4. sweep every arch in the config registry.
+4. sweep every arch in the config registry,
+5. sharding audit: sweep the shard_mapped entries (on multi-device
+   hosts the full schedule + sync-cost certificate; everywhere, catch
+   a synthetic GSPMD float-reassociation — the PR 5 bug class — from
+   partitioned HLO text alone).
 """
 
 import os
@@ -82,5 +86,46 @@ print(f"   ... {len(rows)} sites total, "
 assert all(r["sound"] for r in rows)
 
 print("=" * 70)
+print("5) Sharding audit: the shard_mapped entries")
+from repro.analysis import audit_partitioned_hlo, audit_sharded_registry
+from repro.analysis.sharding import ShardingContract
+
+# on a 1-device host the sharded entries skip (allow_skips keeps this
+# example runnable anywhere; the CI lint job runs without it under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 so a skip FAILS)
+for row in audit_sharded_registry(allow_skips=True):
+    line = f"   {row['entry']}: {row['status']}"
+    if row["status"] == "ok":
+        cert = row["cost"]
+        k8 = cert["sync_every_k"][-1]
+        line += (f"  collectives/walk={cert['collectives_per_walk']}"
+                 f"  wire={cert['wire_bytes_per_walk']:.0f}B"
+                 f"  sync-every-8 saves {k8['savings_frac']:.0%}")
+    print(line)
+
+# the PR 5 bug class needs no devices to demonstrate: a partitioned
+# module whose float contraction GSPMD split across shards — partial
+# sums joined by a float `add` all-reduce, bit-parity silently gone
+bad_hlo = """\
+HloModule jit_step, num_partitions=8
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  ROOT %ar = f32[8,16]{1,0} all-reduce(f32[8,16]{1,0} %p0), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%sum, metadata={op_name="jit(step)/dot_general"}
+}
+"""
+violations, _ = audit_partitioned_hlo(
+    bad_hlo, ShardingContract(mesh_axes=(("data", 2), ("model", 4))))
+assert violations
+for v in violations:
+    print(f"   CAUGHT {v.primitive}: {v.reason}")
+
+print("=" * 70)
 print("all audits behaved as expected; CLI equivalent:")
-print("    PYTHONPATH=src python tools/l2r_lint.py --hlo")
+print("    PYTHONPATH=src python tools/l2r_lint.py --hlo --sharding")

@@ -10,10 +10,17 @@ Three passes, one registry, one CLI (``tools/l2r_lint.py``):
   dispatch and weight quantizer;
 * :mod:`repro.analysis.compiled` — compiled-artifact audits (decode
   donation, AOT bucket coverage, retrace budgets);
+* :mod:`repro.analysis.sharding` — collective-schedule linting of the
+  shard_mapped entries (declared reductions only, no GSPMD resharding,
+  no float cross-shard sums on plane-derived values, conformant input
+  shardings), with :mod:`repro.analysis.collective_cost`'s static
+  sync-cost certificate per (entry x mesh);
 * :mod:`repro.analysis.registry` — the claimed-exact entry points every
   pass sweeps (new schedules declare their contract here).
 """
 
+from repro.analysis.collective_cost import (CollectiveRecord,
+                                            sync_cost_certificate)
 from repro.analysis.exactness import (ExactnessContract, ExactnessReport,
                                       Violation, audit_exactness,
                                       audit_hlo_text, audit_jaxpr,
@@ -22,6 +29,9 @@ from repro.analysis.overflow import (AccumulatorOverflowWarning,
                                      OverflowCertificate, audit_registry,
                                      certify, check_or_raise)
 from repro.analysis.registry import ExactEntry, iter_entries, register
+from repro.analysis.sharding import (ReductionSpec, ShardingContract,
+                                     ShardingReport, audit_partitioned_hlo,
+                                     audit_sharded_registry, audit_sharding)
 
 __all__ = [
     "ExactnessContract", "ExactnessReport", "Violation",
@@ -29,4 +39,7 @@ __all__ = [
     "AccumulatorOverflowWarning", "OverflowCertificate", "audit_registry",
     "certify", "check_or_raise",
     "ExactEntry", "iter_entries", "register",
+    "ReductionSpec", "ShardingContract", "ShardingReport",
+    "audit_sharding", "audit_partitioned_hlo", "audit_sharded_registry",
+    "CollectiveRecord", "sync_cost_certificate",
 ]

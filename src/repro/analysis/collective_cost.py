@@ -1,0 +1,147 @@
+"""Static sync-cost certification of the sharded level walks.
+
+The sharding auditor (analysis/sharding.py) verifies WHAT the consensus
+walk reduces; this module prices it.  From the verified jaxpr schedule
+— one :class:`CollectiveRecord` per traced cross-shard reduction — and
+the entry's declared mesh, fold launch/roofline.py's ring models into a
+per-(entry x mesh) **sync-cost certificate**:
+
+* static and per-walk collective counts (per-level records fire once
+  per level of the stream, per-walk records once),
+* bytes-on-wire per chip under the ring all-reduce model (pmax / pmin /
+  psum all lower to all-reduce: ``2 (n-1)/n * S`` for a group of n),
+* predicted wall-clock share against the compute/memory roofline terms
+  of the compiled module (optional — needs the HLO text),
+* the projected **sync-every-k** savings table for k in {1,2,4,8}:
+  ROADMAP item 5's relaxation decides locally and reduces every k-th
+  level, so per-walk sync count drops from ``n_levels`` to
+  ``ceil(n_levels / k)`` firings of the per-level schedule.
+
+The certificate is emitted into the ``l2r_lint --json`` report and
+gated in CI by the per-entry collective-count budget on the
+:class:`~repro.analysis.sharding.ShardingContract` — a new collective
+in the schedule is a build failure, not a silent perf regression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.launch.hlo_analysis import ring_wire_bytes
+from repro.launch.roofline import ICI_LINK_BW, LINKS_PER_CHIP, roofline_terms
+
+__all__ = ["CollectiveRecord", "sync_cost_certificate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRecord:
+    """One cross-shard reduction traced from a walk jaxpr.
+
+    ``in_loop`` separates the per-level schedule (inside the level
+    scan/while) from the per-walk finalize reductions; ``tag`` is the
+    ``l2r_coll_*`` named-scope tag (core/policy.py) matching the record
+    back to its declaration site; ``taint`` is the merged exactness
+    taint of the reduced operands (``"int"`` / ``"f32exact"`` /
+    ``"deq"`` / None — see analysis/sharding.py)."""
+
+    prim: str                 # psum | pmax | pmin
+    axes: tuple               # mesh axis names reduced over
+    dtype: str                # numpy dtype name of the reduced value
+    shape: tuple              # per-shard shape of the reduced value
+    in_loop: bool             # inside the level loop (per-level) or not
+    tag: str = ""             # l2r_coll_* named-scope tag ("" = untagged)
+    taint: str | None = None  # merged operand taint at the reduction
+
+    def result_bytes(self) -> float:
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return float(n) * np.dtype(self.dtype).itemsize
+
+    def wire_bytes(self, axis_sizes: dict) -> float:
+        """Ring all-reduce bytes-on-wire per chip for this reduction
+        over its mesh axes (psum/pmax/pmin all lower to all-reduce)."""
+        group = 1
+        for a in self.axes:
+            group *= int(axis_sizes.get(a, 1))
+        return ring_wire_bytes("all-reduce", self.result_bytes(), group)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["axes"] = list(self.axes)
+        d["shape"] = [int(x) for x in self.shape]
+        return d
+
+
+def _bucket(records: list, axis_sizes: dict) -> dict:
+    by: dict[str, int] = {}
+    for r in records:
+        key = f"{r.prim}[{r.tag or 'untagged'}]"
+        by[key] = by.get(key, 0) + 1
+    return {
+        "count": len(records),
+        "wire_bytes": sum(r.wire_bytes(axis_sizes) for r in records),
+        "by_reduction": by,
+    }
+
+
+def sync_cost_certificate(records: list, mesh_axes: tuple, n_levels: int,
+                          *, ks: tuple = (1, 2, 4, 8),
+                          hlo_text: str | None = None) -> dict:
+    """Fold a verified schedule into the per-(entry x mesh) certificate.
+
+    ``records`` are the :class:`CollectiveRecord`s of one walk trace,
+    ``mesh_axes`` the contract's ``(name, size)`` pairs, ``n_levels``
+    the stream depth the per-level schedule fires at.  With
+    ``hlo_text`` the certificate also carries the roofline terms of the
+    compiled module and the collective term's wall-clock share."""
+    axis_sizes = dict(mesh_axes)
+    chips = 1
+    for _, s in mesh_axes:
+        chips *= int(s)
+    per_level = [r for r in records if r.in_loop]
+    per_walk = [r for r in records if not r.in_loop]
+    lvl = _bucket(per_level, axis_sizes)
+    wlk = _bucket(per_walk, axis_sizes)
+
+    def totals(sync_levels: int) -> tuple[int, float, float]:
+        count = sync_levels * lvl["count"] + wlk["count"]
+        wire = sync_levels * lvl["wire_bytes"] + wlk["wire_bytes"]
+        return count, wire, wire / (LINKS_PER_CHIP * ICI_LINK_BW)
+
+    count1, wire1, secs1 = totals(n_levels)
+    cert = {
+        "mesh": {a: int(s) for a, s in mesh_axes},
+        "chips": chips,
+        "n_levels": n_levels,
+        "per_level": lvl,
+        "per_walk": wlk,
+        "collectives_per_walk": count1,
+        "wire_bytes_per_walk": wire1,
+        "collective_s": secs1,
+        "sync_every_k": [],
+    }
+    for k in ks:
+        sync_levels = math.ceil(n_levels / k)
+        count, wire, secs = totals(sync_levels)
+        cert["sync_every_k"].append({
+            "k": int(k), "sync_levels": sync_levels,
+            "collectives": count, "wire_bytes": wire, "collective_s": secs,
+            "savings_frac": 0.0 if secs1 <= 0 else 1.0 - secs / secs1,
+        })
+    if hlo_text is not None:
+        from repro.launch import hlo_analysis
+
+        ana = hlo_analysis.analyze(hlo_text)
+        # wire bytes from the VERIFIED schedule (n_levels x per-level +
+        # finalize), not the raw HLO census — the certificate prices
+        # what the contract declares
+        rf = roofline_terms(ana["flops"], ana["bytes"], wire1, chips)
+        serial = rf.compute_s + rf.memory_s + rf.collective_s
+        cert["roofline"] = rf.asdict()
+        cert["collective_share"] = (
+            rf.collective_s / serial if serial > 0 else 0.0)
+    return cert

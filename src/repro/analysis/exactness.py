@@ -161,8 +161,16 @@ def _is_int(dt) -> bool:
     return dt is not None and np.issubdtype(dt, np.integer)
 
 
+# "deq" is the sharding auditor's provenance extension (see
+# analysis/sharding.py): floats downstream of the legitimate int32
+# dequantization exit.  The base auditor never produces it — its
+# dequant_taint() hook returns None — but the lattice knows the rank so
+# subclass merges stay monotone.
+_RANKS = {"int": 3, "f32exact": 2, "deq": 1, None: 0}
+
+
 def _rank(t):
-    return {"int": 2, "f32exact": 1, None: 0}[t]
+    return _RANKS[t]
 
 
 def _merge(a, b):
@@ -183,6 +191,13 @@ class _Auditor:
         self.c = contract
         self.entry = entry
         self.rep = ExactnessReport(entry=entry, violations=[])
+
+    def dequant_taint(self):
+        """Taint of the legitimate ``convert int32 -> float``
+        dequantization exit.  None here (the region ends); the sharding
+        auditor overrides with ``"deq"`` to keep tracking provenance of
+        decision floats into the cross-shard reductions."""
+        return None
 
     def flag(self, eqn, reason: str):
         ins = ",".join(str(_aval_dtype(v.aval))
@@ -296,7 +311,8 @@ class _Auditor:
                     return ["int"]
                 if _is_float(dst):
                     if _is_int(src_dt) and np.dtype(src_dt).itemsize >= 4:
-                        return [None]  # int32 accumulator dequantized: exit
+                        # int32 accumulator dequantized: exit
+                        return [self.dequant_taint()]
                     if self.c.f32_ok and np.dtype(dst) == np.float32:
                         return ["f32exact"]
                     if record:

@@ -24,6 +24,15 @@ Out-of-tree schedules register with::
         build=lambda: (my_walk_fn, (aq, bq)),
         contract=ExactnessContract(n_bits=8, log2_radix=2, k=K),
     ))
+
+shard_mapped entries additionally declare a
+:class:`~repro.analysis.sharding.ShardingContract` (mesh shape, the
+exact per-level/per-walk reduction schedule with its ``l2r_coll`` tags,
+expected input PartitionSpecs, the static collective-count budget) —
+the sharding pass lowers them under the declared mesh and verifies the
+partitioned module.  ``contract=None`` marks a sharding-only entry (a
+full-model trace whose backbone is not itself a claimed-exact walk);
+the exactness/overflow passes skip those.
 """
 
 from __future__ import annotations
@@ -44,9 +53,10 @@ __all__ = ["ExactEntry", "register", "iter_entries", "default_entries"]
 class ExactEntry:
     name: str
     build: Callable[[], tuple]  # () -> (fn, args)
-    contract: ExactnessContract
+    contract: ExactnessContract | None = None  # None: sharding-only entry
     tags: tuple = ()
     skip: str | None = None  # present-but-unavailable (e.g. needs devices)
+    sharding: object | None = None  # ShardingContract for shard_mapped entries
 
 
 _EXTRA: list[ExactEntry] = []
@@ -129,25 +139,137 @@ def _head_entry(early_exit: bool):
         contract=ExactnessContract(n_bits=8, log2_radix=2, k=16))
 
 
-def _sharded_entry():
+def _mesh_shape() -> tuple[int, int]:
+    """(data, model) of the audit mesh this host can carry — the same
+    adaptive split every sharded builder below uses, so build and
+    contract always agree."""
     n_dev = len(jax.devices())
+    model = 4 if n_dev % 4 == 0 and n_dev > 4 else 2
+    return max(n_dev // model, 1), model
+
+
+def _local_mesh(data: int, model: int):
+    from jax.sharding import Mesh
+    devs = np.array(jax.devices())[:data * model]
+    return Mesh(devs.reshape(data, model), ("data", "model"))
+
+
+def _consensus_contract(data: int, model: int, early_exit: bool):
+    """The consensus walk's declared schedule: per level the decision
+    triple reduced over ``model`` as 4 pmax (abs-max envelope, global
+    top, winner lower bound, runner-up upper bound) + 1 pmin (first-
+    occurrence index tie-break), plus the early-exit consensus psum over
+    the data axes; per walk the finalize fallback's pmax/pmin pair."""
+    from repro.analysis.sharding import ReductionSpec, ShardingContract
+    from repro.core.policy import (COLL_TAG_CONSENSUS, COLL_TAG_MAX,
+                                   COLL_TAG_MIN)
+
+    per_level = (ReductionSpec("pmax", 4, COLL_TAG_MAX),
+                 ReductionSpec("pmin", 1, COLL_TAG_MIN))
+    if early_exit:
+        per_level += (ReductionSpec("psum", 1, COLL_TAG_CONSENSUS),)
+    return ShardingContract(
+        mesh_axes=(("data", data), ("model", model)),
+        per_level=per_level,
+        per_walk=(ReductionSpec("pmax", 1, COLL_TAG_MAX),
+                  ReductionSpec("pmin", 1, COLL_TAG_MIN)),
+        in_specs=(("data", None), (None, "model"),
+                  ("data", None), (None, "model")),
+        n_levels=7)  # n_bits=8, radix-4: 2D-1 levels
+
+
+def _sharded_entry(early_exit: bool = False):
+    n_dev = len(jax.devices())
+    data, model = _mesh_shape()
     skip = None if n_dev >= 2 else \
         f"sharded consensus walk needs >= 2 devices (have {n_dev})"
 
     def build():
-        from jax.sharding import Mesh
-
         from repro.core.progressive import streaming_argmax
-        devs = np.array(jax.devices())
-        model = 4 if devs.size % 4 == 0 and devs.size > 4 else 2
-        mesh = Mesh(devs.reshape(-1, model), ("data", "model"))
-        fn = functools.partial(streaming_argmax, mesh=mesh)
-        return fn, _head_operands(m=devs.size // model * 2, n=model * 3)
+        mesh = _local_mesh(data, model)
+        fn = functools.partial(streaming_argmax, mesh=mesh,
+                               early_exit=early_exit)
+        return fn, _head_operands(m=data * 2, n=model * 3)
 
     return ExactEntry(
-        name="head/sharded-consensus", build=build,
-        tags=("head", "sharded"), skip=skip,
-        contract=ExactnessContract(n_bits=8, log2_radix=2, k=16))
+        name="head/sharded-consensus" + ("-while" if early_exit else ""),
+        build=build, tags=("head", "sharded"), skip=skip,
+        contract=ExactnessContract(n_bits=8, log2_radix=2, k=16),
+        sharding=_consensus_contract(data, model, early_exit))
+
+
+def _sharded_cache_entry():
+    """The sharded quantized-weight cache: building a vocab-sharded
+    plane stack is slicing, never communication — its partitioned
+    module must contain ZERO collectives (budget 0)."""
+    n_dev = len(jax.devices())
+    data, model = _mesh_shape()
+    skip = None if n_dev >= 2 else \
+        f"sharded weight cache needs >= 2 devices (have {n_dev})"
+
+    def build():
+        from repro.core.quant import QuantConfig, quantize_weights
+        mesh = _local_mesh(data, model)
+        cfg = QuantConfig(n_bits=8, log2_radix=2)
+
+        def cache(w):
+            qw = quantize_weights(w, cfg, prestack=True, window_pad=True,
+                                  shard=(None, "model"), mesh=mesh)
+            return qw.q, qw.scale, qw.planes.stack
+
+        rng = np.random.default_rng(3)
+        w = rng.standard_normal((16, model * 3)).astype(np.float32)
+        return cache, (w,)
+
+    from repro.analysis.sharding import ShardingContract
+    return ExactEntry(
+        name="cache/sharded-weights", build=build,
+        tags=("cache", "sharded"), skip=skip,
+        # sharding-only: the quantizer consumes a FLOAT weight (taint
+        # starts at its int8 output), so the forward-taint exactness
+        # pass has nothing to say about this entry
+        contract=None,
+        sharding=ShardingContract(
+            mesh_axes=(("data", data), ("model", model)),
+            in_specs=(None,), n_levels=1, max_collectives=0))
+
+
+def _sharded_decode_entry():
+    """The mesh-placed replicated-backbone decode trace: the full smoke
+    LM decode step with ``backbone_hints=False`` (the PR 5 fix) — its
+    partitioned module must contain EXACTLY the head consensus walk's
+    reductions and nothing else.  Sharding-only (``contract=None``):
+    the backbone is not itself a claimed-exact walk."""
+    n_dev = len(jax.devices())
+    data, model = _mesh_shape()
+    skip = None if n_dev >= 2 else \
+        f"sharded decode trace needs >= 2 devices (have {n_dev})"
+
+    def build():
+        from repro.configs import get_smoke
+        from repro.core.quant import QuantConfig
+        from repro.models.common import materialize
+        from repro.models.transformer import init_lm_state, lm_build
+        from repro.serve.engine import make_decode_step, prepare_params
+
+        cfg = dataclasses.replace(get_smoke("smollm-135m"),
+                                  l2r=QuantConfig())
+        params = prepare_params(cfg, materialize(lm_build(cfg),
+                                                 jax.random.PRNGKey(0)))
+        mesh = _local_mesh(data, model)
+        step = make_decode_step(cfg, progressive=True,
+                                backbone_hints=False, mesh=mesh)
+        batch = data * 2
+        state = init_lm_state(cfg, batch, 32)
+        toks = np.zeros((batch, 1), np.int32)
+        return step, (params, state, toks)
+
+    contract = _consensus_contract(data, model, early_exit=False)
+    contract = dataclasses.replace(contract, in_specs=())  # params pytree
+    return ExactEntry(
+        name="serve/sharded-decode-backbone", build=build,
+        tags=("serve", "sharded"), skip=skip,
+        contract=None, sharding=contract)
 
 
 def default_entries() -> list[ExactEntry]:
@@ -167,6 +289,9 @@ def default_entries() -> list[ExactEntry]:
         _head_entry(early_exit=False),
         _head_entry(early_exit=True),
         _sharded_entry(),
+        _sharded_entry(early_exit=True),
+        _sharded_cache_entry(),
+        _sharded_decode_entry(),
     ]
     if jax.default_backend() == "tpu":
         entries.insert(6, _gemm_entry("stacked", "pallas-tpu",

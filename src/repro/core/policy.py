@@ -66,6 +66,9 @@ __all__ = [
     "MODE_BUDGET",
     "MODE_BOUNDED",
     "NO_CLAMP",
+    "COLL_TAG_MAX",
+    "COLL_TAG_MIN",
+    "COLL_TAG_CONSENSUS",
     "PrecisionClass",
     "LevelPolicy",
     "decision_state",
@@ -73,6 +76,17 @@ __all__ = [
     "head_walk_machinery",
     "attn_walk_machinery",
 ]
+
+# Named-collective tags: every cross-shard reduction the consensus walk
+# declares is traced under one of these ``jax.named_scope``s, so the
+# scope name lands in the jaxpr's ``source_info.name_stack`` AND the
+# compiled HLO's ``metadata op_name``.  The sharding auditor
+# (analysis/sharding.py) matches schedule to source through them — an
+# all-reduce WITHOUT an l2r_coll tag in the partitioned module was
+# inserted by GSPMD, not declared by the walk.
+COLL_TAG_MAX = "l2r_coll_max"
+COLL_TAG_MIN = "l2r_coll_min"
+COLL_TAG_CONSENSUS = "l2r_coll_consensus"
 
 MODE_EXACT = 0
 MODE_BUDGET = 1
@@ -279,10 +293,16 @@ def head_walk_machinery(bounds_f32, xsf, wsr, bias, out_dtype, *,
     col = off + jnp.arange(n_l, dtype=jnp.int32)
 
     def vmax_all(v):  # exact: max commutes/associates exactly
-        return jax.lax.pmax(v, model_ax) if model_ax else v
+        if not model_ax:
+            return v
+        with jax.named_scope(COLL_TAG_MAX):
+            return jax.lax.pmax(v, model_ax)
 
     def vmin_all(v):
-        return jax.lax.pmin(v, model_ax) if model_ax else v
+        if not model_ax:
+            return v
+        with jax.named_scope(COLL_TAG_MIN):
+            return jax.lax.pmin(v, model_ax)
 
     def gmax_first(vals):
         """(global max, FIRST global index achieving it) — exactly
@@ -344,7 +364,8 @@ def head_walk_machinery(bounds_f32, xsf, wsr, bias, out_dtype, *,
         if early_exit:
             n_done = jnp.sum(done.astype(jnp.int32))
             if dp:
-                n_done = jax.lax.psum(n_done, dp)
+                with jax.named_scope(COLL_TAG_CONSENSUS):
+                    n_done = jax.lax.psum(n_done, dp)
             all_done = n_done == m_global
         else:
             all_done = jnp.bool_(False)

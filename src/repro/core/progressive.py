@@ -65,7 +65,13 @@ __all__ = [
     "sharded_walk_axes",
     "decision_state",
     "earliest_decision_level",
+    "CONSENSUS_WALK_SCOPE",
 ]
+
+#: named scope wrapping the shard_mapped consensus walk body — every
+#: collective the walk declares carries this prefix in its HLO
+#: ``metadata op_name`` (see analysis/sharding.py)
+CONSENSUS_WALK_SCOPE = "l2r_consensus_walk"
 
 # int32 decision clip: bounds above this cannot be compared exactly in
 # int32 (2*bound must not overflow), so those levels are marked
@@ -598,22 +604,27 @@ def _streaming_argmax_sharded(xq, wq, xs, ws, n_bits, log2_radix, levels,
             f"policy rows {policy.mode.shape} != batch rows ({m},)"
 
     def walk(bf32, xq_s, wq_s, xsf_s, wsr_s, bias_s, *maybe_policy):
-        policy_s = maybe_policy[0] if maybe_policy else None
-        fold, init, done_fn, finalize = head_walk_machinery(
-            bf32, xsf_s, wsr_s, bias_s if has_bias else None, out_dtype,
-            safety=safety, n_levels=n_levels, m_global=m, n_total=n_total,
-            policy=policy_s, early_exit=early_exit,
-            model_ax=model_ax, dp=dp)
-        if early_exit:
-            acc, carry, _ = streaming_matmul_while(
-                xq_s, wq_s, fold, init, done_fn,
-                n_bits, log2_radix, levels)
-        else:
-            acc, carry, _ = streaming_matmul_scan(
-                xq_s, wq_s, fold, init, n_bits, log2_radix, levels)
-        # dequantize + fallback exactly as the single-device path: the
-        # out_dtype round-trip must match bit for bit
-        return finalize(acc, carry)
+        # the walk-level named scope prefixes every op_name inside the
+        # trace (incl. head_walk_machinery's l2r_coll_* reduction tags),
+        # so the sharding auditor can attribute each collective of the
+        # partitioned module to this declared consensus schedule
+        with jax.named_scope(CONSENSUS_WALK_SCOPE):
+            policy_s = maybe_policy[0] if maybe_policy else None
+            fold, init, done_fn, finalize = head_walk_machinery(
+                bf32, xsf_s, wsr_s, bias_s if has_bias else None, out_dtype,
+                safety=safety, n_levels=n_levels, m_global=m, n_total=n_total,
+                policy=policy_s, early_exit=early_exit,
+                model_ax=model_ax, dp=dp)
+            if early_exit:
+                acc, carry, _ = streaming_matmul_while(
+                    xq_s, wq_s, fold, init, done_fn,
+                    n_bits, log2_radix, levels)
+            else:
+                acc, carry, _ = streaming_matmul_scan(
+                    xq_s, wq_s, fold, init, n_bits, log2_radix, levels)
+            # dequantize + fallback exactly as the single-device path:
+            # the out_dtype round-trip must match bit for bit
+            return finalize(acc, carry)
 
     args = [bounds.f32, xq, wq, xsf, wsr, b_arr]
     in_specs = [P(None), P(dp_spec, None), P(None, model_ax),

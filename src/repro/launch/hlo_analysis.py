@@ -36,8 +36,11 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
 _COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# full multi-group list: replica_groups={{0,1,2,3},{4,5,6,7}}
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\s*\{[^}]*\})*)\}")
+# iota v2 form: replica_groups=[2,4]<=[8]  ->  2 groups of 4
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_NUM_PARTITIONS_RE = re.compile(r"num_partitions=(\d+)")
 
 _SKIP_BYTES_OPS = {
     "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
@@ -219,15 +222,87 @@ def _storage_bytes(opname: str, comp: dict) -> float:
     return own
 
 
-def _collective_wire(rhs: str, kind: str) -> float:
-    size = _shape_bytes(rhs.split(kind)[0])
-    gm = _GROUPS_RE.search(rhs)
-    if gm:
-        n = len([x for x in gm.group(1).split(",") if x.strip() != ""])
-    else:
-        gi = _GROUPS_ITOTA_RE.search(rhs)
-        n = int(gi.group(2)) if gi else 2
-    n = max(n, 2)
+# --------------------------------------------------- collective parsing
+# ONE shared parser for every consumer of collective structure: the
+# roofline accounting (launch/roofline.py:parse_collectives), the
+# trip-count-weighted analyze() below, and the sharding auditor
+# (analysis/sharding.py).  The two bugs this centralizes away:
+#   * async split collectives: an ``all-reduce-start`` result is the
+#     tuple ``(operand, result)`` — summing every array in the tuple
+#     double-counts the transfer (and the paired ``-done`` must not be
+#     counted at all);
+#   * multi-group ``replica_groups={{0,1},{2,3}}`` lists — a
+#     first-group-only regex reads the wrong group size whenever the
+#     mesh has more than one slice of the reduced axis.
+
+def module_num_partitions(text: str) -> int | None:
+    """``num_partitions`` from the HloModule header (SPMD partition
+    count), or None for unpartitioned modules."""
+    m = _NUM_PARTITIONS_RE.search(text)
+    return int(m.group(1)) if m else None
+
+
+def _tuple_elems(rt: str) -> list[str]:
+    """Top-level elements of a tuple result type (commas inside
+    ``[dims]`` / ``{layout}`` / ``(tiling)`` do not split)."""
+    if not rt.startswith("("):
+        return [rt]
+    body, depth, start, out = rt[1:-1], 0, 0, []
+    for i, ch in enumerate(body):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(body[start:i].strip())
+            start = i + 1
+    out.append(body[start:].strip())
+    return [e for e in out if e]
+
+
+def parse_replica_groups(rhs: str,
+                         num_partitions: int | None = None) -> tuple[int, int]:
+    """``(group_size, n_groups)`` of a collective instruction.
+
+    Handles all three forms XLA prints: the full (possibly multi-)group
+    list ``{{0,1,2,3},{4,5,6,7}}``, the iota v2 form ``[2,4]<=[8]``
+    (2 groups of 4), and the empty ``{}`` (one group of every
+    partition — needs ``num_partitions`` from the module header)."""
+    m = _GROUPS_LIST_RE.search(rhs)
+    if m:
+        groups = re.findall(r"\{([^}]*)\}", m.group(1))
+        sizes = [len([x for x in g.split(",") if x.strip()]) for g in groups]
+        return (max(sizes) if sizes else 2, len(sizes))
+    m = _GROUPS_IOTA_RE.search(rhs)
+    if m:
+        return int(m.group(2)), int(m.group(1))
+    if "replica_groups={}" in rhs:
+        return (num_partitions or 2), 1
+    return 2, 1
+
+
+def collective_result_bytes(rhs: str, raw_kind: str) -> float:
+    """Bytes of a collective's RESULT array.  Async ``-start`` forms
+    return ``(operand, result[, context...])`` — take the payload
+    element (max size: equals result for all-reduce/permute, the gathered
+    result for all-gather; min for reduce-scatter, whose result is the
+    operand's 1/n shard), never the tuple sum."""
+    rt = _result_type(rhs)
+    if raw_kind.endswith("-start") and rt.startswith("("):
+        sizes = [_shape_bytes(e) for e in _tuple_elems(rt)]
+        sizes = [s for s in sizes if s > 0]
+        if sizes:
+            return (min(sizes) if raw_kind.startswith("reduce-scatter")
+                    else max(sizes))
+    return _shape_bytes(rt)
+
+
+def ring_wire_bytes(kind: str, size: float, n: int) -> float:
+    """Standard ring-model bytes-on-wire per chip for a collective of
+    result size ``size`` over a group of ``n`` (see launch/roofline.py
+    for the constants); a group of 1 moves nothing."""
+    if n <= 1:
+        return 0.0
     if kind == "all-gather":
         return (n - 1) / n * size
     if kind == "reduce-scatter":
@@ -239,8 +314,70 @@ def _collective_wire(rhs: str, kind: str) -> float:
     return size  # collective-permute
 
 
+def _reduce_region_op(comps: dict, region: str) -> str:
+    """Classify a reduction computation (``to_apply=%region``) by its
+    combiner: 'add' | 'maximum' | 'minimum' | 'and' | 'or' | ... ('' if
+    unresolvable)."""
+    comp = comps.get(region)
+    if comp is None:
+        return ""
+    for _, rhs in comp["instrs"]:
+        kind = _op_kind(rhs)
+        if kind in ("add", "maximum", "minimum", "multiply",
+                    "and", "or", "xor"):
+            return kind
+    return ""
+
+
+def collective_records(text: str) -> list[dict]:
+    """Every collective in the module as a structured record::
+
+        {name, computation, kind, dtype, result_bytes, wire_bytes,
+         group_size, n_groups, reduce_op, op_name, is_async}
+
+    ``kind`` is the base op (``-start`` stripped; the paired ``-done``
+    is skipped so async pairs count once), ``reduce_op`` the resolved
+    ``to_apply`` combiner for reductions, ``op_name`` the source
+    metadata (named-scope tags land here)."""
+    comps = parse_module(text)
+    n_part = module_num_partitions(text)
+    records = []
+    for comp in comps.values():
+        for iname, rhs in comp["instrs"]:
+            raw = _op_kind(rhs)
+            base = raw[:-6] if raw.endswith("-start") else raw
+            if base not in _COLLECTIVES:
+                continue
+            size = collective_result_bytes(rhs, raw)
+            gsz, ngroups = parse_replica_groups(rhs, n_part)
+            reg = re.search(r"to_apply=%?([\w\.\-]+)", rhs)
+            op_name = re.search(r'op_name="([^"]*)"', rhs)
+            dt = re.search(r"([a-z][a-z0-9]*)\[", _result_type(rhs))
+            records.append({
+                "name": iname, "computation": comp["name"], "kind": base,
+                "dtype": dt.group(1) if dt else "",
+                "result_bytes": size,
+                "wire_bytes": ring_wire_bytes(base, size, gsz),
+                "group_size": gsz, "n_groups": ngroups,
+                "reduce_op": (_reduce_region_op(comps, reg.group(1))
+                              if reg else ""),
+                "op_name": op_name.group(1) if op_name else "",
+                "is_async": raw.endswith("-start"),
+            })
+    return records
+
+
+def _collective_wire(rhs: str, raw_kind: str,
+                     num_partitions: int | None = None) -> float:
+    base = raw_kind[:-6] if raw_kind.endswith("-start") else raw_kind
+    size = collective_result_bytes(rhs, raw_kind)
+    n, _ = parse_replica_groups(rhs, num_partitions)
+    return ring_wire_bytes(base, size, n)
+
+
 def analyze(text: str) -> dict[str, Any]:
     comps = parse_module(text)
+    n_part = module_num_partitions(text)
     entry = next((c for c in comps.values() if c["entry"]), None)
     assert entry is not None, "no ENTRY computation found"
 
@@ -279,7 +416,7 @@ def analyze(text: str) -> dict[str, Any]:
             # bytes down — on TPU the gather moves the stored dtype.
             base = kind[:-6] if kind.endswith("-start") else kind
             if base in _COLLECTIVES:
-                wire = _collective_wire(rhs, base)
+                wire = _collective_wire(rhs, kind, n_part)
                 opm = re.search(base + r"(?:-start)?\(" + _TYPED + r"%([\w\.\-]+)",
                                 rhs)
                 if opm:

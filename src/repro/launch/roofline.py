@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import re
 from typing import Any
 
 PEAK_FLOPS = 197e12  # bf16 per chip
@@ -33,67 +32,21 @@ HBM_BW = 819e9  # bytes/s per chip
 ICI_LINK_BW = 50e9  # bytes/s per link
 LINKS_PER_CHIP = 2
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
-}
-
-_COLL_RE = re.compile(
-    r"=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[^\]]*\][^\s]*))\s*"
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(",
-)
-_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
-_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
-_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-
-def _shape_bytes(shape_str: str) -> float:
-    total = 0.0
-    for dt, dims in _SHAPE_RE.findall(shape_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
 def parse_collectives(hlo_text: str) -> dict[str, Any]:
-    """Sum ring-model wire bytes per collective kind from HLO text."""
+    """Sum ring-model wire bytes per collective kind from HLO text.
+
+    Thin fold over :func:`repro.launch.hlo_analysis.collective_records`
+    — the ONE shared collective parser (also behind the sharding
+    auditor's schedule checks), which dedupes async ``-start``/``-done``
+    pairs and reads multi-group ``replica_groups`` lists correctly."""
+    from repro.launch import hlo_analysis
+
     out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
            "all-to-all": 0.0, "collective-permute": 0.0}
     counts = {k: 0 for k in out}
-    for line in hlo_text.splitlines():
-        m = _COLL_RE.search(line)
-        if not m:
-            continue
-        if "-done" in line.split("=")[1][:40]:
-            continue
-        shape_str, kind = m.group(1), m.group(2)
-        size = _shape_bytes(shape_str)
-        gm = _GROUPS_RE.search(line)
-        if gm:
-            n = len([x for x in gm.group(1).split(",") if x.strip() != ""])
-        else:
-            gi = _GROUPS_ITOTA_RE.search(line)
-            n = int(gi.group(2)) if gi else 2
-        n = max(n, 2)
-        if kind == "all-gather":
-            wire = (n - 1) / n * size
-        elif kind == "reduce-scatter":
-            wire = (n - 1) * size
-        elif kind == "all-reduce":
-            wire = 2 * (n - 1) / n * size
-        elif kind == "all-to-all":
-            wire = (n - 1) / n * size
-        else:  # collective-permute
-            wire = size
-        out[kind] += wire
-        counts[kind] += 1
+    for rec in hlo_analysis.collective_records(hlo_text):
+        out[rec["kind"]] += rec["wire_bytes"]
+        counts[rec["kind"]] += 1
     return {"wire_bytes": out, "counts": counts,
             "total_wire_bytes": sum(out.values())}
 

@@ -107,3 +107,81 @@ def test_tuple_typed_operands_parse():
     (rhs,) = [r for _, r in comps["body"]["instrs"]
               if _op_kind(r) == "tuple"]
     assert rhs.startswith("(f32[8,16]")
+
+
+# -------------------------------------------- shared collective parser
+_COLL_HLO = """\
+HloModule jit_sharded, num_partitions=8
+
+%region_add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %ar-start = (f32[8,16]{1,0}, f32[8,16]{1,0}) all-reduce-start(f32[8,16]{1,0} %p0), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%region_add, metadata={op_name="jit(f)/psum"}
+  %ar-done = f32[8,16]{1,0} all-reduce-done((f32[8,16]{1,0}, f32[8,16]{1,0}) %ar-start)
+  ROOT %ag.1 = f32[8,128]{1,0} all-gather(f32[8,16]{1,0} %ar-done), replica_groups={}, dimensions={1}
+}
+"""
+
+
+def test_collective_records_async_pair_counted_once():
+    """An all-reduce-start/-done pair is ONE transfer: the -start's
+    tuple result must not be summed (double-count) and the -done must
+    not be recorded at all."""
+    from repro.launch.hlo_analysis import collective_records
+    recs = collective_records(_COLL_HLO)
+    assert [r["kind"] for r in recs] == ["all-reduce", "all-gather"]
+    ar = recs[0]
+    assert ar["is_async"] and ar["result_bytes"] == 8 * 16 * 4
+    assert ar["group_size"] == 4 and ar["n_groups"] == 2
+    assert ar["reduce_op"] == "add" and ar["op_name"] == "jit(f)/psum"
+    # ring all-reduce over a group of 4: 2*(4-1)/4 * 512 bytes
+    assert ar["wire_bytes"] == pytest.approx(2 * 3 / 4 * 512)
+    # empty replica_groups={} = one group of every partition (8)
+    ag = recs[1]
+    assert ag["group_size"] == 8 and ag["n_groups"] == 1
+    assert ag["wire_bytes"] == pytest.approx(7 / 8 * 8 * 128 * 4)
+
+
+def test_parse_replica_groups_forms():
+    from repro.launch.hlo_analysis import parse_replica_groups
+    # full multi-group list: size must come from the groups, not the
+    # first group only
+    assert parse_replica_groups(
+        "all-reduce(...), replica_groups={{0,1},{2,3},{4,5},{6,7}}") \
+        == (2, 4)
+    assert parse_replica_groups(
+        "all-gather(...), replica_groups={{0,1,2,3,4,5,6,7}}") == (8, 1)
+    # iota v2 form [n_groups,size]<=[total]
+    assert parse_replica_groups(
+        "all-reduce(...), replica_groups=[2,4]<=[8]") == (4, 2)
+    # empty = all partitions together (module header count)
+    assert parse_replica_groups(
+        "all-reduce(...), replica_groups={}", num_partitions=8) == (8, 1)
+    assert parse_replica_groups(
+        "all-reduce(...), replica_groups={}") == (2, 1)
+
+
+def test_roofline_parse_collectives_uses_shared_parser():
+    """roofline.parse_collectives is a fold over the same records —
+    async dedupe and multi-group sizes included."""
+    from repro.launch.roofline import parse_collectives
+    out = parse_collectives(_COLL_HLO)
+    assert out["counts"]["all-reduce"] == 1
+    assert out["counts"]["all-gather"] == 1
+    assert out["wire_bytes"]["all-reduce"] == pytest.approx(2 * 3 / 4 * 512)
+    assert out["total_wire_bytes"] == pytest.approx(
+        2 * 3 / 4 * 512 + 7 / 8 * 4096)
+
+
+def test_analyze_counts_async_collective_once():
+    """analyze()'s wire-byte accounting goes through the same -start
+    handling: the tuple-typed -start result is one payload."""
+    res = analyze(_COLL_HLO)
+    assert res["collective_counts"]["all-reduce"] == 1
+    assert res["collective_wire_bytes"]["all-reduce"] == \
+        pytest.approx(2 * 3 / 4 * 512)

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
-"""l2r-lint: run the static exactness/overflow/compiled audits.
+"""l2r-lint: run the static exactness/overflow/compiled/sharding audits.
 
-Three passes over the registered claimed-exact entry points
+Four passes over the registered claimed-exact entry points
 (repro/analysis/registry.py):
 
 1. **exactness** — trace every registered walk (head + attention, all
@@ -18,12 +18,26 @@ Three passes over the registered claimed-exact entry points
    serve a tiny workload, and audit the artifacts: AOT bucket coverage,
    actually-donated decode state, retrace budgets.  ``--skip-compiled``
    skips this (it executes real compiles).
+4. **sharding** (``--sharding``) — lower every entry carrying a
+   ShardingContract under its declared mesh and verify the partitioned
+   module: exactly the declared per-level reductions, zero GSPMD
+   resharding, no float cross-shard sums on plane-derived values,
+   conformant input shardings — plus the per-entry sync-cost
+   certificate (collective count, bytes-on-wire, sync-every-k table)
+   in the JSON report.  Needs >= 2 devices; CI runs the whole lint
+   under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+A registered entry that must be SKIPPED (e.g. the sharded walks on a
+single-device host) is a FAILURE, not a silent pass — ``--allow-skips``
+downgrades that for local runs on small hosts.
 
 Exit status 1 on any violation; ``--json`` writes the full report.
 
 CI::
 
-    PYTHONPATH=src python tools/l2r_lint.py --hlo --json lint-report.json
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python tools/l2r_lint.py --hlo --sharding \\
+        --json lint-report.json
 """
 
 from __future__ import annotations
@@ -33,17 +47,34 @@ import json
 import sys
 
 
-def _pass_exactness(entries, with_hlo: bool) -> list[dict]:
+def _skip_row(e, allow_skips: bool) -> dict:
+    """A skipped registered entry: loud failure unless --allow-skips —
+    'skipped' must never read as 'passed' in CI."""
+    row = {"entry": e.name, "tags": list(e.tags)}
+    if allow_skips:
+        row.update(status="skip", reason=e.skip)
+    else:
+        row.update(status="violation", ok=False, violations=[{
+            "entry": e.name, "primitive": "registry",
+            "reason": f"registered entry SKIPPED ({e.skip}) — run under "
+                      "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                      "or pass --allow-skips",
+            "detail": ""}])
+    return row
+
+
+def _pass_exactness(entries, with_hlo: bool, allow_skips: bool) -> list[dict]:
     import jax
 
     from repro.analysis import exactness
 
     rows = []
     for e in entries:
+        if e.contract is None:
+            continue  # sharding-only entry: audited by --sharding
         row = {"entry": e.name, "tags": list(e.tags)}
         if e.skip:
-            row.update(status="skip", reason=e.skip)
-            rows.append(row)
+            rows.append(_skip_row(e, allow_skips))
             continue
         fn, args = e.build()
         rep = exactness.audit_exactness(fn, args, e.contract, entry=e.name)
@@ -66,6 +97,8 @@ def _pass_overflow(entries) -> list[dict]:
     rows = []
     for e in entries:
         c = e.contract
+        if c is None:
+            continue  # sharding-only entry: no digit config to certify
         cert = overflow.certify(c.n_bits, c.log2_radix, c.k, levels=c.levels)
         rows.append({"entry": e.name, "status": "ok" if cert.sound
                      else "violation", **cert.to_json()})
@@ -115,12 +148,26 @@ def _pass_compiled() -> list[dict]:
     return [gw_rep, b_rep]
 
 
+def _pass_sharding(entries, allow_skips: bool) -> list[dict]:
+    from repro.analysis import sharding
+
+    return sharding.audit_sharded_registry(entries, allow_skips=allow_skips)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description="static L2R invariant linter")
     ap.add_argument("--json", default=None, help="write JSON report here")
     ap.add_argument("--hlo", action="store_true",
                     help="also compile each entry and audit the optimized "
                          "HLO module (slower)")
+    ap.add_argument("--sharding", action="store_true",
+                    help="audit every entry carrying a ShardingContract: "
+                         "collective schedule, reduction taint, layout "
+                         "conformance + sync-cost certificates (needs >= 2 "
+                         "devices; CI uses the virtual-8-device XLA flag)")
+    ap.add_argument("--allow-skips", action="store_true",
+                    help="report skipped registry entries as SKIP instead "
+                         "of FAIL (local runs on small hosts)")
     ap.add_argument("--skip-compiled", action="store_true",
                     help="skip the serving-artifact pass (pass 3)")
     ap.add_argument("--tags", default=None,
@@ -133,10 +180,13 @@ def main(argv=None) -> int:
     entries = registry.iter_entries(tags)
 
     report = {
-        "exactness": _pass_exactness(entries, with_hlo=args.hlo),
+        "exactness": _pass_exactness(entries, with_hlo=args.hlo,
+                                     allow_skips=args.allow_skips),
         "overflow": _pass_overflow(entries),
         "compiled": [] if args.skip_compiled else _pass_compiled(),
     }
+    if args.sharding:
+        report["sharding"] = _pass_sharding(entries, args.allow_skips)
 
     n_bad = 0
     for pass_name, rows in report.items():
